@@ -1,0 +1,47 @@
+"""Hillclimb helper: re-measure ONE (arch, shape, mesh) cell and print
+its roofline row — the measure step of the hypothesis→change→measure
+loop in EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb gemma3-4b train_4k single
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+
+def measure(arch: str, shape: str, mesh: str, out_dir: str):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", out_dir, "--force"]
+    r = subprocess.run(cmd, capture_output=True, text=True)
+    if r.returncode != 0:
+        print(r.stdout[-2000:], r.stderr[-2000:])
+        raise SystemExit(1)
+    rec = json.load(open(os.path.join(
+        out_dir, f"{arch}__{shape}__{mesh}.json")))
+    from benchmarks.roofline import analyze_cell
+    row = analyze_cell(rec)
+    ma = rec["memory_analysis"]
+    print(f"cell: {arch} {shape} {mesh}")
+    print(f"  compile_s={rec['compile_s']}  args={ma['argument_bytes']/2**30:.2f}GiB "
+          f"temp={ma['temp_bytes']/2**30:.2f}GiB")
+    print(f"  t_compute={row['t_compute_s']:.4f}s t_memory={row['t_memory_s']:.4f}s "
+          f"t_collective={row['t_collective_s']:.4f}s")
+    print(f"  dominant={row['dominant']} roofline_fraction={row['roofline_fraction']:.3f} "
+          f"useful_ratio={row['useful_ratio']:.3f}")
+    print(f"  coll_bytes/chip={row['coll_bytes']/2**30:.2f}GiB "
+          f"hbm_bytes/chip={row['bytes_total']/2**30:.2f}GiB")
+    return row
+
+
+def main():
+    arch, shape, mesh = sys.argv[1:4]
+    out_dir = sys.argv[4] if len(sys.argv) > 4 else os.path.join(
+        os.path.dirname(__file__), "..", "experiments", "dryrun")
+    measure(arch, shape, mesh, os.path.normpath(out_dir))
+
+
+if __name__ == "__main__":
+    main()

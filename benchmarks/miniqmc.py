@@ -1,0 +1,166 @@
+"""miniQMC analogue (paper Table 1): the two hot target regions of
+miniqmc_sync_move, written against the runtime facade and bound to the
+original (native) and new (portable) runtimes.
+
+  evaluate_vgh       — cubic B-spline value+gradient+hessian evaluation
+                       (fused 3-output kernel over walkers x splines)
+  evaluateDetRatios  — Sherman-Morrison determinant ratios: batched
+                       A_inv^T phi dot products per walker
+
+Reported per region and runtime: total Time (ms), #Calls, Avg/Min/Max
+(us) — the Table 1 columns.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from benchmarks.native_rt import NativeRuntime, native_kernel_call
+from repro.core import context as ctx
+from repro.core.runtime import kernel_call, runtime
+
+N_CALLS = 40
+N_WALKERS = 32
+N_SPLINES = 256
+N_ORB = 128
+
+
+def _call(rt, *a, **kw):
+    if isinstance(rt, NativeRuntime):
+        kw.pop("dimension_semantics", None)
+        return native_kernel_call(*a, **kw)
+    return kernel_call(*a, rt=rt, **kw)
+
+
+# ------------------------------------------------------- evaluate_vgh ----
+
+def evaluate_vgh(rt, coefs4, t):
+    """coefs4: (NW, 4, NS) gathered spline taps; t: (NW, 1) in [0,1).
+
+    Returns (value, grad, hess): each (NW, NS).  Cubic B-spline basis and
+    its two derivatives, fused in one kernel (the miniQMC hot region)."""
+    nw, _, ns = coefs4.shape
+
+    def kern(c_ref, t_ref, v_ref, g_ref, h_ref):
+        tt = t_ref[...]                                    # (bw, 1)
+        t2 = tt * tt
+        t3 = t2 * tt
+        w0 = (1 - 3 * tt + 3 * t2 - t3) / 6
+        w1 = (4 - 6 * t2 + 3 * t3) / 6
+        w2 = (1 + 3 * tt + 3 * t2 - 3 * t3) / 6
+        w3 = t3 / 6
+        d0 = (-1 + 2 * tt - t2) / 2
+        d1 = (-4 * tt + 3 * t2) / 2 * jnp.ones_like(tt)
+        d2 = (1 + 2 * tt - 3 * t2) / 2
+        d3 = t2 / 2
+        h0 = 1 - tt
+        h1 = 3 * tt - 2
+        h2 = 1 - 3 * tt
+        h3 = tt
+        c = c_ref[...]                                     # (bw, 4, ns)
+        v_ref[...] = (w0 * c[:, 0] + w1 * c[:, 1]
+                      + w2 * c[:, 2] + w3 * c[:, 3])
+        g_ref[...] = (d0 * c[:, 0] + d1 * c[:, 1]
+                      + d2 * c[:, 2] + d3 * c[:, 3])
+        h_ref[...] = (h0 * c[:, 0] + h1 * c[:, 1]
+                      + h2 * c[:, 2] + h3 * c[:, 3])
+
+    block = min(8, nw)
+    out_sh = jax.ShapeDtypeStruct((nw, ns), jnp.float32)
+    return _call(
+        rt, kern,
+        out_shape=(out_sh, out_sh, out_sh),
+        grid=(nw // block,),
+        in_specs=[pl.BlockSpec((block, 4, ns), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((block, 1), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((block, ns), lambda i: (i, 0)),) * 3,
+        name="evaluate_vgh",
+    )(coefs4, t)
+
+
+# -------------------------------------------------- evaluateDetRatios ----
+
+def evaluate_det_ratios(rt, a_inv, phi):
+    """a_inv: (NW, N, N); phi: (NW, N) -> ratios (NW, N)."""
+    nw, n, _ = a_inv.shape
+
+    def kern(a_ref, p_ref, r_ref):
+        r_ref[...] = jax.lax.dot_general(
+            p_ref[...], a_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (1, N)
+
+    return _call(
+        rt, kern,
+        out_shape=jax.ShapeDtypeStruct((nw, n), jnp.float32),
+        grid=(nw,),
+        in_specs=[pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        name="evaluateDetRatios",
+    )(a_inv, phi)
+
+
+# ----------------------------------------------------------------- bench
+
+def _region_stats(f, args, n_calls: int) -> Dict[str, float]:
+    jax.block_until_ready(f(*args))           # compile
+    jax.block_until_ready(f(*args))           # warm
+    ts = []
+    for _ in range(n_calls):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        ts.append(time.perf_counter() - t0)
+    us = np.asarray(ts) * 1e6
+    return {"time_ms": float(us.sum() / 1e3), "calls": n_calls,
+            "avg_us": float(us.mean()), "min_us": float(us.min()),
+            "max_us": float(us.max())}
+
+
+def run(n_calls: int = N_CALLS):
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 4)
+    coefs4 = jax.random.normal(ks[0], (N_WALKERS, 4, N_SPLINES), jnp.float32)
+    t = jax.random.uniform(ks[1], (N_WALKERS, 1), jnp.float32)
+    a_inv = jax.random.normal(ks[2], (N_WALKERS, N_ORB, N_ORB), jnp.float32)
+    phi = jax.random.normal(ks[3], (N_WALKERS, N_ORB), jnp.float32)
+
+    regions = {
+        "evaluate_vgh": (evaluate_vgh, (coefs4, t)),
+        "evaluateDetRatios": (evaluate_det_ratios, (a_inv, phi)),
+    }
+    rows = []
+    native = NativeRuntime()
+    with ctx.target("interpret"):
+        portable = runtime()
+        for name, (fn, args) in regions.items():
+            f_n = jax.jit(functools.partial(fn, native))
+            f_p = jax.jit(functools.partial(fn, portable))
+            out_n = jax.block_until_ready(f_n(*args))
+            out_p = jax.block_until_ready(f_p(*args))
+            diff = max(float(jnp.abs(a - b).max())
+                       for a, b in zip(jax.tree_util.tree_leaves(out_n),
+                                       jax.tree_util.tree_leaves(out_p)))
+            for version, f in (("Original", f_n), ("New", f_p)):
+                stats = _region_stats(f, args, n_calls)
+                rows.append({"region": name, "version": version,
+                             "max_abs_diff": diff, **stats})
+    return rows
+
+
+def main():
+    rows = run()
+    print("region,version,time_ms,calls,avg_us,min_us,max_us,max_abs_diff")
+    for r in rows:
+        print(f"{r['region']},{r['version']},{r['time_ms']:.2f},{r['calls']},"
+              f"{r['avg_us']:.1f},{r['min_us']:.1f},{r['max_us']:.1f},"
+              f"{r['max_abs_diff']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""The PRE-paper runtime: hard-coded target intrinsics, no portability
+layer.  This is the 'CUDA-implemented device runtime' of the comparison
+in Fig. 2 / §4.1 — same entry-point surface as repro.core.DeviceRuntime,
+but every member is a direct Pallas/Mosaic binding with zero variant
+dispatch.  Benchmarks written against the runtime facade can be bound to
+either implementation; the paper's claim is that the portable one costs
+nothing, which benchmarks/spec_accel.py and benchmarks/parity.py verify.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+class NativeRuntime:
+    """Direct-intrinsic runtime (interpret-mode bindings on CPU)."""
+
+    interpret = True
+    use_pallas = True
+    arch = "native"
+
+    # -- team hierarchy ---------------------------------------------------
+    team_id = staticmethod(pl.program_id)
+    num_teams = staticmethod(pl.num_programs)
+
+    # -- memory -----------------------------------------------------------
+    @staticmethod
+    def alloc_shared(shape, dtype=jnp.float32):
+        return pltpu.VMEM(tuple(shape), dtype)
+
+    @staticmethod
+    def alloc_scalar(shape=(1,), dtype=jnp.int32):
+        return pltpu.SMEM(tuple(shape), dtype)
+
+    # -- intrinsics ---------------------------------------------------------
+    @staticmethod
+    def iota(shape, dim, dtype=jnp.int32):
+        return jax.lax.broadcasted_iota(dtype, shape, dim)
+
+    @staticmethod
+    def approx_reciprocal(x):
+        return 1.0 / x            # interpret binding (pl.reciprocal on TPU)
+
+    @staticmethod
+    def reduce_sum(x, axis=None, keepdims=False):
+        return jnp.sum(x, axis=axis, keepdims=keepdims)
+
+    @staticmethod
+    def reduce_max(x, axis=None, keepdims=False):
+        return jnp.max(x, axis=axis, keepdims=keepdims)
+
+    when = staticmethod(pl.when)
+
+    # -- atomics (sequential-grid RMW, hard-coded) --------------------------
+    @staticmethod
+    def atomic_add(ref, value, idx=None):
+        if idx is None:
+            v = ref[...]
+            ref[...] = v + value
+        else:
+            v = ref[idx]
+            ref[idx] = v + value
+        return v
+
+    @staticmethod
+    def atomic_max(ref, value, idx=None):
+        if idx is None:
+            v = ref[...]
+            ref[...] = jnp.maximum(v, value)
+        else:
+            v = ref[idx]
+            ref[idx] = jnp.maximum(v, value)
+        return v
+
+    def compiler_params(self, dimension_semantics=None,
+                        vmem_limit_bytes=None):
+        return None
+
+
+def native_kernel_call(kernel_fn, *, out_shape, grid=None, in_specs=None,
+                       out_specs=None, scratch_shapes=(), name=None,
+                       **kwargs):
+    """pallas_call with interpret hard-coded (the pre-paper launch glue)."""
+    return pl.pallas_call(
+        kernel_fn, out_shape=out_shape, grid=grid,
+        in_specs=in_specs if in_specs is not None else [],
+        out_specs=out_specs, scratch_shapes=list(scratch_shapes),
+        interpret=True, name=name, **kwargs)

@@ -1,0 +1,421 @@
+"""Roofline analysis per (arch x shape x mesh) from the dry-run records.
+
+Hardware model (v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(per the brief).  Three terms, each in seconds per step:
+
+  compute    = FLOPs_total / (chips * 197e12)
+  memory     = HBM_bytes_per_chip / 819e9          (max over chips ~ mean)
+  collective = collective_bytes_per_chip / 45e9    (ICI, 0.9 link eff.)
+
+FLOPs/bytes sources.  XLA:CPU's cost_analysis counts every while-loop
+body ONCE (verified: a 1024-step pallas grid reports 139 flops), so the
+compiled numbers cannot be used directly for scan-over-layers models.
+We therefore compute FLOPs and HBM bytes ANALYTICALLY from the config
+(formulas below — standard 6ND accounting plus attention, MoE capacity
+overhead, remat re-compute, optimizer traffic), and reconstruct
+collective bytes from the compiled HLO: the dry-run records collective
+result-bytes per computation with while-body attribution; bodies are
+scaled by their known static trip counts (microbatches x segment reps).
+cost_analysis numbers are carried along as a cross-check column.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), per the brief; the
+"useful ratio" column is MODEL_FLOPS / FLOPs_total and exposes remat +
+capacity-padding + attention overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 45e9                # bytes/s / chip (0.9 x 50 GB/s link)
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+# ----------------------------------------------------- param accounting --
+
+def param_counts(cfg: ModelConfig) -> Dict[str, float]:
+    """Analytic parameter counts: total, active-per-token, expert-only."""
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    kinds = cfg.layer_kinds()
+    total = active = expert_only = 0.0
+
+    def attn_params():
+        if cfg.mla:
+            m = cfg.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            return (d * cfg.num_heads * qk
+                    + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * cfg.num_heads *
+                    (m.qk_nope_head_dim + m.v_head_dim)
+                    + cfg.num_heads * m.v_head_dim * d)
+        hd = cfg.head_dim
+        return d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+
+    def mlp_params(width):
+        n_mat = 2 if cfg.mlp_activation == "gelu_ungated" else 3
+        return n_mat * d * width
+
+    def mamba_params():
+        s = cfg.ssm
+        di = s.expand * d
+        dtr = s.dt_rank or -(-d // 16)
+        return (d * 2 * di + di * s.d_conv + di * (dtr + 2 * s.d_state)
+                + dtr * di + di * s.d_state + di * d)
+
+    def mlstm_params():
+        x = cfg.xlstm
+        di = int(d * x.proj_factor_mlstm)
+        return 2 * d * di + di * x.conv_width + 3 * di * di \
+            + 2 * di * x.num_heads + di * d
+
+    def slstm_params():
+        x = cfg.xlstm
+        dh = d // x.num_heads
+        return (d * x.conv_width + 4 * d * d + 4 * x.num_heads * dh * dh
+                + 3 * d * int(d * x.proj_factor_slstm))
+
+    for i, kind in enumerate(kinds):
+        if kind in ("global", "local"):
+            total += attn_params()
+            active += attn_params()
+        elif kind == "mamba":
+            total += mamba_params()
+            active += mamba_params()
+        elif kind == "mlstm":
+            total += mlstm_params()
+            active += mlstm_params()
+        elif kind == "slstm":
+            total += slstm_params()
+            active += slstm_params()
+        if kind in ("mlstm", "slstm"):
+            continue
+        if cfg.is_moe_layer(i):
+            m = cfg.moe
+            expert = 3 * d * m.d_ff_expert
+            total += m.num_experts * expert
+            expert_only += m.num_experts * expert
+            active += m.top_k * expert
+            if m.num_shared_experts:
+                total += mlp_params(m.d_ff_shared)
+                active += mlp_params(m.d_ff_shared)
+            if m.dense_residual:
+                total += mlp_params(ff)
+                active += mlp_params(ff)
+        elif ff > 0:
+            w = ff if not (cfg.moe and cfg.moe_layers == "all_but_first"
+                           and i == 0) else ff
+            total += mlp_params(w)
+            active += mlp_params(w)
+
+    # encoder (whisper): bidirectional attn + ungated mlp
+    for _ in range(cfg.encoder_layers):
+        total += attn_params() + mlp_params(ff)
+        active += attn_params() + mlp_params(ff)
+
+    emb = (v * d) * 2                      # embed + unembed
+    total += emb
+    active += 2 * d + v * d               # one row read + full unembed
+    return {"total": total, "active": active, "expert": expert_only}
+
+
+# --------------------------------------------------------- flops model --
+
+def _attn_flops_token(cfg: ModelConfig, ctx_len: int) -> float:
+    """Per-token attention matmul FLOPs (QK^T + PV), summed over layers."""
+    fl = 0.0
+    for kind in cfg.layer_kinds():
+        if kind == "global":
+            eff = ctx_len
+        elif kind == "local":
+            eff = min(ctx_len, cfg.window or ctx_len)
+        else:
+            continue
+        hd = (cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+              + cfg.mla.v_head_dim) / 2 if cfg.mla else cfg.head_dim
+        fl += 4 * cfg.num_heads * hd * eff
+    return fl
+
+
+def analytic_flops(cfg: ModelConfig, shape: ShapeConfig,
+                   counts: Dict[str, float],
+                   remat_policy: str = "full") -> Dict[str, float]:
+    b, s = shape.global_batch, shape.seq_len
+    tokens = b * s
+    n_act = counts["active"]
+    if shape.kind == "train":
+        # fwd 2ND + bwd 4ND (+ re-forward 2ND under full remat) = 8/6 ND
+        factor = 8 if remat_policy == "full" else 6
+        matmul = factor * n_act * tokens
+        # causal attention: mean context s/2; fwd+bwd(+remat) = 4x/3x fwd
+        attn = (factor / 2) * tokens * _attn_flops_token(cfg, s // 2)
+        moe_pad = _moe_padding_flops(cfg, tokens) * (factor / 2)
+        return {"matmul": matmul, "attention": attn, "moe_pad": moe_pad,
+                "total": matmul + attn + moe_pad,
+                "model_flops": 6 * n_act * tokens}
+    if shape.kind == "prefill":
+        matmul = 2 * n_act * tokens
+        attn = tokens * _attn_flops_token(cfg, s // 2)
+        moe_pad = _moe_padding_flops(cfg, tokens)
+        return {"matmul": matmul, "attention": attn, "moe_pad": moe_pad,
+                "total": matmul + attn + moe_pad,
+                "model_flops": 2 * n_act * tokens}
+    # decode: one token per sequence
+    matmul = 2 * n_act * b
+    attn = b * _attn_flops_token(cfg, s)
+    moe_pad = _moe_padding_flops(cfg, b)
+    return {"matmul": matmul, "attention": attn, "moe_pad": moe_pad,
+            "total": matmul + attn + moe_pad,
+            "model_flops": 2 * n_act * b}
+
+
+def _moe_padding_flops(cfg: ModelConfig, tokens: int) -> float:
+    """Capacity-padding waste: buffers are E*C >= tokens*k rows."""
+    if cfg.moe is None:
+        return 0.0
+    m = cfg.moe
+    n_moe = sum(cfg.is_moe_layer(i) for i in range(cfg.num_layers))
+    pad_ratio = max(m.capacity_factor - 1.0, 0.0)
+    return 2 * (3 * cfg.d_model * m.d_ff_expert) * tokens * m.top_k \
+        * pad_ratio * n_moe
+
+
+# --------------------------------------------------------- bytes model --
+
+def analytic_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                   counts: Dict[str, float], chips: int,
+                   microbatches: int = 1,
+                   remat_policy: str = "full") -> Dict[str, float]:
+    """Per-chip HBM bytes per step (dominant streams only)."""
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    n_tot = counts["total"]
+    layers = cfg.num_layers + cfg.encoder_layers
+    tok_local = b * s / chips if shape.kind != "decode" else b / chips
+    tok_local = max(tok_local, 1)
+
+    if shape.kind == "train":
+        # weights: read fwd + bwd (+ remat re-read), per microbatch
+        w_reads = 3 if remat_policy == "full" else 2
+        w_io = w_reads * microbatches * n_tot * 2 / chips
+        # optimizer: read+write m, v (+ int8 halves both) + param rw
+        moment_b = 1 if n_tot > 100e9 else 4
+        opt_io = (2 * 2 * moment_b + 2 * 2 + 4) * n_tot / chips
+        # activations: ~24 bytes/elem rw per layer incl. recompute
+        act_io = layers * (b * s / chips) * d * 2 * 12
+        # flash KV re-reads: each kv block read once per q block
+        kv_io = _flash_kv_reread_bytes(cfg, b, s, chips) * 2  # fwd+remat
+        logits_io = 3 * (b * s / chips) * _pad_vocab(cfg) * 4
+        total = w_io + opt_io + act_io + kv_io + logits_io
+        return {"weights": w_io, "optimizer": opt_io, "activations": act_io,
+                "flash_kv": kv_io, "logits": logits_io, "total": total}
+    if shape.kind == "prefill":
+        w_io = n_tot * 2 / chips
+        act_io = layers * (b * s / chips) * d * 2 * 6
+        kv_io = _flash_kv_reread_bytes(cfg, b, s, chips)
+        cache_w = _cache_bytes(cfg, b, s) / chips
+        total = w_io + act_io + kv_io + cache_w
+        return {"weights": w_io, "activations": act_io, "flash_kv": kv_io,
+                "cache": cache_w, "total": total}
+    # decode: weights + full cache read per token.  MoE expert reads are
+    # ROUTED-ONLY (§Perf-B.2: idle experts sit behind lax.cond, so their
+    # weights never leave HBM); the touched-expert term uses the worst
+    # chip on the critical path (top_k experts / TP shard), saturating
+    # at the dense read when the batch routes everywhere.
+    if cfg.moe is not None:
+        n_exp = counts["expert"]
+        m = cfg.moe
+        n_moe_layers = sum(cfg.is_moe_layer(i) for i in range(cfg.num_layers))
+        expert_sz = n_exp / max(m.num_experts * n_moe_layers, 1)
+        touched = min(b * m.top_k, m.num_experts) * n_moe_layers
+        # expectation per chip, experts spread over the (data x model)
+        # pod plane (pods replicate experts)
+        w_exp = touched * expert_sz * 2 / min(chips, 256)
+        w_io = (n_tot - n_exp) * 2 / chips + min(w_exp, n_exp * 2 / chips)
+    else:
+        w_io = n_tot * 2 / chips
+    cache_io = _cache_bytes(cfg, b, s) / chips
+    act_io = layers * tok_local * d * 2 * 6
+    total = w_io + cache_io + act_io
+    return {"weights": w_io, "cache": cache_io, "activations": act_io,
+            "total": total}
+
+
+def _pad_vocab(cfg) -> int:
+    return -(-cfg.vocab_size // 256) * 256
+
+
+def _flash_kv_reread_bytes(cfg: ModelConfig, b: int, s: int, chips: int,
+                           block_q: int = 512) -> float:
+    total = 0.0
+    nq = max(s // block_q, 1)
+    for kind in cfg.layer_kinds():
+        if kind == "global":
+            reread = nq / 2                   # causal: half the blocks
+        elif kind == "local":
+            reread = min((cfg.window or s) / block_q + 1, nq)
+        else:
+            continue
+        hkv = cfg.num_heads if cfg.mla else cfg.num_kv_heads
+        hd = ((cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+               + cfg.mla.v_head_dim) / 2) if cfg.mla else cfg.head_dim
+        total += (b * s / chips) * hkv * hd * 2 * 2 * reread
+    return total
+
+
+def _cache_bytes(cfg: ModelConfig, b: int, s: int) -> float:
+    total = 0.0
+    for kind in cfg.layer_kinds():
+        if kind in ("global", "local"):
+            eff = min(s, cfg.window) if (kind == "local" and cfg.window) \
+                else s
+            hkv = cfg.num_heads if cfg.mla else cfg.num_kv_heads
+            hd = ((cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+                   + cfg.mla.v_head_dim) / 2) if cfg.mla else cfg.head_dim
+            total += b * hkv * eff * hd * 2 * 2
+        elif kind == "mamba":
+            di = cfg.ssm.expand * cfg.d_model
+            total += b * di * cfg.ssm.d_state * 4
+        elif kind == "mlstm":
+            di = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
+            dh = di // cfg.xlstm.num_heads
+            total += b * cfg.xlstm.num_heads * dh * dh * 4
+        elif kind == "slstm":
+            total += b * cfg.d_model * 4 * 4
+    return total
+
+
+# ----------------------------------------------------- collective model --
+
+def reconstruct_collectives(rec: dict) -> Dict[str, float]:
+    """Total collective bytes/chip/step: top-level once + while bodies
+    scaled by static trip counts along their nesting depth.
+
+    Depth semantics (matches the traced structure): for train steps the
+    outermost collective-carrying scan is the microbatch accumulation
+    (trips = microbatches) and the next level is the segment scan
+    (trips = dominant segment reps); for prefill/decode the outermost is
+    the segment scan.  Deeper whiles (chunked recurrences, pallas
+    interpret grids) carry no collectives of their own but inherit the
+    ancestors' multiplier.  Remainder segments with fewer reps are
+    over-approximated by the dominant reps — an upper bound, noted in
+    EXPERIMENTS.md."""
+    coll = rec.get("collectives") or {}
+    per_comp = coll.get("per_computation", {})
+    bodies = set(coll.get("while_bodies", []))
+    depths = coll.get("body_depth", {})
+    cfg = get_config(rec["arch"])
+    from repro.models.transformer import plan_segments
+    reps = max((p.reps for p in plan_segments(cfg)), default=1)
+    micro = rec.get("microbatches", 1)
+    is_train = rec.get("kind") == "train"
+    trip_by_level = [micro, reps] if is_train else [reps]
+
+    def mult(depth: int) -> float:
+        m = 1.0
+        for lvl in range(min(depth, len(trip_by_level))):
+            m *= trip_by_level[lvl]
+        # deeper nesting than known scans: inherit the innermost product
+        return m
+
+    top = 0.0
+    scaled = 0.0
+    body_total = 0.0
+    for comp, kinds in per_comp.items():
+        s = sum(kinds.values())
+        if comp in bodies:
+            body_total += s
+            scaled += s * mult(depths.get(comp, 1))
+        else:
+            top += s
+    return {"top_level": top, "while_bodies_raw": body_total,
+            "scaled_total": top + scaled,
+            "reps_scale": trip_by_level}
+
+
+# -------------------------------------------------------------- report --
+
+def analyze_cell(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = 512 if rec["mesh"] == "multi" else 256
+    micro = rec.get("microbatches", 1)
+    if cfg.moe is not None and "capacity_factor" in rec:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=rec["capacity_factor"]))
+    counts = param_counts(cfg)
+    fl = analytic_flops(cfg, shape, counts,
+                        remat_policy=rec.get("remat_policy", "full"))
+    by = analytic_bytes(cfg, shape, counts, chips, micro,
+                        remat_policy=rec.get("remat_policy", "full"))
+    co = reconstruct_collectives(rec)
+
+    t_compute = fl["total"] / (chips * PEAK_FLOPS)
+    t_memory = by["total"] / HBM_BW
+    t_coll = co["scaled_total"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = terms[dominant]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips, "microbatches": micro,
+        "n_params": counts["total"], "n_active": counts["active"],
+        "flops_total": fl["total"], "model_flops": fl["model_flops"],
+        "useful_ratio": fl["model_flops"] / fl["total"],
+        "bytes_total": by["total"], "coll_bytes": co["scaled_total"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "step_bound_s": bound,
+        "roofline_fraction": t_compute / bound if bound > 0 else 0.0,
+        "hlo_flops_per_dev": rec.get("cost_analysis", {}).get(
+            "flops_per_device"),
+        "mem_temp_gib": rec.get("memory_analysis", {}).get(
+            "temp_bytes", 0) / 2**30,
+        "mem_args_gib": rec.get("memory_analysis", {}).get(
+            "argument_bytes", 0) / 2**30,
+        "flops_detail": fl, "bytes_detail": by, "coll_detail": co,
+    }
+
+
+def load_all(dryrun_dir: str = DRYRUN_DIR) -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        row = analyze_cell(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def main():
+    rows = load_all()
+    hdr = ("arch,shape,mesh,dominant,t_compute_s,t_memory_s,"
+           "t_collective_s,roofline_fraction,useful_ratio,"
+           "mem_args_gib,mem_temp_gib")
+    print(hdr)
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['dominant']},"
+              f"{r['t_compute_s']:.4f},{r['t_memory_s']:.4f},"
+              f"{r['t_collective_s']:.4f},{r['roofline_fraction']:.3f},"
+              f"{r['useful_ratio']:.3f},{r['mem_args_gib']:.2f},"
+              f"{r['mem_temp_gib']:.2f}")
+    out = os.path.join(DRYRUN_DIR, "..", "roofline.json")
+    json.dump(rows, open(out, "w"), indent=1)
+    print(f"# wrote {os.path.normpath(out)} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

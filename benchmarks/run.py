@@ -1,0 +1,47 @@
+"""Benchmark driver: one section per paper table/figure + the roofline.
+
+  Fig. 2   — SPEC ACCEL stand-ins, original vs new runtime
+  Table 1  — miniQMC target regions, original vs new runtime
+  §4.1     — code comparison (op-histogram + bit-identity)
+  §Roofline— per-cell terms from the dry-run records (if present)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("=" * 72)
+    print("## Fig. 2 — SPEC ACCEL (original vs new device runtime)")
+    print("=" * 72)
+    from benchmarks import spec_accel
+    spec_accel.main()
+
+    print()
+    print("=" * 72)
+    print("## Table 1 — miniQMC target regions")
+    print("=" * 72)
+    from benchmarks import miniqmc
+    miniqmc.main()
+
+    print()
+    print("=" * 72)
+    print("## §4.1 — code comparison (portable vs native lowering)")
+    print("=" * 72)
+    from benchmarks import parity
+    parity.main()
+
+    print()
+    print("=" * 72)
+    print("## Roofline (from experiments/dryrun)")
+    print("=" * 72)
+    try:
+        from benchmarks import roofline
+        roofline.main()
+    except Exception as e:  # dry-run records may not exist yet
+        print(f"(skipped: {e})", file=sys.stderr)
+        print("(no dry-run records; run python -m repro.launch.dryrun --all)")
+
+
+if __name__ == "__main__":
+    main()

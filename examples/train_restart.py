@@ -1,0 +1,49 @@
+"""Fault-tolerance demo: train, die mid-run, restart, verify the resumed
+run matches an uninterrupted one step-for-step (atomic checkpoints +
+deterministic data replay).
+
+Run:  PYTHONPATH=src python examples/train_restart.py
+"""
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+from repro.configs.smoke import smoke_config
+from repro.train import SimulatedFailure, TrainConfig, Trainer
+
+SHAPE = ShapeConfig("demo", seq_len=32, global_batch=4, kind="train")
+
+
+def main():
+    cfg = smoke_config("granite-8b", num_layers=2)
+    work = tempfile.mkdtemp(prefix="repro_ckpt_")
+    try:
+        # uninterrupted reference
+        ref = Trainer(cfg, SHAPE, TrainConfig(
+            steps=8, ckpt_dir=work + "/ref", ckpt_every=4)).run()["history"]
+
+        # node dies at step 6 (after the step-4 checkpoint committed)
+        try:
+            Trainer(cfg, SHAPE, TrainConfig(
+                steps=8, ckpt_dir=work + "/ft", ckpt_every=4,
+                fail_at_step=6)).run()
+        except SimulatedFailure as e:
+            print(f"!! {e} — restarting from the last atomic checkpoint")
+
+        resumed = Trainer(cfg, SHAPE, TrainConfig(
+            steps=8, ckpt_dir=work + "/ft", ckpt_every=4)).run()["history"]
+        print(f"resumed at step {resumed[0]['step']}")
+
+        ref_tail = [h["loss"] for h in ref if h["step"] >= resumed[0]["step"]]
+        res_tail = [h["loss"] for h in resumed]
+        np.testing.assert_allclose(ref_tail, res_tail, rtol=2e-4, atol=2e-4)
+        print("resumed losses match the uninterrupted run:",
+              [round(x, 4) for x in res_tail])
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

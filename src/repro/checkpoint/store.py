@@ -1,0 +1,151 @@
+"""Sharded checkpointing with atomic commit, async writes, and elastic
+(cross-mesh) restore.
+
+Layout:  <dir>/step_<N>/  arr_<i>.npy  + manifest.json
+Commit protocol: write into ``step_<N>.tmp`` then ``os.replace`` to
+``step_<N>`` — a crashed writer can never leave a half checkpoint that
+``latest_step`` would pick up (fault-tolerance tests kill the writer
+mid-save and assert restart uses the previous step).
+
+Elastic restore: leaves are saved as *global* arrays (host-gathered at
+this repo's test scale; a real deployment swaps the leaf I/O for
+per-shard OCDBT files — the manifest/commit/resharding logic is
+unchanged).  ``restore_checkpoint`` device_puts each leaf with the
+target mesh's NamedSharding, so a checkpoint taken on a (16,16) mesh
+restores onto (2,16,16) or a single device transparently.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _tree_flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, jax.tree_util.tree_structure(tree)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                steps.append(int(name.split("_")[1]))
+            except ValueError:
+                continue
+    return max(steps) if steps else None
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic synchronous save.  Returns the committed path."""
+    paths, leaves, _ = _tree_flatten_with_paths(tree)
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    names = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        name = f"arr_{i}.npy"
+        np.save(os.path.join(tmp, name), arr)
+        names.append({"path": paths[i], "file": name,
+                      "dtype": str(arr.dtype), "shape": list(arr.shape)})
+    manifest = {"step": step, "leaves": names, "extra": extra or {}}
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                 # atomic commit
+    return final
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like_tree, *,
+                       mesh=None, specs=None):
+    """Restore into the structure of ``like_tree``; reshard onto ``mesh``
+    with ``specs`` (same pytree of PartitionSpec) when given."""
+    src = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(src, MANIFEST)) as f:
+        manifest = json.load(f)
+    paths, leaves, treedef = _tree_flatten_with_paths(like_tree)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    out = []
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)) \
+        if specs is not None else [None] * len(leaves)
+    for i, (p, like) in enumerate(zip(paths, leaves)):
+        entry = by_path[p]
+        arr = np.load(os.path.join(src, entry["file"]))
+        if mesh is not None and spec_leaves[i] is not None:
+            sharding = jax.sharding.NamedSharding(mesh, spec_leaves[i])
+            out.append(jax.device_put(arr, sharding))
+        else:
+            out.append(jax.device_put(arr.astype(like.dtype)
+                                      if hasattr(like, "dtype") else arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+
+class CheckpointManager:
+    """Async, bounded-retention checkpoint writer."""
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3, async_save: bool = True):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.async_save = async_save
+        self._lock = threading.Lock()
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save(self, step: int, tree, *, extra=None):
+        # materialize on host *before* handing to the writer thread so the
+        # trainer can mutate device state immediately
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            with self._lock:
+                save_checkpoint(self.dir, step, host_tree, extra=extra)
+                self._gc()
+
+        if self.async_save:
+            self.wait()
+            self._pending = threading.Thread(target=work, daemon=True)
+            self._pending.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(s for s in (
+            int(n.split("_")[1]) for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.endswith(".tmp")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    def latest(self) -> Optional[int]:
+        self.wait()
+        return latest_step(self.dir)
+
+    def restore(self, step: int, like_tree, *, mesh=None, specs=None):
+        self.wait()
+        return restore_checkpoint(self.dir, step, like_tree,
+                                  mesh=mesh, specs=specs)

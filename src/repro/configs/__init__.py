@@ -1,0 +1,47 @@
+"""Architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (  # noqa: F401
+    MLAConfig, ModelConfig, MoEConfig, SHAPES, SSMConfig, ShapeConfig,
+    XLSTMConfig, cell_is_supported, input_specs,
+)
+
+ARCH_IDS = (
+    "deepseek-v2-lite-16b",
+    "arctic-480b",
+    "whisper-base",
+    "gemma3-27b",
+    "granite-8b",
+    "gemma2-2b",
+    "gemma3-4b",
+    "xlstm-1.3b",
+    "internvl2-26b",
+    "jamba-1.5-large-398b",
+)
+
+_MODULES = {
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "arctic-480b": "arctic_480b",
+    "whisper-base": "whisper_base",
+    "gemma3-27b": "gemma3_27b",
+    "granite-8b": "granite_8b",
+    "gemma2-2b": "gemma2_2b",
+    "gemma3-4b": "gemma3_4b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "internvl2-26b": "internvl2_26b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

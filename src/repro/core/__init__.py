@@ -1,0 +1,16 @@
+"""repro.core — portable device runtime for Pallas kernels.
+
+The paper's contribution, rebuilt for JAX/TPU: a common portable part
+(runtime, atomics, memory, worksharing) plus small target-specific parts
+selected by ``declare_variant`` context selectors.  See DESIGN.md.
+"""
+from repro.core.context import (  # noqa: F401
+    ARCH_GENERIC, ARCH_INTERPRET, ARCH_TPU, TargetContext, current_context,
+    target,
+)
+from repro.core.variant import (  # noqa: F401
+    VariantError, arch, declare_target, declare_variant, extension, isa,
+    kind, match, vendor,
+)
+from repro.core.runtime import DeviceRuntime, kernel_call, runtime  # noqa: F401
+from repro.core import atomics, intrinsics, memory  # noqa: F401

@@ -1,0 +1,92 @@
+"""Portable atomic operations (paper §3.1, Listing 3).
+
+The paper shows that four of the five atomics the device runtime needs
+(add, max, exchange, cas) can be written portably with
+``#pragma omp atomic [compare] capture seq_cst`` — only ``inc`` needs a
+target intrinsic.
+
+TPU adaptation (DESIGN.md §3): Pallas grid steps are *sequential* on a
+core, so a read-modify-write on a VMEM/SMEM ref **is** atomic with
+respect to other grid steps; the portable forms below therefore lower to
+exactly the load/op/store a native kernel would emit — the IR-identity
+claim of §4.1, checked by benchmarks/parity.py.  Cross-core atomicity is
+the shard_map/collective layer's job, not the kernel's.
+
+Every function returns the *captured* old value, matching the
+``capture`` clause semantics in Listing 3.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.variant import declare_target
+
+__all__ = [
+    "atomic_add", "atomic_max", "atomic_min", "atomic_exchange",
+    "atomic_cas", "atomic_inc",
+]
+
+
+def _read(ref, idx):
+    return ref[...] if idx is None else ref[idx]
+
+
+def _write(ref, idx, v):
+    if idx is None:
+        ref[...] = v
+    else:
+        ref[idx] = v
+
+
+@declare_target
+def atomic_add(ref, value, idx=None):
+    """{ V = *X; *X += E; } return V;   (atomic capture seq_cst)"""
+    v = _read(ref, idx)
+    _write(ref, idx, v + value)
+    return v
+
+
+@declare_target
+def atomic_max(ref, value, idx=None):
+    """{ V = *X; if (*X < E) *X = E; } return V;  (atomic compare capture)"""
+    v = _read(ref, idx)
+    _write(ref, idx, jnp.maximum(v, value))
+    return v
+
+
+@declare_target
+def atomic_min(ref, value, idx=None):
+    v = _read(ref, idx)
+    _write(ref, idx, jnp.minimum(v, value))
+    return v
+
+
+@declare_target
+def atomic_exchange(ref, value, idx=None):
+    """{ V = *X; *X = E; } return V;"""
+    v = _read(ref, idx)
+    val = jnp.broadcast_to(jnp.asarray(value, v.dtype), v.shape) if hasattr(v, "shape") else value
+    _write(ref, idx, val)
+    return v
+
+
+@declare_target
+def atomic_cas(ref, expected, desired, idx=None):
+    """{ V = *X; if (*X == E) *X = D; } return V;"""
+    v = _read(ref, idx)
+    _write(ref, idx, jnp.where(v == expected, desired, v))
+    return v
+
+
+@declare_target
+def atomic_inc(ref, bound, idx=None):
+    """CUDA-semantics wraparound increment: { v = x; x = x >= e ? 0 : x+1 }.
+
+    In the paper this is the one op OpenMP 5.1 cannot express and stays
+    target-specific.  On TPU the sequential-grid model lets the same RMW
+    express it portably — an assumption that *changed in our favor*
+    (DESIGN.md §7): the base implementation is total, no variant needed.
+    """
+    v = _read(ref, idx)
+    _write(ref, idx, jnp.where(v >= bound, jnp.zeros_like(v), v + 1))
+    return v

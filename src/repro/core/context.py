@@ -1,0 +1,126 @@
+"""Target context — the OpenMP 5.1 "OpenMP context" analogue.
+
+In OpenMP 5.1 a *context* is the set of traits active at a point in the
+program: ``device={kind(...), arch(...), isa(...)}`` and
+``implementation={vendor(...), extension(...)}``.  ``declare variant``
+selectors are matched against it.
+
+Here the context describes the *lowering target* of a Pallas kernel:
+
+* ``device.kind``  — "gpu"-analogue class: ``accelerator`` or ``host``.
+* ``device.arch``  — ``tpu`` (Mosaic-compiled), ``interpret`` (CPU Pallas
+  interpreter), ``generic`` (pure-jnp fallback; kernels become plain XLA
+  ops).  This mirrors the paper's {nvptx64, amdgcn} target axis.
+* ``device.isa``   — TPU generation when known (``v5e``, ``v4``, ...).
+* ``implementation.vendor`` — ``mosaic`` / ``xla``.
+
+The active context lives on a stack so callers can override it
+(``with target(...):``), and the default is detected from the JAX
+backend, the way ``-fopenmp-is-device`` fixes the compilation pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Iterator, Optional, Tuple
+
+import jax
+
+# Recognized architectures, most specific behavior first.
+ARCH_TPU = "tpu"              # real Mosaic lowering (the "nvptx64" of this port)
+ARCH_INTERPRET = "interpret"  # pallas interpret mode on CPU (the "amdgcn")
+ARCH_GENERIC = "generic"      # pure-jnp fallback: "a new target for free"
+
+KNOWN_ARCHS = (ARCH_TPU, ARCH_INTERPRET, ARCH_GENERIC)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTraits:
+    kind: str = "accelerator"
+    arch: str = ARCH_INTERPRET
+    isa: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ImplementationTraits:
+    vendor: str = "mosaic"
+    extensions: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetContext:
+    device: DeviceTraits = dataclasses.field(default_factory=DeviceTraits)
+    implementation: ImplementationTraits = dataclasses.field(
+        default_factory=ImplementationTraits)
+
+    @property
+    def arch(self) -> str:
+        return self.device.arch
+
+    @property
+    def interpret(self) -> bool:
+        """Whether pallas_call should run in interpret mode."""
+        return self.device.arch == ARCH_INTERPRET
+
+    @property
+    def use_pallas(self) -> bool:
+        """Whether kernels lower through pallas_call at all."""
+        return self.device.arch in (ARCH_TPU, ARCH_INTERPRET)
+
+
+def detect_default_context() -> TargetContext:
+    """Detect the target the way the paper's build detects nvptx/amdgcn.
+
+    On a TPU backend we compile for Mosaic; on CPU (this container) the
+    compiled target is unavailable so the interpreter is the default.
+    """
+    backend = jax.default_backend()
+    if backend == "tpu":
+        kind = getattr(jax.devices()[0], "device_kind", "")
+        isa = "v5e" if "v5 lite" in kind.lower() or "v5e" in kind.lower() else kind or None
+        return TargetContext(DeviceTraits(arch=ARCH_TPU, isa=isa),
+                             ImplementationTraits(vendor="mosaic"))
+    return TargetContext(DeviceTraits(arch=ARCH_INTERPRET),
+                         ImplementationTraits(vendor="mosaic"))
+
+
+class _ContextStack(threading.local):
+    def __init__(self):
+        self.stack = []
+
+
+_STACK = _ContextStack()
+
+
+def current_context() -> TargetContext:
+    if _STACK.stack:
+        return _STACK.stack[-1]
+    return detect_default_context()
+
+
+class target:
+    """``with target("tpu"):`` — override the active target context.
+
+    The analogue of choosing the device pass (-fopenmp-is-device +
+    -fopenmp-targets=...) for a region of code.
+    """
+
+    def __init__(self, arch: str, *, isa: Optional[str] = None,
+                 vendor: str = "mosaic",
+                 extensions: Tuple[str, ...] = ()):  # noqa: D401
+        if arch not in KNOWN_ARCHS:
+            raise ValueError(f"unknown target arch {arch!r}; known: {KNOWN_ARCHS}")
+        self._ctx = TargetContext(
+            DeviceTraits(arch=arch, isa=isa),
+            ImplementationTraits(vendor=vendor, extensions=tuple(extensions)))
+
+    def __enter__(self) -> TargetContext:
+        _STACK.stack.append(self._ctx)
+        return self._ctx
+
+    def __exit__(self, *exc) -> None:
+        _STACK.stack.pop()
+
+
+def all_archs() -> Iterator[str]:
+    yield from KNOWN_ARCHS

@@ -1,0 +1,93 @@
+"""Base declarations of the target-dependent intrinsics.
+
+This is the header of the device runtime: every function here is a
+``declare target`` base whose body is either a portable implementation
+(the common part, §3.1 of the paper) or the paper's "fallback version
+which raises an error" stub (§3.2, Listing 4) when no portable form
+exists.  Target-specific variants are registered by
+``repro.core.targets.{tpu,interpret,generic}``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.variant import declare_target, VariantError
+
+# ---------------------------------------------------------------------------
+# Portable common part (pure OpenMP in the paper; pure jnp here).
+# ---------------------------------------------------------------------------
+
+
+@declare_target
+def iota(shape, dim, dtype=jnp.int32):
+    """Lane/sublane index vector.
+
+    Portable: ``broadcasted_iota`` works on every target (TPU requires
+    >=2D iota, which broadcasted_iota already guarantees for >=2D shapes).
+    """
+    return jax.lax.broadcasted_iota(dtype, shape, dim)
+
+
+@declare_target
+def reduce_sum(x, axis=None, keepdims=False):
+    return jnp.sum(x, axis=axis, keepdims=keepdims)
+
+
+@declare_target
+def reduce_max(x, axis=None, keepdims=False):
+    return jnp.max(x, axis=axis, keepdims=keepdims)
+
+
+@declare_target
+def exp(x):
+    return jnp.exp(x)
+
+
+# ---------------------------------------------------------------------------
+# Target-dependent intrinsics (the paper's Listing-4 pattern).
+# The base body is the portable *fallback*; fast variants override it.
+# ---------------------------------------------------------------------------
+
+
+@declare_target
+def approx_reciprocal(x):
+    """1/x.  TPU has a fast approximate VPU op (like CUDA __frcp_rn);
+    the portable fallback divides."""
+    return 1.0 / x
+
+
+@declare_target
+def repeat(x, repeats, axis):
+    """Tile ``x`` ``repeats`` times along ``axis``.
+
+    Portable fallback via concatenate; TPU variant uses the Mosaic
+    ``pltpu.repeat`` primitive (lane-granularity copy).
+    """
+    return jnp.concatenate([x] * repeats, axis=axis)
+
+
+@declare_target
+def roll(x, shift, axis):
+    """Cyclic shift.  TPU variant lowers to a lane rotate."""
+    return jnp.roll(x, shift, axis=axis)
+
+
+@declare_target
+def make_async_copy(src_ref, dst_ref, sem):
+    """HBM->VMEM DMA handle.  No portable form (the 'atomic_inc' of this
+    port): the base raises, targets must provide it."""
+    raise VariantError("make_async_copy: target dependent implementation missing")
+
+
+@declare_target
+def compiler_params(dimension_semantics=None, vmem_limit_bytes=None):
+    """Target compiler knobs for pallas_call.  Portable fallback: none."""
+    return None
+
+
+@declare_target
+def memory_space_any():
+    """BlockSpec memory space for 'leave it in HBM' (pl.ANY)."""
+    import jax.experimental.pallas as pl
+    return pl.ANY

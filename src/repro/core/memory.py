@@ -1,0 +1,53 @@
+"""Memory allocators — the ``allocate`` directive of the device runtime.
+
+OpenMP 5.1 maps memory kinds to allocators; the paper uses
+``allocator(omp_cgroup_mem_alloc)`` to place globals in block-shared
+memory (CUDA ``__shared__``).  The TPU hierarchy is HBM -> VMEM (on-core
+vector memory, the ``__shared__`` analogue) -> SMEM (scalar memory) ->
+VREGs, so:
+
+    omp_cgroup_mem_alloc   -> alloc_shared  -> pltpu.VMEM scratch
+    (scalar control data)  -> alloc_scalar  -> pltpu.SMEM scratch
+    omp_default_mem_alloc  -> alloc_device  -> pl.ANY / HBM blocks
+    omp_thread_mem_alloc   -> plain values  -> VREGs (no allocator needed)
+
+Like the paper's ``loader_uninitialized`` globals, scratch buffers are
+**uninitialized** on entry (Pallas semantics) — kernels must initialize
+on demand, which is what the device runtime's design already expects.
+
+These return *scratch shape descriptors* consumed by ``pallas_call``'s
+``scratch_shapes=...``; the descriptors are target-portable (interpret
+mode honors them), so they live in the common part.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.variant import declare_target
+from repro.core import intrinsics as I
+
+__all__ = ["alloc_shared", "alloc_scalar", "alloc_semaphore", "any_memory_space"]
+
+
+@declare_target
+def alloc_shared(shape, dtype=jnp.float32):
+    """Block-shared (team-visible) uninitialized buffer: VMEM scratch."""
+    return pltpu.VMEM(tuple(shape), dtype)
+
+
+@declare_target
+def alloc_scalar(shape=(1,), dtype=jnp.int32):
+    """Scalar/control memory: SMEM scratch."""
+    return pltpu.SMEM(tuple(shape), dtype)
+
+
+@declare_target
+def alloc_semaphore():
+    """DMA completion semaphore (used with make_async_copy)."""
+    return pltpu.SemaphoreType.DMA
+
+
+def any_memory_space():
+    """HBM-resident BlockSpec memory space (variant-dispatched)."""
+    return I.memory_space_any()

@@ -1,0 +1,44 @@
+"""Memory-bounded scans for recurrent layers.
+
+``lax.scan`` saves every per-step carry for the backward pass.  For
+matrix-memory recurrences (mLSTM's (B,H,Dk,Dv) cell, mamba's
+(B,d_inner,d_state) state) that is catastrophic at training shapes —
+the xlstm-1.3b train_4k dry-run measured ~360 GiB/device of scan
+residuals.  ``chunked_scan`` nests two scans with ``jax.checkpoint`` on
+the inner one: only chunk-boundary carries are saved (S/chunk of them)
+and in-chunk steps are recomputed during backward — the standard
+O(sqrt(S))-memory scan remat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_scan"]
+
+
+def chunked_scan(f, init, xs, *, chunk: int = 64):
+    """Drop-in lax.scan with chunk-boundary-only carry saving.
+
+    xs leaves must share leading length S.  Falls back to plain scan
+    when S does not divide into chunks (or is small)."""
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if chunk <= 1 or length < 2 * chunk or length % chunk:
+        return jax.lax.scan(f, init, xs)
+    n_chunks = length // chunk
+
+    def split(x):
+        return x.reshape((n_chunks, chunk) + x.shape[1:])
+
+    xs_c = jax.tree_util.tree_map(split, xs)
+
+    @jax.checkpoint
+    def inner(carry, xc):
+        return jax.lax.scan(f, carry, xc)
+
+    carry, ys_c = jax.lax.scan(inner, init, xs_c)
+
+    def join(y):
+        return y.reshape((length,) + y.shape[2:])
+
+    return carry, jax.tree_util.tree_map(join, ys_c)

@@ -1,0 +1,9 @@
+"""Target-specific parts of the device runtime.
+
+Importing this package registers every variant (the analogue of linking
+the target-dependent objects of the LLVM device runtime).  The common
+part lives in ``repro.core.runtime`` / ``atomics`` / ``memory``.
+"""
+from repro.core.targets import generic as _generic  # noqa: F401
+from repro.core.targets import tpu as _tpu          # noqa: F401
+from repro.core.targets import interpret as _interpret  # noqa: F401

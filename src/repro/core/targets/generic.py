@@ -1,0 +1,18 @@
+"""Generic (pure-jnp) target — "a new GPU target for almost free".
+
+The paper argues that once the runtime is portable, supporting a new
+architecture costs only "a few compiler intrinsics rather than a
+reimplementation of the entire runtime".  This file is the demonstration:
+a complete new execution target whose target-specific part is ~nothing —
+every base (portable) implementation already works, and kernels dispatch
+to their ``ref.py`` pure-jnp oracles instead of ``pallas_call`` (see
+``repro.kernels.*.ops``).  Useful in anger for debugging on hosts where
+even the Pallas interpreter is unavailable, and as the smoke-test
+baseline.
+"""
+from __future__ import annotations
+
+# No variants needed: the common part covers the generic target.  The
+# only generic-specific behavior (skip pallas_call entirely) lives in
+# the ops-level dispatch, mirroring how the paper keeps glue code out of
+# the runtime proper.

@@ -1,0 +1,47 @@
+"""CPU-interpreter target-specific part (the "amdgcn" of this port).
+
+Pallas interpret mode executes kernel bodies with XLA:CPU.  Most Mosaic
+primitives are unavailable there (``pl.reciprocal(approx=True)``,
+``pltpu.repeat``/``roll`` have no evaluation rule), so this target maps
+them back onto portable jnp forms — the same job the paper's amdgcn
+variant file does with ``__builtin_amdgcn_*``.
+
+Uses the paper's ``match_any`` extension: one variant body serves both
+``interpret`` and ``generic`` archs, like the single nvptx variant that
+serves {nvptx, nvptx64}.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import intrinsics as I
+from repro.core.variant import declare_variant, match, arch
+
+
+_BOTH = match(device=arch("interpret", "generic"),
+              implementation="match_any")
+
+
+@declare_variant(I.approx_reciprocal, match=_BOTH)
+def _approx_reciprocal_interp(x):
+    return 1.0 / x
+
+
+# repeat/roll/iota: the portable base implementation is already correct
+# for the interpreter, so no variant is registered — exactly the paper's
+# "common part" story.
+
+
+@declare_variant(I.make_async_copy, match=_BOTH)
+def _make_async_copy_interp(src_ref, dst_ref, sem):
+    # interpret mode supports the pltpu copy path in recent JAX; keep the
+    # intrinsic so kernels using explicit DMA still validate on CPU.
+    return pltpu.make_async_copy(src_ref, dst_ref, sem)
+
+
+@declare_variant(I.compiler_params, match=_BOTH)
+def _compiler_params_interp(dimension_semantics=None, vmem_limit_bytes=None):
+    # The interpreter accepts CompilerParams but ignores them; returning
+    # None keeps lowered artifacts identical to plain pallas_call.
+    return None

@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticLM, Prefetcher  # noqa: F401

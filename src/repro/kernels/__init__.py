@@ -1,0 +1,13 @@
+"""Pallas TPU kernels written against the portable device runtime.
+
+Each kernel package ships:
+  <name>.py — the portable-runtime kernel (pl.pallas_call + BlockSpec)
+  ops.py    — the jit-able public entry point with declare_variant
+              dispatch (tpu/interpret -> kernel, generic -> ref) and
+              custom_vjp where training needs gradients
+  ref.py    — pure-jnp oracle used for tests, for the generic target,
+              and for the recompute backward
+  native.py — (flash_attention, rmsnorm only) the kernel written the
+              pre-paper way, hard-coding pltpu intrinsics, used by the
+              §4.1 code-comparison parity benchmark.
+"""

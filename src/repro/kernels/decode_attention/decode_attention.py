@@ -1,0 +1,154 @@
+"""Flash-decode Pallas kernel (single new token vs. a long KV cache).
+
+TPU adaptation: one grid step per (batch, kv_head, kv_block); the KV
+block axis is sequential on-core, carrying (acc, m, l) in team-shared
+VMEM scratch.  All Hq/Hkv query heads of a group are processed together
+so each KV block is read once (GQA-aware), padded up to the 8-sublane
+MXU granule.
+
+Residual outputs (unnormalized acc + m + l) support sequence-parallel
+decode: shards of the KV cache compute partials that are merged with a
+log-sum-exp combine across chips (ref.combine_partials) — the SP path
+used by the long_500k shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.runtime import DeviceRuntime, kernel_call
+
+NEG_INF = -1e30
+LANES = 128
+SUBLANES = 8
+
+
+def _smem_space(rt: DeviceRuntime):
+    """Scalar control data lives in SMEM (the runtime's alloc_scalar
+    space); interpret mode honors the same descriptor."""
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.MemorySpace.SMEM
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+                   acc_ref, m_ref, l_ref, *, rt: DeviceRuntime, scale: float,
+                   window: Optional[int], softcap: Optional[float],
+                   block_kv: int, kv_offset: int):
+    ik = rt.team_id(2)
+    nk = rt.num_teams(2)
+
+    @rt.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]                                   # tokens valid globally
+    k_start = kv_offset + ik * block_kv
+
+    @rt.when(k_start < length)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G8, D)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bkv, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G8, bkv)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = k_start + rt.iota(s.shape, 1)
+        mask = k_pos < length
+        if window is not None:
+            mask = jnp.logical_and(mask, (length - 1 - k_pos) < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+        alpha = jnp.where(m_new > NEG_INF / 2, alpha, 0.0)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(
+            p, axis=1, keepdims=True) * jnp.ones_like(l_ref)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new * jnp.ones_like(m_ref)
+
+    @rt.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)    # unnormalized
+        m_out_ref[0, 0] = m_ref[...].astype(m_out_ref.dtype)
+        l_out_ref[0, 0] = l_ref[...].astype(l_out_ref.dtype)
+
+
+def decode_attention_fwd(q, k_cache, v_cache, lengths, *,
+                         window: Optional[int] = None,
+                         softcap: Optional[float] = None,
+                         scale: Optional[float] = None,
+                         block_kv: int = 512,
+                         kv_offset: int = 0,
+                         rt: Optional[DeviceRuntime] = None):
+    """q: (B, Hq, D); caches: (B, Hkv, S, D); lengths: (B,) int32.
+
+    Returns unnormalized (acc (B,Hq,D), m (B,Hq), l (B,Hq)); callers
+    normalize (ops.py) or combine across KV shards (SP decode).
+    ``kv_offset`` is this shard's global position of cache slot 0.
+    """
+    from repro.core.runtime import runtime
+    rt = rt or runtime()
+    b, hq, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[3]                       # may differ from d (MLA)
+    group = hq // hkv
+    g8 = max(SUBLANES, group)
+    scale = (d ** -0.5) if scale is None else scale
+    block_kv = min(block_kv, s)
+    nk = pl.cdiv(s, block_kv)
+
+    # lay q out GQA-wise: (B, Hkv, G8, D), zero-padding the group dim
+    qg = q.reshape(b, hkv, group, d)
+    if g8 != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g8 - group), (0, 0)))
+
+    kern = functools.partial(
+        _decode_kernel, rt=rt, scale=scale, window=window, softcap=softcap,
+        block_kv=block_kv, kv_offset=kv_offset)
+
+    grid = (b, hkv, nk)
+    acc, m, l = kernel_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, hkv, g8, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g8, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g8, LANES), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, ik: (ib,),
+                         memory_space=_smem_space(rt)),
+            pl.BlockSpec((1, 1, g8, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda ib, ih, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, dv), lambda ib, ih, ik: (ib, ih, ik, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, g8, dv), lambda ib, ih, ik: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, g8, LANES), lambda ib, ih, ik: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, g8, LANES), lambda ib, ih, ik: (ib, ih, 0, 0)),
+        ),
+        scratch_shapes=[
+            rt.alloc_shared((g8, dv), jnp.float32),
+            rt.alloc_shared((g8, LANES), jnp.float32),
+            rt.alloc_shared((g8, LANES), jnp.float32),
+        ],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        name="portable_decode_attention",
+        rt=rt,
+    )(lengths, qg, k_cache, v_cache)
+
+    acc = acc[:, :, :group].reshape(b, hq, dv)
+    m = m[:, :, :group, 0].reshape(b, hq)
+    l = l[:, :, :group, 0].reshape(b, hq)
+    return acc, m, l

@@ -1,0 +1,52 @@
+"""Public decode-attention op with variant dispatch + SP sharded variant."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.variant import declare_target, declare_variant, match, arch
+from repro.kernels.decode_attention import ref as _ref
+from repro.kernels.decode_attention import decode_attention as _kern
+
+
+@declare_target(name="decode_attention_impl")
+def _impl(q, k_cache, v_cache, lengths, window, softcap, scale, block_kv,
+          kv_offset):
+    return _ref.decode_attention_ref(
+        q, k_cache, v_cache, lengths, window=window, softcap=softcap,
+        scale=scale, kv_offset=kv_offset, return_residuals=True)
+
+
+@declare_variant(_impl, match=match(device=arch("tpu", "interpret"),
+                                    implementation="match_any"))
+def _impl_pallas(q, k_cache, v_cache, lengths, window, softcap, scale,
+                 block_kv, kv_offset):
+    return _kern.decode_attention_fwd(
+        q, k_cache, v_cache, lengths, window=window, softcap=softcap,
+        scale=scale, block_kv=block_kv, kv_offset=kv_offset)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     scale: Optional[float] = None,
+                     block_kv: int = 512,
+                     kv_offset: int = 0,
+                     return_residuals: bool = False):
+    """Single-token GQA decode attention.
+
+    q: (B, Hq, D); caches: (B, Hkv, S, D); lengths: (B,) int32 (valid
+    prefix; the query is the newest token).  With return_residuals the
+    unnormalized (acc, m, l) come back for cross-shard LSE combines
+    (sequence-parallel decode over a sharded KV cache).
+    """
+    acc, m, l = _impl(q, k_cache, v_cache, lengths, window, softcap, scale,
+                      block_kv, kv_offset)
+    if return_residuals:
+        return acc, m, l
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l_safe[..., None]).astype(q.dtype)
+
+
+combine_partials = _ref.combine_partials

@@ -1,0 +1,66 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *,
+                         window: Optional[int] = None,
+                         softcap: Optional[float] = None,
+                         scale: Optional[float] = None,
+                         kv_offset: int = 0,
+                         return_residuals: bool = False):
+    """q: (B, Hq, D); caches: (B, Hkv, S, D); lengths: (B,) int32.
+
+    The query is the token at position ``lengths[b] - 1`` (the newest).
+    ``kv_offset``: global position of cache slot 0 (SP-sharded caches).
+    Returns (B, Hq, D) [+ (m, l) residuals for cross-shard combines].
+    """
+    b, hq, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k_cache.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v_cache.astype(jnp.float32), group, axis=1)
+
+    scores = jnp.einsum("bhd,bhkd->bhk", qf, kf)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    k_pos = jnp.arange(s)[None, None, :] + kv_offset
+    mask = k_pos < lengths[:, None, None]
+    if window is not None:
+        q_pos = (lengths - 1)[:, None, None]
+        mask &= (q_pos - k_pos) < window
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(m > NEG_INF / 2, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum("bhk,bhkd->bhd", p, vf)
+    if return_residuals:
+        return acc, m[..., 0], l[..., 0]
+    out = acc / jnp.where(l == 0.0, 1.0, l)
+    return out.astype(q.dtype)
+
+
+def combine_partials(accs, ms, ls):
+    """Merge flash-decode partials from KV shards (log-sum-exp combine).
+
+    accs: list of (B, Hq, D) unnormalized; ms/ls: lists of (B, Hq)."""
+    m_g = jnp.max(jnp.stack(ms), axis=0)                      # (B, Hq)
+    num = 0.0
+    den = 0.0
+    for acc, m, l in zip(accs, ms, ls):
+        w = jnp.exp(m - m_g)
+        num = num + acc.astype(jnp.float32) * w[..., None]
+        den = den + l * w
+    den = jnp.where(den == 0.0, 1.0, den)
+    return (num / den[..., None]).astype(accs[0].dtype)

@@ -1,0 +1,193 @@
+"""Flash attention Pallas kernel written against the portable runtime.
+
+Online-softmax blocked attention (Flash-style) adapted to the TPU
+execution model: the kv-block grid axis is *sequential* on a core, so
+the running (m, l, acc) state lives in team-shared VMEM scratch
+(``rt.alloc_shared``) and is carried across kv steps — no cross-block
+atomics needed (DESIGN.md §3).
+
+Every target-sensitive construct goes through the DeviceRuntime:
+  rt.alloc_shared   — __shared__ analogue (VMEM scratch)
+  rt.iota           — >=2D-safe lane indices for masking
+  rt.approx_reciprocal — fast 1/l on TPU, exact divide elsewhere
+  rt.when           — predication
+  dimension_semantics — compiler knob via variant (tpu only)
+
+Supports causal, sliding-window, soft-capping, GQA, decoupled q/kv
+lengths (cross-attention), and a q-row offset for sequence-parallel
+shards.  ``q_offset`` may be a Python int (baked into the kernel) or a
+traced scalar (e.g. ``lax.axis_index`` inside shard_map), in which case
+it is fed through a small scalar positions operand.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.runtime import DeviceRuntime, kernel_call
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               rt: DeviceRuntime, scale: float, causal: bool,
+               window: Optional[int], softcap: Optional[float],
+               block_q: int, block_kv: int, kv_len: int, q_offset: int,
+               qoff_ref=None):
+    iq = rt.team_id(2)
+    ik = rt.team_id(3)
+    nk = rt.num_teams(3)
+
+    @rt.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # global position of this q block's first row
+    if qoff_ref is not None:
+        q_start = iq * block_q + qoff_ref[0, 0]
+    elif q_offset:
+        q_start = iq * block_q + q_offset
+    else:
+        q_start = iq * block_q
+    k_start = ik * block_kv
+
+    # Causal/window block skipping: a kv block strictly in the future of
+    # the whole q block contributes nothing.
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        # also skip blocks entirely left of every query's window
+        needed = jnp.logical_and(
+            needed, k_start + block_kv - 1 > q_start - window)
+
+    @rt.when(needed if not isinstance(needed, bool) else jnp.bool_(needed))
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)               # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, bkv)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        q_pos = q_start + rt.iota((block_q, block_kv), 0)
+        k_pos = k_start + rt.iota((block_q, block_kv), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                              # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)          # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+        p = jnp.exp(s - m_new)                             # (bq, bkv)
+        # fully-masked rows: m_new == NEG_INF -> p == exp(0) == 1; zero them
+        p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+        alpha = jnp.where(m_new > NEG_INF / 2, alpha, 0.0)
+
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(
+            p, axis=1, keepdims=True) * jnp.ones_like(l_ref)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (bq, d)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new * jnp.ones_like(m_ref)
+
+    @rt.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)                    # dead rows -> 0 out
+        inv = rt.approx_reciprocal(l)
+        o_ref[0, 0] = (acc_ref[...] * inv).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None,
+                        q_offset: Union[int, jax.Array] = 0,
+                        block_q: int = 512, block_kv: int = 512,
+                        rt: Optional[DeviceRuntime] = None):
+    """q: (B,Hq,Sq,Dk); k: (B,Hkv,Skv,Dk); v: (B,Hkv,Skv,Dv) ->
+    (B,Hq,Sq,Dv).  Dk may differ from Dv (MLA)."""
+    from repro.core.runtime import runtime
+    rt = rt or runtime()
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    block_q = min(block_q, max(sq, 8))
+    block_kv = min(block_kv, max(skv, 8))
+    # pad ragged sequence lengths up to block multiples (TPU tiling);
+    # the kv_len mask inside the kernel ignores the padded keys and the
+    # padded q rows are sliced off below.
+    sq_p = -(-sq // block_q) * block_q
+    skv_p = -(-skv // block_kv) * block_kv
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    nq = pl.cdiv(sq_p, block_q)
+    nk = pl.cdiv(skv_p, block_kv)
+
+    dynamic_offset = not isinstance(q_offset, int)
+    kern = functools.partial(
+        _fa_kernel, rt=rt, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv, kv_len=skv,
+        q_offset=0 if dynamic_offset else q_offset)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, d),
+                     lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        pl.BlockSpec((1, 1, block_kv, d),
+                     lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+        pl.BlockSpec((1, 1, block_kv, dv),
+                     lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+    ]
+    args = [q, k, v]
+    if dynamic_offset:
+        # feed the traced shard offset through a tiny scalar operand
+        qoff = jnp.broadcast_to(
+            jnp.asarray(q_offset, jnp.int32).reshape(1, 1), (1, LANES))
+        in_specs.append(pl.BlockSpec((1, LANES),
+                                     lambda ib, ih, iq, ik: (0, 0)))
+        args.append(qoff)
+
+        def body(q_ref, k_ref, v_ref, qoff_ref, o_ref, acc, m, l):
+            return kern(q_ref, k_ref, v_ref, o_ref, acc, m, l,
+                        qoff_ref=qoff_ref)
+    else:
+        body = kern
+
+    out = kernel_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, dv), q.dtype),
+        grid=(b, hq, nq, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, block_q, dv),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        scratch_shapes=[
+            rt.alloc_shared((block_q, dv), jnp.float32),
+            rt.alloc_shared((block_q, LANES), jnp.float32),
+            rt.alloc_shared((block_q, LANES), jnp.float32),
+        ],
+        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        name="portable_flash_attention",
+        rt=rt,
+    )(*args)
+    return out[:, :, :sq, :] if sq_p != sq else out

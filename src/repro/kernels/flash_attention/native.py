@@ -1,0 +1,133 @@
+"""Flash attention the PRE-paper way: pltpu intrinsics hard-coded.
+
+This file is the "CUDA original" of the §4.1 code comparison: the same
+algorithm as flash_attention.py but written directly against
+jax.experimental.pallas.tpu with no portability layer.  benchmarks/
+parity.py asserts the two lower to equivalent IR (op histogram) and
+bit-identical numerics in interpret mode.
+
+NOTE the deliberate asymmetry with the portable kernel: this version
+can only run where the hard-coded target constructs exist — it is the
+code-reuse problem the paper eliminates.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _fa_kernel_native(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                      scale, causal, window, softcap, block_q, block_kv,
+                      seq_len, interpret):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_kv
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        needed = jnp.logical_and(
+            needed, k_start + block_kv - 1 > q_start - window)
+
+    @pl.when(needed if not isinstance(needed, bool) else jnp.bool_(needed))
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = k_pos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+        alpha = jnp.where(m_new > NEG_INF / 2, alpha, 0.0)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(
+            p, axis=1, keepdims=True) * jnp.ones_like(l_ref)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new * jnp.ones_like(m_ref)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        # hard-coded target intrinsic: approx reciprocal only exists on TPU
+        inv = pl.reciprocal(l, approx=True) if not interpret else 1.0 / l
+        o_ref[0, 0] = (acc_ref[...] * inv).astype(o_ref.dtype)
+
+
+def flash_attention_native(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           block_q: int = 512, block_kv: int = 512,
+                           interpret: bool = True):
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+
+    kern = functools.partial(
+        _fa_kernel_native, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv, seq_len=s,
+        interpret=interpret)
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=(b, hq, pl.cdiv(s, block_q), pl.cdiv(s, block_kv)),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+        name="native_flash_attention",
+        **kwargs,
+    )(q, k, v)

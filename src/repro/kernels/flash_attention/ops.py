@@ -1,0 +1,118 @@
+"""Public flash-attention op: variant dispatch + custom_vjp.
+
+Forward dispatches through declare_variant: the tpu/interpret targets run
+the portable-runtime Pallas kernel, the generic target runs the pure-jnp
+oracle (the "new target for free" path).  Backward recomputes through
+the reference implementation (flash-style recompute — no quadratic
+softmax tensor is saved between fwd and bwd).
+
+``q_offset`` comes in two flavors: a Python int (baked into the kernel —
+the common case, zero IR overhead) or a traced scalar (sequence-parallel
+shards inside shard_map), which flows through as a real operand.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.variant import declare_target, declare_variant, match, arch
+from repro.kernels.flash_attention import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _kern
+
+
+@declare_target(name="flash_attention_impl")
+def _impl(q, k, v, qoff, causal, window, softcap, scale, block_q, block_kv):
+    # Portable base: the oracle (serves the generic target).
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                    softcap=softcap, scale=scale,
+                                    q_offset=qoff)
+
+
+@declare_variant(_impl, match=match(device=arch("tpu", "interpret"),
+                                    implementation="match_any"))
+def _impl_pallas(q, k, v, qoff, causal, window, softcap, scale, block_q,
+                 block_kv):
+    return _kern.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        q_offset=qoff, block_q=block_q, block_kv=block_kv)
+
+
+# ---------------------------------------------------------------------------
+# static q_offset (Python int): offset lives in nondiff args, IR unchanged
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _fa(q, k, v, causal, window, softcap, scale, qoff, block_q, block_kv):
+    return _impl(q, k, v, qoff, causal, window, softcap, scale, block_q,
+                 block_kv)
+
+
+def _fa_fwd(q, k, v, causal, window, softcap, scale, qoff, block_q, block_kv):
+    out = _impl(q, k, v, qoff, causal, window, softcap, scale, block_q,
+                block_kv)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, softcap, scale, qoff, block_q, block_kv, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=qoff),
+        q, k, v)
+    return vjp(g)
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# dynamic q_offset (traced scalar): offset is a real (integer) operand
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _fa_dyn(q, k, v, qoff, causal, window, softcap, scale, block_q, block_kv):
+    return _impl(q, k, v, qoff, causal, window, softcap, scale, block_q,
+                 block_kv)
+
+
+def _fa_dyn_fwd(q, k, v, qoff, causal, window, softcap, scale, block_q,
+                block_kv):
+    out = _impl(q, k, v, qoff, causal, window, softcap, scale, block_q,
+                block_kv)
+    return out, (q, k, v, qoff)
+
+
+def _fa_dyn_bwd(causal, window, softcap, scale, block_q, block_kv, res, g):
+    q, k, v, qoff = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=qoff),
+        q, k, v)
+    return (*vjp(g), None)
+
+
+_fa_dyn.defvjp(_fa_dyn_fwd, _fa_dyn_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    q_offset: Union[int, jax.Array] = 0,
+                    block_q: int = 512, block_kv: int = 512):
+    """Differentiable multi-head/GQA flash attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+    ``q_offset``: global position of q row 0 (int or traced scalar) for
+    sequence-parallel shards; Sq may differ from Skv (cross-attention).
+    """
+    if isinstance(q_offset, int):
+        return _fa(q, k, v, causal, window, softcap, scale, q_offset,
+                   block_q, block_kv)
+    return _fa_dyn(q, k, v, q_offset, causal, window, softcap, scale,
+                   block_q, block_kv)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for flash attention (also the `generic`-target impl).
+
+Supports: causal masking, sliding windows, logit soft-capping, GQA
+(q_heads a multiple of kv_heads), fp32 softmax accumulation.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps masked rows NaN-free
+
+
+def attention_mask(q_len: int, kv_len: int, *, causal: bool,
+                   window: Optional[int], q_offset: int = 0) -> jnp.ndarray:
+    """(q_len, kv_len) boolean mask. q_offset positions queries globally
+    (used for decode where the single query sits at position kv_len-1)."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    m = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        m &= q_pos >= k_pos
+    if window is not None:
+        m &= (q_pos - k_pos) < window
+    return m
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None,
+                        q_offset: int = 0):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+
+    ``q_offset``: global position of q row 0 (sequence-parallel shards)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads for GQA
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = attention_mask(sq, skv, causal=causal, window=window,
+                          q_offset=q_offset)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)

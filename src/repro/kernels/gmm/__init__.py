@@ -1,0 +1,1 @@
+from repro.kernels.gmm.ops import gmm  # noqa: F401

@@ -1,0 +1,54 @@
+"""Public grouped-matmul op (differentiable, variant-dispatched)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.variant import declare_target, declare_variant, match, arch
+from repro.kernels.gmm import ref as _ref
+from repro.kernels.gmm import gmm as _kern
+
+
+@declare_target(name="gmm_impl")
+def _impl(lhs, rhs, group_sizes, block_c, block_n, block_k):
+    return _ref.gmm_ref(lhs, rhs, group_sizes)
+
+
+@declare_variant(_impl, match=match(device=arch("tpu", "interpret"),
+                                    implementation="match_any"))
+def _impl_pallas(lhs, rhs, group_sizes, block_c, block_n, block_k):
+    return _kern.gmm_fwd(lhs, rhs, group_sizes, block_c=block_c,
+                         block_n=block_n, block_k=block_k)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _gmm(lhs, rhs, group_sizes, block_c, block_n, block_k):
+    return _impl(lhs, rhs, group_sizes, block_c, block_n, block_k)
+
+
+def _gmm_fwd(lhs, rhs, group_sizes, block_c, block_n, block_k):
+    return _impl(lhs, rhs, group_sizes, block_c, block_n, block_k), \
+        (lhs, rhs, group_sizes)
+
+
+def _gmm_bwd(block_c, block_n, block_k, res, g):
+    lhs, rhs, group_sizes = res
+    c = lhs.shape[1]
+    row = jnp.arange(c)[None, :, None]
+    gm = jnp.where(row < group_sizes[:, None, None], g.astype(jnp.float32), 0.0)
+    dlhs = jnp.einsum("ecn,ekn->eck", gm,
+                      rhs.astype(jnp.float32)).astype(lhs.dtype)
+    drhs = jnp.einsum("eck,ecn->ekn", lhs.astype(jnp.float32),
+                      gm).astype(rhs.dtype)
+    return dlhs, drhs, None
+
+
+_gmm.defvjp(_gmm_fwd, _gmm_bwd)
+
+
+def gmm(lhs, rhs, group_sizes, *, block_c: int = 512, block_n: int = 512,
+        block_k: int = 512):
+    """(E, C, K) @ (E, K, N) -> (E, C, N) with per-expert valid-row masking."""
+    return _gmm(lhs, rhs, group_sizes, block_c, block_n, block_k)

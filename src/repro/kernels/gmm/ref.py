@@ -1,0 +1,15 @@
+"""Oracle for the grouped (expert-batched) matmul used by MoE layers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_ref(lhs, rhs, group_sizes):
+    """lhs: (E, C, K) capacity-layout tokens; rhs: (E, K, N);
+    group_sizes: (E,) valid rows per expert.  Rows >= size are zeroed."""
+    out = jnp.einsum("eck,ekn->ecn", lhs.astype(jnp.float32),
+                     rhs.astype(jnp.float32))
+    c = lhs.shape[1]
+    row = jnp.arange(c)[None, :, None]
+    out = jnp.where(row < group_sizes[:, None, None], out, 0.0)
+    return out.astype(lhs.dtype)

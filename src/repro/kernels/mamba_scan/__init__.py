@@ -1,0 +1,1 @@
+from repro.kernels.mamba_scan.ops import mamba_scan  # noqa: F401

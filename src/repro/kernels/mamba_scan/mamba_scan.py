@@ -1,0 +1,85 @@
+"""Chunked selective-scan Pallas kernel (portable-runtime form).
+
+TPU adaptation of the CUDA selective-scan: instead of one thread block
+per (batch, d_inner-slice) doing a warp-level scan, the grid walks
+(batch, seq-chunk) with the SSM state carried across chunks in shared
+VMEM scratch (sequential grid axis), and the per-step update runs as
+(d_inner, d_state) VPU-wide elementwise ops.  The time loop inside a
+chunk is a lax.fori_loop over VMEM-resident blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.runtime import DeviceRuntime, kernel_call
+
+
+def _mamba_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hout_ref,
+                  h_ref, *, rt: DeviceRuntime, chunk: int):
+    ic = rt.team_id(1)
+    nc = rt.num_teams(1)
+
+    @rt.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)            # (d, n)
+    dvec = d_ref[...].astype(jnp.float32)         # (1, d)
+
+    def step(t, _):
+        xt = x_ref[0, t].astype(jnp.float32)      # (d,)
+        dtt = dt_ref[0, t].astype(jnp.float32)    # (d,)
+        bt = b_ref[0, t].astype(jnp.float32)      # (n,)
+        ct = c_ref[0, t].astype(jnp.float32)      # (n,)
+        decay = jnp.exp(a * dtt[:, None])         # (d, n)
+        h = decay * h_ref[...] + (dtt * xt)[:, None] * bt[None, :]
+        h_ref[...] = h
+        y = jnp.sum(h * ct[None, :], axis=1) + dvec[0] * xt
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0, unroll=False)
+
+    @rt.when(ic == nc - 1)
+    def _emit_state():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+def mamba_scan_fwd(x, dt, A, Bm, Cm, D, *, chunk: int = 64,
+                   rt: DeviceRuntime = None):
+    from repro.core.runtime import runtime
+    rt = rt or runtime()
+    b, s, d_inner = x.shape
+    d_state = A.shape[1]
+    chunk = min(chunk, s)
+    nc = pl.cdiv(s, chunk)
+
+    kern = functools.partial(_mamba_kernel, rt=rt, chunk=chunk)
+    d2 = D.reshape(1, d_inner)
+    y, hT = kernel_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((b, s, d_inner), x.dtype),
+                   jax.ShapeDtypeStruct((b, d_inner, d_state), jnp.float32)),
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_inner), lambda ib, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, d_inner), lambda ib, ic: (ib, ic, 0)),
+            pl.BlockSpec((d_inner, d_state), lambda ib, ic: (0, 0)),
+            pl.BlockSpec((1, chunk, d_state), lambda ib, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, d_state), lambda ib, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, d_inner), lambda ib, ic: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, chunk, d_inner), lambda ib, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, d_inner, d_state), lambda ib, ic: (ib, 0, 0)),
+        ),
+        scratch_shapes=[rt.alloc_shared((d_inner, d_state), jnp.float32)],
+        dimension_semantics=("parallel", "arbitrary"),
+        name="portable_mamba_scan",
+        rt=rt,
+    )(x, dt, A, Bm, Cm, d2)
+    return y, hT

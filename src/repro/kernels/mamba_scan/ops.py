@@ -1,0 +1,46 @@
+"""Public selective-scan op (differentiable via ref-recompute vjp)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.variant import declare_target, declare_variant, match, arch
+from repro.kernels.mamba_scan import ref as _ref
+from repro.kernels.mamba_scan import mamba_scan as _kern
+
+
+@declare_target(name="mamba_scan_impl")
+def _impl(x, dt, A, Bm, Cm, D, chunk):
+    return _ref.mamba_scan_ref(x, dt, A, Bm, Cm, D)
+
+
+@declare_variant(_impl, match=match(device=arch("tpu", "interpret"),
+                                    implementation="match_any"))
+def _impl_pallas(x, dt, A, Bm, Cm, D, chunk):
+    return _kern.mamba_scan_fwd(x, dt, A, Bm, Cm, D, chunk=chunk)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _scan(x, dt, A, Bm, Cm, D, chunk):
+    return _impl(x, dt, A, Bm, Cm, D, chunk)
+
+
+def _scan_fwd(x, dt, A, Bm, Cm, D, chunk):
+    return _impl(x, dt, A, Bm, Cm, D, chunk), (x, dt, A, Bm, Cm, D)
+
+
+def _scan_bwd(chunk, res, g):
+    x, dt, A, Bm, Cm, D = res
+    gy, gh = g
+    _, vjp = jax.vjp(
+        lambda *a: _ref.mamba_scan_ref(*a), x, dt, A, Bm, Cm, D)
+    return vjp((gy, gh))
+
+
+_scan.defvjp(_scan_fwd, _scan_bwd)
+
+
+def mamba_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 64):
+    """Selective scan; returns (y (B,S,d_inner), h_T (B,d_inner,d_state))."""
+    return _scan(x, dt, A, Bm, Cm, D, chunk)

@@ -1,0 +1,35 @@
+"""Oracle for the Mamba selective scan (diagonal SSM recurrence).
+
+    h_t = exp(A * dt_t) * h_{t-1} + (dt_t * x_t) B_t^T      (outer product)
+    y_t = h_t C_t + D * x_t
+
+with A (d_inner, d_state) negative log-decay, dt softplus-activated by
+the caller.  Shapes: x/dt (B, S, d_inner); Bm/Cm (B, S, d_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(x, dt, A, Bm, Cm, D, *, h0=None):
+    b, s, d_inner = x.shape
+    d_state = A.shape[1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    Af, Df = A.astype(jnp.float32), D.astype(jnp.float32)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs                    # (B,d) (B,d) (B,n) (B,n)
+        decay = jnp.exp(Af[None] * dtt[:, :, None])  # (B, d, n)
+        h = decay * h + (dtt * xt)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct) + Df[None] * xt
+        return h, y
+
+    from repro.core.scan_utils import chunked_scan
+    h0 = jnp.zeros((b, d_inner, d_state), jnp.float32) if h0 is None else h0
+    hT, ys = chunked_scan(
+        step, h0,
+        (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+         Bf.swapaxes(0, 1), Cf.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), hT

@@ -1,0 +1,1 @@
+from repro.kernels.mlstm_scan.ops import mlstm_scan  # noqa: F401

@@ -1,0 +1,92 @@
+"""Chunked mLSTM matrix-memory Pallas kernel (portable-runtime form).
+
+Grid walks (batch, head, seq-chunk); the (Dk, Dv) matrix memory, the
+(Dk,) normalizer and the scalar stabilizer are carried across chunks in
+shared VMEM/SMEM scratch (sequential chunk axis).  The stabilizer lives
+in SMEM via ``rt.alloc_scalar`` — scalar control state in scalar memory,
+the allocate-directive mapping of DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.runtime import DeviceRuntime, kernel_call
+
+NEG_BIG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, h_ref,
+                  c_ref, n_ref, m_ref, *, rt: DeviceRuntime, chunk: int,
+                  scale: float):
+    ic = rt.team_id(2)
+
+    @rt.when(ic == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[0] = NEG_BIG
+
+    def step(t, _):
+        qt = q_ref[0, 0, t].astype(jnp.float32) * scale   # (Dk,)
+        kt = k_ref[0, 0, t].astype(jnp.float32) * scale
+        vt = v_ref[0, 0, t].astype(jnp.float32)           # (Dv,)
+        it = i_ref[0, 0, t, 0].astype(jnp.float32)
+        ft = jax.nn.log_sigmoid(f_ref[0, 0, t, 0].astype(jnp.float32))
+
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(ft + m_prev, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m_prev - m_new)
+
+        c_ref[...] = f_p * c_ref[...] + i_p * (kt[:, None] * vt[None, :])
+        n_ref[...] = f_p * n_ref[...] + i_p * kt[None, :]
+        m_ref[0] = m_new
+
+        num = jnp.sum(c_ref[...] * qt[:, None], axis=0)   # (Dv,)
+        den = jnp.maximum(jnp.abs(jnp.sum(n_ref[0, :] * qt)),
+                          jnp.exp(-m_new))
+        h_ref[0, 0, t] = (num / den).astype(h_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0, unroll=False)
+
+
+def mlstm_scan_fwd(q, k, v, i_gate, f_gate, *, chunk: int = 64,
+                   rt: DeviceRuntime = None):
+    from repro.core.runtime import runtime
+    rt = rt or runtime()
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    scale = dk ** -0.5
+    chunk = min(chunk, s)
+    nc = pl.cdiv(s, chunk)
+    ig = i_gate[..., None]
+    fg = f_gate[..., None]
+
+    kern = functools.partial(_mlstm_kernel, rt=rt, chunk=chunk, scale=scale)
+    return kernel_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dv), q.dtype),
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, dk), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, dk), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, dv), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda ib, ih, ic: (ib, ih, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, dv),
+                               lambda ib, ih, ic: (ib, ih, ic, 0)),
+        scratch_shapes=[
+            rt.alloc_shared((dk, dv), jnp.float32),
+            rt.alloc_shared((1, dk), jnp.float32),
+            rt.alloc_scalar((1,), jnp.float32),
+        ],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        name="portable_mlstm_scan",
+        rt=rt,
+    )(q, k, v, ig, fg)

@@ -1,0 +1,45 @@
+"""Public mLSTM scan op (differentiable via ref-recompute vjp)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.variant import declare_target, declare_variant, match, arch
+from repro.kernels.mlstm_scan import ref as _ref
+from repro.kernels.mlstm_scan import mlstm_scan as _kern
+
+
+@declare_target(name="mlstm_scan_impl")
+def _impl(q, k, v, i_gate, f_gate, chunk):
+    return _ref.mlstm_scan_ref(q, k, v, i_gate, f_gate)
+
+
+@declare_variant(_impl, match=match(device=arch("tpu", "interpret"),
+                                    implementation="match_any"))
+def _impl_pallas(q, k, v, i_gate, f_gate, chunk):
+    return _kern.mlstm_scan_fwd(q, k, v, i_gate, f_gate, chunk=chunk)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _scan(q, k, v, i_gate, f_gate, chunk):
+    return _impl(q, k, v, i_gate, f_gate, chunk)
+
+
+def _scan_fwd(q, k, v, i_gate, f_gate, chunk):
+    return _impl(q, k, v, i_gate, f_gate, chunk), (q, k, v, i_gate, f_gate)
+
+
+def _scan_bwd(chunk, res, g):
+    q, k, v, i_gate, f_gate = res
+    _, vjp = jax.vjp(lambda *a: _ref.mlstm_scan_ref(*a),
+                     q, k, v, i_gate, f_gate)
+    return vjp(g)
+
+
+_scan.defvjp(_scan_fwd, _scan_bwd)
+
+
+def mlstm_scan(q, k, v, i_gate, f_gate, *, chunk: int = 64):
+    """Stabilized mLSTM: q,k (B,H,S,Dk), v (B,H,S,Dv), gates (B,H,S)."""
+    return _scan(q, k, v, i_gate, f_gate, chunk)

@@ -1,0 +1,54 @@
+"""Oracle for the xLSTM mLSTM matrix-memory recurrence (stabilized).
+
+Per head (xLSTM paper eqs. 19-27):
+    m_t = max(log_sig(f_t) + m_{t-1}, i_t)                (stabilizer)
+    i'  = exp(i_t - m_t);  f' = exp(log_sig(f_t) + m_{t-1} - m_t)
+    C_t = f' C_{t-1} + i' k_t v_t^T
+    n_t = f' n_{t-1} + i' k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, exp(-m_t))
+
+Shapes: q,k (B,H,S,Dk); v (B,H,S,Dv); i,f (B,H,S) pre-activations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_scan_ref(q, k, v, i_gate, f_gate, *, return_state: bool = False):
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    scale = dk ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32) * scale
+    vf = v.astype(jnp.float32)
+    ig = i_gate.astype(jnp.float32)
+    fg = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+
+    def step(carry, inputs):
+        C, n, m = carry                               # (B,H,Dk,Dv) (B,H,Dk) (B,H)
+        qt, kt, vt, it, ft = inputs
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))
+        hid = num / den[..., None]
+        return (C, n, m_new), hid
+
+    C0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    from repro.core.scan_utils import chunked_scan
+    sw = lambda x: x.swapaxes(0, 2).swapaxes(1, 2)    # (B,H,S,..)->(S,B,H,..)
+    (c_t, n_t, m_t), hs = chunked_scan(
+        step, (C0, n0, m0),
+        (sw(qf), sw(kf), sw(vf), sw(ig), sw(fg)))
+    out = hs.swapaxes(0, 1).swapaxes(1, 2)            # back to (B,H,S,Dv)
+    if return_state:
+        return out.astype(q.dtype), (c_t, n_t, m_t)
+    return out.astype(q.dtype)

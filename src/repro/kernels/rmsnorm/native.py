@@ -1,0 +1,46 @@
+"""RMSNorm the pre-paper way (hard-coded pallas/pltpu) for §4.1 parity."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rms_kernel_native(x_ref, w_ref, o_ref, *, eps, weight_offset, d):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.sum(x * x, axis=-1, keepdims=True) * (1.0 / d)
+    y = x * jax.lax.rsqrt(var + eps)
+    y = y * (w_ref[...].astype(jnp.float32) + weight_offset)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_native(x, w, *, eps: float = 1e-6, weight_offset: float = 0.0,
+                   block_rows: int = 256, interpret: bool = True):
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    kern = functools.partial(_rms_kernel_native, eps=eps,
+                             weight_offset=weight_offset, d=d)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel",))
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        grid=(pl.cdiv(rows, block_rows),),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        interpret=interpret,
+        name="native_rmsnorm",
+        **kwargs,
+    )(x2, w)
+    return out.reshape(orig_shape)

@@ -1,0 +1,48 @@
+"""Public fused-RMSNorm op (differentiable via ref-recompute vjp)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.variant import declare_target, declare_variant, match, arch
+from repro.kernels.rmsnorm import ref as _ref
+from repro.kernels.rmsnorm import rmsnorm as _kern
+
+
+@declare_target(name="rmsnorm_impl")
+def _impl(x, w, eps, weight_offset, block_rows):
+    return _ref.rmsnorm_ref(x, w, eps=eps, weight_offset=weight_offset)
+
+
+@declare_variant(_impl, match=match(device=arch("tpu", "interpret"),
+                                    implementation="match_any"))
+def _impl_pallas(x, w, eps, weight_offset, block_rows):
+    return _kern.rmsnorm_fwd(x, w, eps=eps, weight_offset=weight_offset,
+                             block_rows=block_rows)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _rms(x, w, eps, weight_offset, block_rows):
+    return _impl(x, w, eps, weight_offset, block_rows)
+
+
+def _rms_fwd(x, w, eps, weight_offset, block_rows):
+    return _impl(x, w, eps, weight_offset, block_rows), (x, w)
+
+
+def _rms_bwd(eps, weight_offset, block_rows, res, g):
+    x, w = res
+    _, vjp = jax.vjp(
+        lambda x_, w_: _ref.rmsnorm_ref(x_, w_, eps=eps,
+                                        weight_offset=weight_offset), x, w)
+    return vjp(g)
+
+
+_rms.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, weight_offset: float = 0.0,
+            block_rows: int = 256):
+    """Fused RMSNorm: x * rsqrt(mean(x^2)+eps) * (w + offset)."""
+    return _rms(x, w, eps, weight_offset, block_rows)

@@ -1,0 +1,21 @@
+"""Oracle for fused RMSNorm (optionally with residual add)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, residual=None, *, eps: float = 1e-6,
+                weight_offset: float = 0.0):
+    """x: (..., D); w: (D,).  gemma convention uses weight_offset=1.0."""
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax_rsqrt(var + eps)
+    y = y * (w.astype(jnp.float32) + weight_offset)
+    return y.astype(x.dtype)
+
+
+def jax_rsqrt(v):
+    import jax.lax
+    return jax.lax.rsqrt(v)

@@ -1,0 +1,49 @@
+"""Fused RMSNorm Pallas kernel (portable-runtime form)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.runtime import DeviceRuntime, kernel_call
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, rt: DeviceRuntime, eps: float,
+                weight_offset: float, d: int):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.sum(x * x, axis=-1, keepdims=True) * (1.0 / d)
+    y = x * jax.lax.rsqrt(var + eps)
+    y = y * (w_ref[...].astype(jnp.float32) + weight_offset)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_fwd(x, w, *, eps: float = 1e-6, weight_offset: float = 0.0,
+                block_rows: int = 256, rt: DeviceRuntime = None):
+    from repro.core.runtime import runtime
+    rt = rt or runtime()
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+
+    kern = functools.partial(_rms_kernel, rt=rt, eps=eps,
+                             weight_offset=weight_offset, d=d)
+    out = kernel_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        grid=(pl.cdiv(rows, block_rows),),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        dimension_semantics=("parallel",),
+        name="portable_rmsnorm",
+        rt=rt,
+    )(x2, w)
+    return out.reshape(orig_shape)

@@ -1,0 +1,232 @@
+"""Attention blocks: GQA (global/local/softcap/qk-norm) and DeepSeek MLA.
+
+Three entry points per block:
+  init_*            — parameter trees (names match sharding/partition.py)
+  apply_* (train/prefill) — full-sequence attention via the portable
+                      flash kernel ops (variant-dispatched)
+  decode_*          — one-token step against a KV cache via the portable
+                      decode kernel (SP-ready residuals handled in serve/)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.sharding.kernel_sharding import (
+    sharded_flash_attention as flash_attention,
+    sharded_decode_attention as decode_attention,
+    sharded_decode_update_attend as decode_update_attend,
+)
+from repro.models import layers as L
+
+
+# ------------------------------------------------------------- GQA ------
+
+def init_attn(key, cfg: ModelConfig):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], (d, h, hd), in_axis_size=d),
+        "wk": L.dense_init(ks[1], (d, hkv, hd), in_axis_size=d),
+        "wv": L.dense_init(ks[2], (d, hkv, hd), in_axis_size=d),
+        "wo": L.dense_init(ks[3], (h, hd, d), in_axis_size=h * hd),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = L.norm_param(hd)
+        p["k_norm"] = L.norm_param(hd)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, positions, theta: float):
+    xd = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(xd))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(xd))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(xd))
+    if cfg.use_qk_norm:
+        q = L.apply_norm(p["q_norm"], q, cfg)
+        k = L.apply_norm(p["k_norm"], k, cfg)
+    cos, sin = L.rope_cache(positions, cfg.head_dim, theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def apply_attn(p, x, cfg: ModelConfig, *, kind: str = "global",
+               causal: bool = True, positions=None,
+               kv_override: Optional[Tuple] = None, theta=None,
+               return_kv: bool = False):
+    """Full-sequence attention.  kind: 'global' | 'local'.
+
+    kv_override: (k, v) from an encoder for cross-attention (no rope
+    reuse; caller passes encoder-side tensors already projected).
+    return_kv: also return the rope'd (k, v) for prefill caching."""
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    theta = theta if theta is not None else cfg.rope_theta
+    window = cfg.window if kind == "local" else None
+
+    if kv_override is None:
+        q, k, v = _qkv(p, x, cfg, positions, theta)
+    else:
+        xd = x.dtype
+        q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(xd))
+        if cfg.use_qk_norm:
+            q = L.apply_norm(p["q_norm"], q, cfg)
+        cos, sin = L.rope_cache(positions, cfg.head_dim, theta)
+        q = L.apply_rope(q, cos, sin)
+        k, v = kv_override
+
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=cfg.attn_softcap)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return y, k, v
+    return y
+
+
+def project_kv(p, x_enc, cfg: ModelConfig, positions=None, theta=None):
+    """Encoder-side K/V for cross attention (rope applied)."""
+    xd = x_enc.dtype
+    s = x_enc.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)
+    theta = theta if theta is not None else cfg.rope_theta
+    k = jnp.einsum("bsd,dhk->bhsk", x_enc, p["wk"].astype(xd))
+    v = jnp.einsum("bsd,dhk->bhsk", x_enc, p["wv"].astype(xd))
+    if cfg.use_qk_norm:
+        k = L.apply_norm(p["k_norm"], k, cfg)
+    cos, sin = L.rope_cache(positions, cfg.head_dim, theta)
+    k = L.apply_rope(k, cos, sin)
+    return k, v
+
+
+def decode_attn(p, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
+                kind: str = "global", theta=None, ring: bool = False):
+    """One-token decode.  x: (B, 1, d).  Returns (out (B,1,d), new_k, new_v,
+    write_pos (B,)): caller owns the cache update (sharded in serve/).
+
+    ring=True: cache length == window, slots addressed mod window.
+    """
+    b = x.shape[0]
+    theta = theta if theta is not None else cfg.rope_theta
+    xd = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(xd))[:, :, 0]   # (B,H,hd)
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(xd))[:, :, 0]
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(xd))[:, :, 0]
+    if cfg.use_qk_norm:
+        q = L.apply_norm(p["q_norm"], q, cfg)
+        k = L.apply_norm(p["k_norm"], k, cfg)
+    cos, sin = L.rope_cache(lengths, cfg.head_dim, theta)   # (B, hd/2)
+    q = L.apply_rope(q, cos[:, None, :], sin[:, None, :])
+    k = L.apply_rope(k, cos[:, None, :], sin[:, None, :])
+
+    s_cache = cache_k.shape[2]
+    if ring:
+        write_pos = lengths % s_cache
+        eff_len = jnp.minimum(lengths + 1, s_cache)
+        window = None
+    else:
+        write_pos = lengths
+        eff_len = lengths + 1
+        window = cfg.window if kind == "local" else None
+
+    # fused cache-update + attend: the new (k, v) is written at
+    # write_pos INSIDE the sharded region (§Perf-B.1)
+    out, ck, cv = decode_update_attend(
+        q, k, v, cache_k, cache_v, write_pos.astype(jnp.int32),
+        eff_len.astype(jnp.int32), window=window, softcap=cfg.attn_softcap)
+    o = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(xd))[:, None, :]
+    return o, ck, cv
+
+
+# ------------------------------------------------------------- MLA ------
+
+def init_mla(key, cfg: ModelConfig):
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq_mla": L.dense_init(ks[0], (d, h, qk), in_axis_size=d),
+        "wkv_a": L.dense_init(ks[1], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                              in_axis_size=d),
+        "wkv_b": L.dense_init(ks[2], (m.kv_lora_rank, h,
+                                      m.qk_nope_head_dim + m.v_head_dim),
+                              in_axis_size=m.kv_lora_rank),
+        "wo_mla": L.dense_init(ks[3], (h, m.v_head_dim, d),
+                               in_axis_size=h * m.v_head_dim),
+    }
+
+
+def apply_mla(p, x, cfg: ModelConfig, positions=None,
+              return_kv: bool = False):
+    """DeepSeek MLA attention (full sequence, causal).
+
+    Latent c_kv (B,S,lora) + shared rope key; per-head K = [up-projected
+    nope | shared rope], Q = [nope | rope].
+    """
+    m: MLAConfig = cfg.mla
+    b, s, d = x.shape
+    h = cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(s)
+    xd = x.dtype
+
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq_mla"].astype(xd))
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    cos, sin = L.rope_cache(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+
+    kv_a = x @ p["wkv_a"].astype(xd)                       # (B,S,lora+rope)
+    c_kv, k_rope = kv_a[..., :m.kv_lora_rank], kv_a[..., m.kv_lora_rank:]
+    k_rope = L.apply_rope(k_rope[:, None], cos, sin)       # (B,1,S,rope)
+    kv = jnp.einsum("bsl,lhk->bhsk", c_kv, p["wkv_b"].astype(xd))
+    k_nope = kv[..., :m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim:]
+
+    k_rope_b = jnp.broadcast_to(k_rope, (b, h, s, m.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    out = flash_attention(q_full, k_full, v, causal=True,
+                          scale=qk_dim ** -0.5)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo_mla"].astype(xd))
+    if return_kv:
+        return y, k_full, v
+    return y
+
+
+def decode_mla(p, x, cache_k, cache_v, lengths, cfg: ModelConfig):
+    """MLA decode.  We cache the *materialized* per-head K/V (simple
+    variant; latent-cache decode is a further memory optimization —
+    DESIGN.md notes it as future work)."""
+    m: MLAConfig = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    xd = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq_mla"].astype(xd))[:, :, 0]
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    cos, sin = L.rope_cache(lengths, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = L.apply_rope(q_rope, cos[:, None], sin[:, None])
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    kv_a = (x @ p["wkv_a"].astype(xd))[:, 0]
+    c_kv, k_rope = kv_a[..., :m.kv_lora_rank], kv_a[..., m.kv_lora_rank:]
+    k_rope = L.apply_rope(k_rope[:, None], cos[:, None], sin[:, None])
+    kv = jnp.einsum("bl,lhk->bhk", c_kv, p["wkv_b"].astype(xd))
+    k_nope = kv[..., :m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim:]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, h, m.qk_rope_head_dim))], -1)
+
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    out, ck, cv = decode_update_attend(
+        q_full, k_full, v, cache_k, cache_v, lengths.astype(jnp.int32),
+        (lengths + 1).astype(jnp.int32), scale=qk_dim ** -0.5)
+    o = jnp.einsum("bhk,hkd->bd", out, p["wo_mla"].astype(xd))[:, None, :]
+    return o, ck, cv

@@ -1,0 +1,334 @@
+"""Mixture-of-Experts with expert parallelism (EP) over the 'data' axis.
+
+Dispatch design (DESIGN.md §5): tokens are routed with a capacity-bounded
+scatter (no (T, E, C) one-hot dispatch tensors — destinations are computed
+with per-expert running counts and a single scatter-add), exchanged with
+``lax.all_to_all`` over the 'data' axis inside a full-manual ``shard_map``,
+and run through the portable grouped-matmul kernel (``repro.kernels.gmm``)
+with the FFN dim sharded over 'model' (TP inside EP).  The down-projection
+partial sums ride back through the reverse all-to-all and a single psum
+over 'model' at the end.
+
+Three execution paths, chosen at trace time:
+  * a2a       — mesh present and the batch divides the DP world: real EP.
+  * psum      — mesh present, tiny batch (e.g. long_500k B=1): tokens are
+                replicated, each shard computes only its own experts and
+                partial token outputs are psummed over ('data', 'model').
+  * local     — no mesh (unit tests / generic target): same dispatch math
+                on one device.
+
+Variants supported per the assigned architectures:
+  * deepseek  — 2 always-on shared experts (fused as one wider MLP).
+  * arctic    — dense residual MLP in parallel with the routed experts.
+  * jamba     — plain top-2, MoE on every other layer.
+
+Aux outputs: load-balance loss (Switch-style f·p), router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.kernels.gmm.ops import gmm
+from repro.models import layers as L
+from repro.sharding.kernel_sharding import maybe_mesh
+
+__all__ = ["init_moe", "apply_moe"]
+
+
+# ------------------------------------------------------------- params ---
+
+def init_moe(key, cfg: ModelConfig):
+    m: MoEConfig = cfg.moe
+    d, e, ff = cfg.d_model, m.num_experts, m.d_ff_expert
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": L.dense_init(ks[0], (d, e)),
+        "we_gate": L.dense_init(ks[1], (e, d, ff), in_axis_size=d),
+        "we_up": L.dense_init(ks[2], (e, d, ff), in_axis_size=d),
+        "we_down": L.dense_init(ks[3], (e, ff, d), in_axis_size=ff),
+    }
+    if m.num_shared_experts > 0:
+        # shared experts concatenate into one wider gated MLP
+        p["shared"] = L.init_mlp(ks[4], d, m.d_ff_shared, cfg.mlp_activation)
+    if m.dense_residual:
+        p["dense"] = L.init_mlp(ks[5], d, cfg.d_ff, cfg.mlp_activation)
+    return p
+
+
+# -------------------------------------------------------- dispatch core --
+
+def _capacity(tokens: int, e: int, k: int, cf: float) -> int:
+    c = int(math.ceil(tokens * k / e * cf))
+    return max(8, -(-c // 8) * 8)        # multiple of 8 (sublane tiling)
+
+
+def _route(router_w, x_flat, k: int):
+    """x_flat: (T, d) -> (probs (T,E) f32, gates (T,k), idx (T,k))."""
+    logits = x_flat.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return logits, probs, gates, idx
+
+
+def _positions(idx, e: int):
+    """Per-assignment position within its expert queue (slot-major)."""
+    t, k = idx.shape
+    counts = jnp.zeros((e,), jnp.int32)
+    pos = []
+    for j in range(k):
+        oh = jax.nn.one_hot(idx[:, j], e, dtype=jnp.int32)        # (T, E)
+        rank = jnp.cumsum(oh, axis=0) - oh
+        base = jnp.take_along_axis(rank, idx[:, j:j + 1], axis=1)[:, 0]
+        pos.append(base + counts[idx[:, j]])
+        counts = counts + oh.sum(0)
+    return jnp.stack(pos, axis=1), counts                          # (T,k),(E,)
+
+
+def _dests(idx, pos, c: int, e: int, owned_lo=None, e_loc: Optional[int] = None):
+    """Flat buffer destinations (sentinel = last row) + keep mask."""
+    keep = pos < c
+    if owned_lo is not None:
+        keep &= (idx >= owned_lo) & (idx < owned_lo + e_loc)
+        local_idx = idx - owned_lo
+        n_rows = e_loc * c
+        dest = jnp.where(keep, local_idx * c + pos, n_rows)
+    else:
+        n_rows = e * c
+        dest = jnp.where(keep, idx * c + pos, n_rows)
+    return dest, keep, n_rows
+
+
+def _scatter(x_flat, dest, keep, n_rows: int):
+    """(T, d) tokens -> (n_rows + 1, d) capacity buffer (row-unique)."""
+    t, d = x_flat.shape
+    k = dest.shape[1]
+    buf = jnp.zeros((n_rows + 1, d), x_flat.dtype)
+    for j in range(k):
+        contrib = jnp.where(keep[:, j:j + 1], x_flat,
+                            jnp.zeros_like(x_flat))
+        buf = buf.at[dest[:, j]].add(contrib)
+    return buf
+
+
+def _gather_combine(y_buf, gates, dest, keep):
+    """(n_rows+1, d) expert outputs -> (T, d) weighted token outputs."""
+    k = dest.shape[1]
+    out = 0.0
+    for j in range(k):
+        yj = y_buf[dest[:, j]].astype(jnp.float32)
+        wj = jnp.where(keep[:, j], gates[:, j], 0.0)
+        out = out + yj * wj[:, None]
+    return out
+
+
+def _expert_ffn(buf_e, wg, wu, wd, activation: str):
+    """buf_e: (E_loc, R, d) -> (E_loc, R, d) partial (ff maybe sharded).
+
+    All capacity rows are 'valid' for gmm: padding rows are exact zeros
+    and stay zero through the gated FFN, so no masking work is needed."""
+    e_loc, r, _ = buf_e.shape
+    gs = jnp.full((e_loc,), r, jnp.int32)
+    h_g = gmm(buf_e, wg, gs)
+    h_u = gmm(buf_e, wu, gs)
+    act = jax.nn.gelu(h_g.astype(jnp.float32), approximate=True) \
+        if activation == "gelu" else jax.nn.silu(h_g.astype(jnp.float32))
+    return gmm((act * h_u.astype(jnp.float32)).astype(buf_e.dtype), wd, gs)
+
+
+def _expert_ffn_sparse(buf_e, wg, wu, wd, activation: str, counts_loc):
+    """Decode-path expert FFN with conditional weight reads (§Perf-B.2).
+
+    At single-token decode only top_k of the (local) experts are routed,
+    but a dense gmm still streams EVERY local expert's weights from HBM
+    — the dominant memory term of MoE decoding.  Each expert runs under
+    ``lax.cond`` on its routed-token count, so XLA skips the weight read
+    (and the matmul) for idle experts.  Used when R is small; training
+    keeps the dense gmm (all experts are busy there)."""
+    e_loc, r, d = buf_e.shape
+
+    def one(be, g, u, dn):
+        hg = be.astype(jnp.float32) @ g.astype(jnp.float32)
+        act = jax.nn.gelu(hg, approximate=True) if activation == "gelu" \
+            else jax.nn.silu(hg)
+        h = act * (be.astype(jnp.float32) @ u.astype(jnp.float32))
+        return (h.astype(be.dtype) @ dn.astype(be.dtype))
+
+    outs = []
+    for e in range(e_loc):
+        outs.append(jax.lax.cond(
+            counts_loc[e] > 0,
+            lambda be, g, u, dn: one(be, g, u, dn),
+            lambda be, g, u, dn: jnp.zeros((r, d), buf_e.dtype),
+            buf_e[e], wg[e], wu[e], wd[e]))
+    return jnp.stack(outs)
+
+
+def _aux_losses(logits, probs, counts, t_tokens, e: int, k: int):
+    """Switch-style load balance + router z-loss (per-shard means)."""
+    frac = counts.astype(jnp.float32) / jnp.maximum(t_tokens * k, 1)
+    mean_p = probs.mean(axis=0)
+    lb = e * jnp.sum(frac * mean_p)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return lb, z
+
+
+# ----------------------------------------------------------- exec paths --
+
+def _moe_tokens_local(p, x_flat, cfg: ModelConfig, c: int):
+    m = cfg.moe
+    e, k = m.num_experts, m.top_k
+    logits, probs, gates, idx = _route(p["router"], x_flat, k)
+    pos, counts = _positions(idx, e)
+    dest, keep, n_rows = _dests(idx, pos, c, e)
+    buf = _scatter(x_flat, dest, keep, n_rows)
+    buf_e = buf[:n_rows].reshape(e, c, -1)
+    y_e = _expert_ffn(buf_e, p["we_gate"].astype(x_flat.dtype),
+                      p["we_up"].astype(x_flat.dtype),
+                      p["we_down"].astype(x_flat.dtype), cfg.mlp_activation)
+    y_buf = jnp.concatenate(
+        [y_e.reshape(n_rows, -1), jnp.zeros((1, y_e.shape[-1]), y_e.dtype)])
+    y = _gather_combine(y_buf, gates, dest, keep)
+    lb, z = _aux_losses(logits, probs, counts, x_flat.shape[0], e, k)
+    return y, lb, z
+
+
+def _apply_moe_mesh(p, x, cfg: ModelConfig, mesh, dp_axes):
+    """Full-manual shard_map MoE: EP a2a + TP gmm + psum('model')."""
+    m = cfg.moe
+    e, k = m.num_experts, m.top_k
+    b, s, d = x.shape
+    ep = mesh.shape.get("data", 1)
+    dp_world = 1
+    for a in dp_axes:
+        dp_world *= mesh.shape[a]
+    ep_sharded = (e % ep == 0) and ep > 1
+    use_a2a = (b % dp_world == 0) and ep_sharded
+    e_loc = e // ep if ep_sharded else e
+    xdt = x.dtype
+    tp = mesh.shape.get("model", 1)
+    ff = m.d_ff_expert
+    ffs = "model" if ff % tp == 0 else None
+
+    x_spec = P(dp_axes, None, None) if b % dp_world == 0 \
+        else P(None, None, None)
+    ea = "data" if ep_sharded else None
+    w_specs = {
+        "router": P(None, None),
+        "we_gate": P(ea, None, ffs),
+        "we_up": P(ea, None, ffs),
+        "we_down": P(ea, ffs, None),
+    }
+    t_loc = (b // dp_world if b % dp_world == 0 else b) * s
+    c = _capacity(t_loc, e, k, m.capacity_factor)
+
+    def body(x_, rw, wg, wu, wd):
+        bl, sl, _ = x_.shape
+        x_flat = x_.reshape(bl * sl, d)
+        logits, probs, gates, idx = _route(rw, x_flat, k)
+        if use_a2a:
+            pos, counts = _positions(idx, e)
+            dest, keep, n_rows = _dests(idx, pos, c, e)
+            buf = _scatter(x_flat, dest, keep, n_rows)
+            buf_e = buf[:n_rows].reshape(e, c, d)
+            # ---- EP dispatch: send expert-chunk i to data-shard i ----
+            recv = jax.lax.all_to_all(buf_e, "data", split_axis=0,
+                                      concat_axis=0, tiled=True)
+            # (ep * E_loc, C, d) grouped by source shard -> rows by expert
+            recv = recv.reshape(ep, e_loc, c, d).transpose(1, 0, 2, 3)
+            rows = recv.reshape(e_loc, ep * c, d)
+            if ep * c <= 64:    # decode-scale: conditional weight reads
+                counts_g = jax.lax.psum(counts, "data")
+                counts_loc = jax.lax.dynamic_slice_in_dim(
+                    counts_g, jax.lax.axis_index("data") * e_loc, e_loc)
+                y_rows = _expert_ffn_sparse(
+                    rows, wg.astype(xdt), wu.astype(xdt), wd.astype(xdt),
+                    cfg.mlp_activation, counts_loc)
+            else:
+                y_rows = _expert_ffn(rows, wg.astype(xdt), wu.astype(xdt),
+                                     wd.astype(xdt), cfg.mlp_activation)
+            # ---- reverse a2a: partial sums ride back to the source ----
+            back = y_rows.reshape(e_loc, ep, c, d).transpose(1, 0, 2, 3)
+            back = back.reshape(ep * e_loc, c, d)
+            y_e = jax.lax.all_to_all(back, "data", split_axis=0,
+                                     concat_axis=0, tiled=True)
+            y_buf = jnp.concatenate(
+                [y_e.reshape(n_rows, d),
+                 jnp.zeros((1, d), y_e.dtype)])
+            y = _gather_combine(y_buf, gates, dest, keep)
+            if ffs is not None:
+                y = jax.lax.psum(y, "model")
+        else:
+            # replicated-token path: each shard computes only its experts
+            pos, counts = _positions(idx, e)
+            lo = jax.lax.axis_index("data") * e_loc if ep_sharded else 0
+            dest, keep, n_rows = _dests(idx, pos, c, e, owned_lo=lo,
+                                        e_loc=e_loc)
+            buf = _scatter(x_flat, dest, keep, n_rows)
+            rows = buf[:n_rows].reshape(e_loc, c, d)
+            if c <= 64:     # decode-scale: conditional weight reads
+                counts_loc = jax.lax.dynamic_slice_in_dim(counts, lo, e_loc) \
+                    if ep_sharded else counts
+                y_rows = _expert_ffn_sparse(
+                    rows, wg.astype(xdt), wu.astype(xdt), wd.astype(xdt),
+                    cfg.mlp_activation, counts_loc)
+            else:
+                y_rows = _expert_ffn(rows, wg.astype(xdt), wu.astype(xdt),
+                                     wd.astype(xdt), cfg.mlp_activation)
+            y_buf = jnp.concatenate(
+                [y_rows.reshape(n_rows, d), jnp.zeros((1, d), y_rows.dtype)])
+            y = _gather_combine(y_buf, gates, dest, keep)
+            axes = tuple(a for a, on in
+                         (("data", ep_sharded), ("model", ffs is not None))
+                         if on)
+            if axes:
+                y = jax.lax.psum(y, axes)
+        lb, z = _aux_losses(logits, probs, counts, x_flat.shape[0], e, k)
+        # aux means across DP shards
+        if dp_axes and x_spec[0] is not None:
+            lb = jax.lax.pmean(lb, dp_axes)
+            z = jax.lax.pmean(z, dp_axes)
+        y = y.reshape(bl, sl, d).astype(xdt)
+        return y, lb, z
+
+    y, lb, z = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, w_specs["router"], w_specs["we_gate"],
+                  w_specs["we_up"], w_specs["we_down"]),
+        out_specs=(x_spec, P(), P()),
+        check_vma=False,
+    )(x, p["router"], p["we_gate"], p["we_up"], p["we_down"])
+    return y, lb, z
+
+
+# ------------------------------------------------------------- public ---
+
+def apply_moe(p, x, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (y (B, S, d), aux {load_balance, router_z}).
+
+    Routed experts (+EP/TP via shard_map when a mesh is active), plus the
+    arch-specific always-on parts (shared experts / dense residual)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    mesh = maybe_mesh()
+
+    if mesh is None:
+        c = _capacity(b * s, m.num_experts, m.top_k, m.capacity_factor)
+        y_flat, lb, z = _moe_tokens_local(p, x.reshape(b * s, d), cfg, c)
+        y = y_flat.reshape(b, s, d).astype(x.dtype)
+    else:
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        y, lb, z = _apply_moe_mesh(p, x, cfg, mesh, dp_axes)
+
+    if m.num_shared_experts > 0:
+        y = y + L.apply_mlp(p["shared"], x, cfg.mlp_activation)
+    if m.dense_residual:
+        y = y + L.apply_mlp(p["dense"], x, cfg.mlp_activation)
+    aux = {"load_balance": lb, "router_z": z}
+    return y, aux

@@ -1,0 +1,139 @@
+"""Mamba (selective SSM) block — used by jamba-1.5 and as a standalone
+family.  Full-sequence path runs the portable ``mamba_scan`` kernel
+(channel-parallel over 'model' via the shard_map wrapper); the decode
+path is a closed-form single-step recurrence in plain jnp (GSPMD
+partitions it natively — no kernel needed for one token).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import layers as L
+from repro.sharding.kernel_sharding import sharded_mamba_scan
+
+__all__ = ["init_mamba", "apply_mamba", "decode_mamba", "mamba_cache"]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, s.d_state, s.d_conv, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, n, d_conv, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias set for softplus(dt) in
+    # [1e-3, 1e-1] (the mamba reference ranges)
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (d_inner, n)))
+    dt = jnp.exp(
+        jax.random.uniform(ks[4], (d_inner,), jnp.float32)
+        * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))      # inverse softplus
+    return {
+        "in_proj": L.dense_init(ks[0], (d, 2 * d_inner)),
+        "conv_w": L.dense_init(ks[1], (d_inner, d_conv), in_axis_size=d_conv),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "x_proj": L.dense_init(ks[2], (d_inner, dt_rank + 2 * n),
+                               in_axis_size=d_inner),
+        "dt_proj": L.dense_init(ks[3], (dt_rank, d_inner),
+                                in_axis_size=dt_rank),
+        "dt_bias": dt_bias,
+        "a_log": a_init,
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": L.dense_init(ks[5], (d_inner, d), in_axis_size=d_inner),
+    }
+
+
+def _causal_conv(x, w, b, *, state=None):
+    """Depthwise causal conv.  x: (B, S, d_inner); w: (d_inner, width).
+
+    ``state``: (B, width-1, d_inner) trailing context from the previous
+    segment (decode); returns (y, new_state)."""
+    bsz, s, d_inner = x.shape
+    width = w.shape[1]
+    if state is None:
+        pad = jnp.zeros((bsz, width - 1, d_inner), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+width-1, d)
+    y = 0.0
+    for i in range(width):                           # width == 4: unrolled
+        y = y + xp[:, i:i + s, :] * w[None, None, :, i].astype(x.dtype)
+    y = y + b.astype(x.dtype)[None, None, :]
+    new_state = xp[:, s:, :] if width > 1 else None
+    return y, new_state
+
+
+def apply_mamba(p, x, cfg: ModelConfig, return_cache: bool = False):
+    """Full-sequence mamba mixer.  x: (B, S, d) -> (y (B, S, d), h_T)
+    or, with return_cache, (y, {'h', 'conv'}) for prefill."""
+    d_inner, n, d_conv, dt_rank = _dims(cfg)
+    xd = x.dtype
+    xz = x @ p["in_proj"].astype(xd)                       # (B, S, 2*di)
+    x_in, z = xz[..., :d_inner], xz[..., d_inner:]
+    x_c, _ = _causal_conv(x_in, p["conv_w"], p["conv_b"])
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(xd)
+
+    proj = x_c @ p["x_proj"].astype(xd)                    # (B,S,rank+2n)
+    dt_r = proj[..., :dt_rank]
+    b_ssm = proj[..., dt_rank:dt_rank + n].astype(jnp.float32)
+    c_ssm = proj[..., dt_rank + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_r.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"][None, None])                        # (B,S,di) f32
+    a = -jnp.exp(p["a_log"])                               # (di, n)
+
+    y, h_t = sharded_mamba_scan(x_c, dt.astype(xd), a, b_ssm.astype(xd),
+                                c_ssm.astype(xd), p["d_skip"])
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(xd) @ p["out_proj"].astype(xd)
+    if return_cache:
+        tail = x_in[:, x.shape[1] - (d_conv - 1):, :] if x.shape[1] >= d_conv - 1 \
+            else jnp.pad(x_in, [(0, 0), (d_conv - 1 - x.shape[1], 0), (0, 0)])
+        return out, {"h": h_t, "conv": tail}
+    return out, h_t
+
+
+def mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    d_inner, n, d_conv, _ = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, d_inner, n), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+    }
+
+
+def decode_mamba(p, x, cache, cfg: ModelConfig):
+    """One-token step.  x: (B, 1, d); cache: {'h', 'conv'}."""
+    d_inner, n, d_conv, dt_rank = _dims(cfg)
+    xd = x.dtype
+    xz = x @ p["in_proj"].astype(xd)
+    x_in, z = xz[..., :d_inner], xz[..., d_inner:]
+    x_c, conv_state = _causal_conv(x_in, p["conv_w"], p["conv_b"],
+                                   state=cache["conv"])
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(xd)
+
+    proj = x_c @ p["x_proj"].astype(xd)
+    dt_r = proj[..., :dt_rank]
+    b_ssm = proj[..., dt_rank:dt_rank + n].astype(jnp.float32)[:, 0]
+    c_ssm = proj[..., dt_rank + n:].astype(jnp.float32)[:, 0]
+    dt = jax.nn.softplus(
+        dt_r.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"][None, None])[:, 0]                  # (B, di)
+    a = -jnp.exp(p["a_log"])                               # (di, n)
+
+    xt = x_c.astype(jnp.float32)[:, 0]                     # (B, di)
+    decay = jnp.exp(a[None] * dt[:, :, None])              # (B, di, n)
+    h = decay * cache["h"] + (dt * xt)[:, :, None] * b_ssm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm) + p["d_skip"][None] * xt
+    y = y * jax.nn.silu(z.astype(jnp.float32)[:, 0])
+    out = (y.astype(xd) @ p["out_proj"].astype(xd))[:, None, :]
+    return out, {"h": h, "conv": conv_state}

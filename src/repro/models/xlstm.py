@@ -1,0 +1,275 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable
+— runs the portable ``mlstm_scan`` kernel) and sLSTM (scalar memory with
+recurrent gate mixing — inherently sequential, ``lax.scan``).
+
+Block layout follows the paper: both are *residually wrapped mixers*
+that subsume the feed-forward (d_ff = 0 in the arch table):
+  mLSTM block: LN -> up-proj (x2) -> conv4/silu -> q,k,v -> mLSTM cell
+               -> per-head norm -> gate with silu(z) -> down-proj.
+  sLSTM block: LN -> conv4/silu -> 4 gates (input + per-head recurrent)
+               -> cell -> per-head norm -> gated FFN (factor 4/3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+from repro.sharding.kernel_sharding import sharded_rmsnorm as rmsnorm
+from repro.models import layers as L
+from repro.models.ssm import _causal_conv
+from repro.sharding.kernel_sharding import sharded_mlstm_scan
+
+__all__ = [
+    "init_mlstm", "apply_mlstm", "decode_mlstm", "mlstm_cache",
+    "init_slstm", "apply_slstm", "decode_slstm", "slstm_cache",
+]
+
+
+# ------------------------------------------------------------- mLSTM ----
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    x: XLSTMConfig = cfg.xlstm
+    d_inner = int(cfg.d_model * x.proj_factor_mlstm)
+    dh = d_inner // x.num_heads
+    return d_inner, x.num_heads, dh
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    x: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    d_inner, h, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up1": L.dense_init(ks[0], (d, d_inner)),            # x branch
+        "w_up2": L.dense_init(ks[1], (d, d_inner)),            # z gate
+        "conv_w": L.dense_init(ks[2], (d_inner, x.conv_width),
+                               in_axis_size=x.conv_width),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "wq": L.dense_init(ks[3], (d_inner, d_inner), in_axis_size=d_inner),
+        "wk": L.dense_init(ks[4], (d_inner, d_inner), in_axis_size=d_inner),
+        "wv": L.dense_init(ks[5], (d_inner, d_inner), in_axis_size=d_inner),
+        "w_i": L.dense_init(ks[6], (d_inner, h), in_axis_size=d_inner),
+        "w_f": L.dense_init(ks[7], (d_inner, h), in_axis_size=d_inner),
+        # forget-gate bias init: positive -> long memory at init
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),
+        "head_norm": jnp.zeros((d_inner,), jnp.float32),
+        "w_down": L.dense_init(ks[8], (d_inner, d), in_axis_size=d_inner),
+    }
+
+
+def _mlstm_qkvif(p, x_c, x_in, cfg: ModelConfig):
+    """Project conv output to per-head q,k,v and scalar gates."""
+    d_inner, h, dh = _mlstm_dims(cfg)
+    xd = x_c.dtype
+    b, s, _ = x_c.shape
+
+    def heads(t):                         # (B,S,di) -> (B,H,S,dh)
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    q = heads(x_c @ p["wq"].astype(xd))
+    k = heads(x_c @ p["wk"].astype(xd))
+    v = heads(x_in @ p["wv"].astype(xd))  # v from the pre-conv branch
+    ig = (x_c.astype(jnp.float32) @ p["w_i"].astype(jnp.float32)
+          + p["b_i"]).transpose(0, 2, 1)  # (B,H,S)
+    fg = (x_c.astype(jnp.float32) @ p["w_f"].astype(jnp.float32)
+          + p["b_f"]).transpose(0, 2, 1)
+    return q, k, v, ig, fg
+
+
+def apply_mlstm(p, x, cfg: ModelConfig, return_cache: bool = False):
+    """Full-sequence mLSTM block body (pre-norm residual added by caller).
+
+    With return_cache the final (C, n, m) state is also needed, which the
+    output-only kernel does not expose — the prefill path runs the oracle
+    recurrence (serving prefill only; training uses the kernel)."""
+    d_inner, h, dh = _mlstm_dims(cfg)
+    x_cfg: XLSTMConfig = cfg.xlstm
+    xd = x.dtype
+    b, s, _ = x.shape
+    x_in = x @ p["w_up1"].astype(xd)                       # (B,S,di)
+    z = x @ p["w_up2"].astype(xd)
+    x_c, _ = _causal_conv(x_in, p["conv_w"], p["conv_b"])
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(xd)
+
+    q, k, v, ig, fg = _mlstm_qkvif(p, x_c, x_in, cfg)
+    state = None
+    if return_cache:
+        from repro.kernels.mlstm_scan.ref import mlstm_scan_ref
+        hid, state = mlstm_scan_ref(q, k, v, ig, fg, return_state=True)
+    else:
+        hid = sharded_mlstm_scan(q, k, v, ig, fg)          # (B,H,S,dh)
+    hid = hid.transpose(0, 2, 1, 3).reshape(b, s, d_inner)
+    hid = rmsnorm(hid, p["head_norm"].astype(xd), weight_offset=1.0)
+    hid = hid.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    out = hid.astype(xd) @ p["w_down"].astype(xd)
+    if return_cache:
+        w = x_cfg.conv_width - 1
+        tail = x_in[:, s - w:, :] if s >= w else \
+            jnp.pad(x_in, [(0, 0), (w - s, 0), (0, 0)])
+        c_t, n_t, m_t = state
+        return out, {"C": c_t, "n": n_t, "m": m_t, "conv": tail}
+    return out
+
+
+def mlstm_cache(cfg: ModelConfig, batch: int, dtype):
+    x: XLSTMConfig = cfg.xlstm
+    d_inner, h, dh = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, x.conv_width - 1, d_inner), dtype),
+    }
+
+
+def decode_mlstm(p, x, cache, cfg: ModelConfig):
+    """One-token mLSTM step.  x: (B, 1, d)."""
+    d_inner, h, dh = _mlstm_dims(cfg)
+    xd = x.dtype
+    b = x.shape[0]
+    x_in = x @ p["w_up1"].astype(xd)
+    z = x @ p["w_up2"].astype(xd)
+    x_c, conv_state = _causal_conv(x_in, p["conv_w"], p["conv_b"],
+                                   state=cache["conv"])
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(xd)
+
+    q, k, v, ig, fg = _mlstm_qkvif(p, x_c, x_in, cfg)
+    scale = dh ** -0.5
+    qt = q.astype(jnp.float32)[:, :, 0] * scale            # (B,H,dh)
+    kt = k.astype(jnp.float32)[:, :, 0] * scale
+    vt = v.astype(jnp.float32)[:, :, 0]
+    it = ig[:, :, 0]
+    ft = jax.nn.log_sigmoid(fg[:, :, 0])
+
+    m_new = jnp.maximum(ft + cache["m"], it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + cache["m"] - m_new)
+    C = f_p[..., None, None] * cache["C"] + i_p[..., None, None] * (
+        kt[..., :, None] * vt[..., None, :])
+    n = f_p[..., None] * cache["n"] + i_p[..., None] * kt
+    num = jnp.einsum("bhkv,bhk->bhv", C, qt)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                      jnp.exp(-m_new))
+    hid = (num / den[..., None]).reshape(b, 1, d_inner).astype(xd)
+    hid = rmsnorm(hid, p["head_norm"].astype(xd), weight_offset=1.0)
+    hid = hid.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    out = hid.astype(xd) @ p["w_down"].astype(xd)
+    return out, {"C": C, "n": n, "m": m_new, "conv": conv_state}
+
+
+# ------------------------------------------------------------- sLSTM ----
+
+def _slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    x: XLSTMConfig = cfg.xlstm
+    return x.num_heads, cfg.d_model // x.num_heads
+
+
+def init_slstm(key, cfg: ModelConfig):
+    x: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    h, dh = _slstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    ff = int(d * x.proj_factor_slstm)
+    return {
+        "conv_w": L.dense_init(ks[0], (d, x.conv_width),
+                               in_axis_size=x.conv_width),
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "w_gates": L.dense_init(ks[1], (4, d, d)),          # i, f, z, o
+        "r_gates": L.dense_init(ks[2], (4, h, dh, dh), in_axis_size=dh),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((1, d)), jnp.full((1, d), 3.0),      # f-bias > 0
+             jnp.zeros((2, d))]).astype(jnp.float32),
+        "head_norm": jnp.zeros((d,), jnp.float32),
+        "ffn": L.init_mlp(ks[3], d, ff, "gelu"),
+    }
+
+
+def _slstm_cell(gates, state, h_heads):
+    """gates: (4, B, d) pre-activations (recurrent term already added)."""
+    i_t, f_t, z_t, o_t = gates
+    c, n, m, _ = state
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_t)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return c_new, n_new, m_new, h_new
+
+
+def _slstm_recurrent(r_gates, h_prev, b, h, dh):
+    """Per-head recurrent contribution: (4, B, d)."""
+    hh = h_prev.reshape(b, h, dh)
+    return jnp.einsum("bhk,ghkl->gbhl", hh, r_gates).reshape(4, b, h * dh)
+
+
+def apply_slstm(p, x, cfg: ModelConfig, return_cache: bool = False):
+    """Full-sequence sLSTM block body.  x: (B, S, d)."""
+    h, dh = _slstm_dims(cfg)
+    b, s, d = x.shape
+    xd = x.dtype
+    x_c, conv_tail = _causal_conv(x, p["conv_w"], p["conv_b"])
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(xd)
+    # input contributions for all gates, all steps at once
+    gates_in = jnp.einsum("bsd,gdk->gbsk", x_c.astype(jnp.float32),
+                          p["w_gates"].astype(jnp.float32)) \
+        + p["b_gates"][:, None, None, :]                    # (4,B,S,d)
+
+    def step(state, g_t):
+        rec = _slstm_recurrent(p["r_gates"].astype(jnp.float32),
+                               state[3], b, h, dh)
+        c, n, m, h_new = _slstm_cell(g_t + rec, state, None)
+        return (c, n, m, h_new), h_new
+
+    from repro.core.scan_utils import chunked_scan
+    z = jnp.zeros((b, d), jnp.float32)
+    state0 = (z, z, jnp.full((b, d), -1e30, jnp.float32), z)
+    state_t, hs = chunked_scan(step, state0, gates_in.transpose(2, 0, 1, 3))
+    hid = hs.transpose(1, 0, 2).astype(xd)                  # (B,S,d)
+    hid = rmsnorm(hid, p["head_norm"].astype(xd), weight_offset=1.0)
+    out = hid + L.apply_mlp(p["ffn"], hid, "gelu")
+    if return_cache:
+        w = cfg.xlstm.conv_width - 1
+        tail = x[:, s - w:, :] if s >= w else \
+            jnp.pad(x, [(0, 0), (w - s, 0), (0, 0)])
+        c_t, n_t, m_t, h_t = state_t
+        return out, {"c": c_t, "n": n_t, "m": m_t, "h": h_t, "conv": tail}
+    return out
+
+
+def slstm_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    x: XLSTMConfig = cfg.xlstm
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {
+        "c": z, "n": z, "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "h": z,
+        "conv": jnp.zeros((batch, x.conv_width - 1, d), dtype),
+    }
+
+
+def decode_slstm(p, x, cache, cfg: ModelConfig):
+    """One-token sLSTM step.  x: (B, 1, d)."""
+    h, dh = _slstm_dims(cfg)
+    b, _, d = x.shape
+    xd = x.dtype
+    x_c, conv_state = _causal_conv(x, p["conv_w"], p["conv_b"],
+                                   state=cache["conv"])
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(xd)
+    gates = jnp.einsum("bd,gdk->gbk", x_c.astype(jnp.float32)[:, 0],
+                       p["w_gates"].astype(jnp.float32)) \
+        + p["b_gates"][:, None, :]
+    rec = _slstm_recurrent(p["r_gates"].astype(jnp.float32), cache["h"],
+                           b, h, dh)
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    c, n, m, h_new = _slstm_cell(gates + rec, state, None)
+    hid = h_new[:, None, :].astype(xd)
+    hid = rmsnorm(hid, p["head_norm"].astype(xd), weight_offset=1.0)
+    out = hid + L.apply_mlp(p["ffn"], hid, "gelu")
+    return out, {"c": c, "n": n, "m": m, "h": h_new, "conv": conv_state}

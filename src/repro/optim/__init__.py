@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               global_norm, clip_by_global_norm)  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.compress import (compressed_psum, init_error_feedback,
+                                  quantize_i8, dequantize_i8)  # noqa: F401

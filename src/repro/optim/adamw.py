@@ -1,0 +1,165 @@
+"""AdamW from scratch (no optax in this environment) with an optional
+8-bit block-quantized moment store (Dettmers-style dynamic blockwise
+absmax quantization, no error feedback — moments are requantized from
+the fresh f32 value every step).
+
+The int8 moments are the memory lever that lets the 398B/480B MoE
+configs train on a 256-chip v5e pod (DESIGN.md §5): bf16 params (2B) +
+bf16 grads (2B) + int8 m (1B) + int8 v (1B) ≈ 6 bytes/param vs 18 for
+the fp32-everything baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    quantize_moments: bool = False
+    clip_norm: Optional[float] = 1.0
+
+
+# ----------------------------------------------------- int8 moment store --
+
+def _pad_len(n: int) -> int:
+    return -(-n // QBLOCK) * QBLOCK
+
+
+def quantize_i8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """f32 tensor -> (int8 blocks, f32 block scales).  Blockwise absmax."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = _pad_len(n) - n
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, QBLOCK)
+    amax = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_i8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = q.astype(jnp.float32) * scale[:, None]
+    n = 1
+    for s in shape:
+        n *= s
+    return flat.reshape(-1)[:n].reshape(shape)
+
+
+# ------------------------------------------------------------- adamw ------
+#
+# Quantized moments: m is ROW-WISE int8 (zero-centered first moment is
+# linear-quantization friendly; the scale reduces over the last axis only,
+# so quantize/dequantize are elementwise + broadcast — no flattening
+# reshape, which means GSPMD shards the int8 store exactly like the
+# parameter.  A flat (N/256,256) layout forces an all-gather of every
+# sharded tensor inside the optimizer; measured on the arctic-480b
+# dry-run: 7 TB of temp).  v is kept in bf16: the second moment's
+# *range* is what matters (tiny v values linear-quantized to zero turn
+# 1/sqrt(v) into garbage — measured divergence on the quadratic test),
+# and bf16 preserves the exponent exactly.  Net: 3 bytes/param of
+# optimizer state vs 8 for fp32.  Blockwise (QBLOCK) quantization is
+# still used by the gradient-compression path, which runs on local
+# shards inside shard_map where reshapes are free.
+
+def _zero_moment(p, quantize: bool, second: bool = False):
+    if quantize:
+        if second:
+            return jnp.zeros(p.shape, jnp.bfloat16)
+        return {"q": jnp.zeros(p.shape, jnp.int8),
+                "s": jnp.zeros(p.shape[:-1] + (1,), jnp.float32)}
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def _read_moment(m, shape, quantize: bool):
+    if quantize:
+        if isinstance(m, dict):
+            return m["q"].astype(jnp.float32) * m["s"]
+        return m.astype(jnp.float32)
+    return m
+
+
+def _write_moment(val, quantize: bool, second: bool = False):
+    if quantize:
+        if second:
+            return val.astype(jnp.bfloat16)
+        amax = jnp.max(jnp.abs(val), axis=-1, keepdims=True)
+        s = jnp.where(amax == 0, 1.0, amax / 127.0)
+        q = jnp.clip(jnp.round(val / s), -127, 127).astype(jnp.int8)
+        return {"q": q, "s": s}
+    return val
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    q = cfg.quantize_moments
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(lambda p: _zero_moment(p, q), params),
+        "v": jax.tree_util.tree_map(
+            lambda p: _zero_moment(p, q, second=True), params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * factor).astype(g.dtype), tree), norm
+
+
+def adamw_update(params, grads, state, lr, cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    q = cfg.quantize_moments
+
+    is_moment_leaf = (lambda x: isinstance(x, dict) and set(x) == {"q", "s"}) \
+        if q else None
+
+    def upd(p, g, m, v):
+        mf = _read_moment(m, p.shape, q)
+        vf = _read_moment(v, p.shape, q)
+        mf = cfg.b1 * mf + (1.0 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1.0 - cfg.b2) * g * g
+        update = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if cfg.weight_decay and p.ndim >= 2:      # no decay on norms/biases
+            update = update + cfg.weight_decay * pf
+        new_p = (pf - lr * update).astype(p.dtype)
+        return new_p, _write_moment(mf, q), _write_moment(vf, q, second=True)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = treedef.flatten_up_to(state["m"]) if q else \
+        jax.tree_util.tree_leaves(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"]) if q else \
+        jax.tree_util.tree_leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,1 @@
+from repro.serve.engine import Engine, ServeConfig, Request  # noqa: F401

@@ -1,0 +1,131 @@
+"""Slot-based serving engine: batched prefill + continuous-batching
+decode over a fixed pool of KV-cache slots.
+
+The cache pool is allocated once at engine start (shape = (slots, ...)
+per layer); each admitted request prefilled at batch-size-1 is written
+into its slot with ``dynamic_update_slice`` (tree-wide helper below).
+Every ``step()`` advances all active slots one token; finished slots
+free immediately and the next queued request is admitted — the standard
+continuous-batching loop, minus paging (slot granularity = whole cache
+rows; paged blocks are an orthogonal extension noted in DESIGN.md).
+
+Sampling: greedy or temperature (deterministic PRNG per engine seed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    slots: int = 4
+    cache_len: int = 128
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: List[int]
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _insert_slot(pool, one, slot: int, batch_axis: int = 1):
+    """Write a batch-1 cache tree into the pool at ``slot``."""
+    def upd(p, o):
+        return jax.lax.dynamic_update_slice_in_dim(p, o.astype(p.dtype),
+                                                   slot, axis=batch_axis)
+    return jax.tree_util.tree_map(upd, pool, one)
+
+
+class Engine:
+    def __init__(self, model: Model, params, sc: ServeConfig):
+        self.model = model
+        self.params = params
+        self.sc = sc
+        self.cfg = model.cfg
+        self.caches = model.init_decode_caches(sc.slots, sc.cache_len)
+        self.lengths = jnp.zeros((sc.slots,), jnp.int32)
+        self.cur_tok = jnp.zeros((sc.slots,), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * sc.slots
+        self.queue: List[Request] = []
+        self._key = jax.random.PRNGKey(sc.seed)
+        self._prefill = jax.jit(
+            lambda p, t: model.prefill(p, t, sc.cache_len, {}))
+        self._decode = jax.jit(model.decode_step)
+
+    # -- request lifecycle ------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.sc.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
+                logits, cache1 = self._prefill(self.params, toks)
+                tok = self._sample(logits)[0]
+                self.caches = jax.tree_util.tree_map(
+                    lambda pool, one: _insert_slot(pool, one, slot),
+                    self.caches, cache1)
+                self.lengths = self.lengths.at[slot].set(len(req.tokens))
+                self.cur_tok = self.cur_tok.at[slot].set(tok)
+                req.out.append(int(tok))
+                self.active[slot] = req
+                self._maybe_finish(slot)
+
+    def _sample(self, logits):
+        if self.sc.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, k = jax.random.split(self._key)
+        return jax.random.categorical(
+            k, logits / self.sc.temperature, axis=-1).astype(jnp.int32)
+
+    def _maybe_finish(self, slot: int):
+        req = self.active[slot]
+        if req is None:
+            return
+        hit_eos = (self.sc.eos_id is not None
+                   and req.out and req.out[-1] == self.sc.eos_id)
+        full = int(self.lengths[slot]) + 1 >= self.sc.cache_len
+        if len(req.out) >= self.sc.max_new_tokens or hit_eos or full:
+            req.done = True
+            self.active[slot] = None
+            self.lengths = self.lengths.at[slot].set(0)
+
+    # -- main loop ---------------------------------------------------------
+    def step(self) -> bool:
+        """One decode step for all active slots.  Returns busy-ness."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return False
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           self.cur_tok, self.lengths)
+        next_tok = self._sample(logits)
+        self.lengths = self.lengths + jnp.asarray(
+            [1 if r is not None else 0 for r in self.active], jnp.int32)
+        self.cur_tok = next_tok
+        for slot, req in enumerate(self.active):
+            if req is not None:
+                req.out.append(int(next_tok[slot]))
+                self._maybe_finish(slot)
+        return True
+
+    def run_to_completion(self, requests: List[Request],
+                          max_steps: int = 10_000) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return requests

@@ -1,0 +1,5 @@
+from repro.sharding.mesh_ctx import (  # noqa: F401
+    current_mesh, dp_axes, mesh_context, set_mesh, tp_axis, dp_size, tp_size,
+    batch_spec,
+)
+from repro.sharding.partition import param_specs, PartitionRules  # noqa: F401

@@ -1,0 +1,390 @@
+"""shard_map wrappers that keep portable kernels per-device under pjit.
+
+Pallas kernels (compiled or interpreted) are *per-device* programs: GSPMD
+cannot partition through a ``pallas_call`` (on TPU it is an opaque Mosaic
+custom-call; in interpret mode it is a while-loop GSPMD would have to
+all-gather).  Production frameworks therefore wrap every kernel in
+``shard_map`` with explicit per-operand specs — this module centralizes
+those wrappers and the layout policy:
+
+  flash attention   — q/kv HEAD-sharded over 'model' when divisible,
+                      otherwise Q-SEQUENCE-sharded (each model shard owns
+                      a contiguous q-row slice, KV gathered; the kernel's
+                      dynamic ``q_offset`` keeps causal/window masks
+                      globally correct).  Batch over ('pod','data').
+  decode attention  — head-sharded when divisible; otherwise the KV cache
+                      is SEQUENCE-sharded over 'model' (SP decode): each
+                      shard computes flash partials on its cache slice and
+                      the (acc, m, l) residuals are combined with a
+                      cross-shard log-sum-exp (pmax/psum) — flash-decode
+                      across chips.
+  mamba scan        — d_inner channel-sharded over 'model' (no collectives;
+                      the recurrence is channel-local).
+  mlstm scan        — Dv (value) channel-sharded over 'model'; q/k/gates
+                      replicated (the normalizer n·q needs full Dk).
+  rmsnorm           — rows sharded over ('pod','data') x 'model'.
+
+When no mesh is active (single-device tests) every wrapper degrades to a
+direct op call.  When the target is ``generic`` (pure-jnp fallback) the
+ops are ordinary XLA and GSPMD partitions them without help, so wrappers
+pass through as well — the portable-runtime story at the distribution
+layer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.runtime import runtime
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.mlstm_scan.ops import mlstm_scan
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.sharding import mesh_ctx
+
+__all__ = [
+    "sharded_flash_attention", "sharded_decode_attention",
+    "sharded_mamba_scan", "sharded_mlstm_scan", "sharded_rmsnorm",
+    "maybe_mesh",
+]
+
+
+def maybe_mesh() -> Optional[Mesh]:
+    try:
+        m = mesh_ctx.current_mesh()
+    except RuntimeError:
+        return None
+    if m is not None and m.devices.size == 1:
+        return None
+    return m
+
+
+def _use_wrappers(mesh: Optional[Mesh]) -> bool:
+    # generic target = plain XLA ops; GSPMD partitions them natively.
+    return mesh is not None and runtime().use_pallas
+
+
+def _dp(mesh: Mesh, b: int):
+    """Batch axes: ('pod','data') reduced until the batch divides."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    while axes:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if b % n == 0:
+            return axes
+        axes = axes[1:]
+    return None
+
+
+def _tp(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+# ------------------------------------------------------------- flash ----
+
+def sharded_flash_attention(q, k, v, *, causal: bool = True,
+                            window: Optional[int] = None,
+                            softcap: Optional[float] = None,
+                            scale: Optional[float] = None,
+                            block_q: int = 512, block_kv: int = 512):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D)."""
+    mesh = maybe_mesh()
+    kw = dict(causal=causal, window=window, softcap=softcap, scale=scale,
+              block_q=block_q, block_kv=block_kv)
+    if not _use_wrappers(mesh):
+        return flash_attention(q, k, v, **kw)
+
+    b, hq, sq, _ = q.shape
+    hkv = k.shape[1]
+    dp = _dp(mesh, b)
+    tp = _tp(mesh)
+
+    if hq % tp == 0 and hkv % tp == 0:
+        # head sharding: fully local attention per model shard
+        qs = P(dp, "model", None, None)
+        kvs = P(dp, "model", None, None)
+
+        def body(q_, k_, v_):
+            return flash_attention(q_, k_, v_, **kw)
+
+        return jax.shard_map(body, mesh=mesh, in_specs=(qs, kvs, kvs),
+                             out_specs=qs, check_vma=False)(q, k, v)
+
+    # NOTE (§Perf-A.2, refuted): a fused batch×head sharding — flatten
+    # (B, H) and shard the merged dim over every axis so attention is
+    # fully local — was tried here and REGRESSED collective bytes 4.6×
+    # (50.5 → 234 GiB/chip on gemma3-4b train_4k): GSPMD implements the
+    # dimension-merging reshape of a sharded dim as a full all-gather +
+    # reslice per layer.  Lesson recorded in EXPERIMENTS.md §Perf-A;
+    # the q-sequence path below stays.
+
+    if sq % tp == 0:
+        # sequence parallelism over q rows; KV gathered per model shard.
+        qs = P(dp, None, "model", None)
+        kvs = P(dp, None, None, None)
+        sq_loc = sq // tp
+
+        def body(q_, k_, v_):
+            off = jax.lax.axis_index("model") * sq_loc
+            return flash_attention(q_, k_, v_, q_offset=off, **kw)
+
+        return jax.shard_map(body, mesh=mesh, in_specs=(qs, kvs, kvs),
+                             out_specs=qs, check_vma=False)(q, k, v)
+
+    # fallback: replicate over 'model' (batch-only sharding)
+    qs = P(dp, None, None, None)
+
+    def body(q_, k_, v_):
+        return flash_attention(q_, k_, v_, **kw)
+
+    return jax.shard_map(body, mesh=mesh, in_specs=(qs, qs, qs),
+                         out_specs=qs, check_vma=False)(q, k, v)
+
+
+# ------------------------------------------------------------ decode ----
+
+def sharded_decode_update_attend(q, k_new, v_new, k_cache, v_cache,
+                                 write_pos, eff_len, *,
+                                 window: Optional[int] = None,
+                                 softcap: Optional[float] = None,
+                                 scale: Optional[float] = None,
+                                 block_kv: int = 512):
+    """Fused cache-update + decode attention.
+
+    q: (B,Hq,D); k_new/v_new: (B,Hkv,D) rope'd; caches: (B,Hkv,S,D);
+    write_pos/eff_len: (B,).  Returns (out (B,Hq,Dv), new_k, new_v).
+
+    §Perf-B.1: updating the cache with a one-hot select OUTSIDE the
+    shard_map made GSPMD all-gather the entire cache in f32 per layer
+    per token (measured 256 MiB x 9 attention layers on jamba
+    long_500k).  Doing the update inside the shard_map keeps it a local
+    elementwise select on each shard's slots."""
+    mesh = maybe_mesh()
+    b, hq, dk = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[3]
+    kw = dict(window=window, softcap=softcap, scale=scale,
+              block_kv=block_kv)
+
+    def update(ck, cv, kn, vn, pos, off):
+        slot = jnp.arange(ck.shape[2])[None, None, :, None] + off
+        onehot = slot == pos[:, None, None, None]
+        ck = jnp.where(onehot, kn[:, :, None, :].astype(ck.dtype), ck)
+        cv = jnp.where(onehot, vn[:, :, None, :].astype(cv.dtype), cv)
+        return ck, cv
+
+    if not _use_wrappers(mesh):
+        ck, cv = update(k_cache, v_cache, k_new, v_new, write_pos, 0)
+        return (decode_attention(q, ck, cv, eff_len, **kw), ck, cv)
+
+    dp = _dp(mesh, b)
+    tp = _tp(mesh)
+
+    if hq % tp == 0 and hkv % tp == 0:
+        qs, ns_, cs = (P(dp, "model", None), P(dp, "model", None),
+                       P(dp, "model", None, None))
+
+        def body(q_, kn, vn, ck, cv, pos, ln):
+            ck, cv = update(ck, cv, kn, vn, pos, 0)
+            return decode_attention(q_, ck, cv, ln, **kw), ck, cv
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(qs, ns_, ns_, cs, cs, P(dp), P(dp)),
+            out_specs=(qs, cs, cs), check_vma=False)(
+            q, k_new, v_new, k_cache, v_cache, write_pos, eff_len)
+
+    if s % tp == 0 and window is None:
+        qs, ns_ = P(dp, None, None), P(dp, None, None)
+        cs = P(dp, None, "model", None)
+        s_loc = s // tp
+
+        def body(q_, kn, vn, ck, cv, pos, ln):
+            off = jax.lax.axis_index("model") * s_loc
+            ck, cv = update(ck, cv, kn, vn, pos, off)
+            loc_len = jnp.clip(ln - off, 0, s_loc).astype(jnp.int32)
+            acc, m, l = decode_attention(q_, ck, cv, loc_len,
+                                         return_residuals=True, **kw)
+            m_g = jax.lax.pmax(m, "model")
+            w = jnp.exp(m - m_g)
+            num = jax.lax.psum(acc.astype(jnp.float32) * w[..., None],
+                               "model")
+            den = jax.lax.psum(l * w, "model")
+            den = jnp.where(den == 0.0, 1.0, den)
+            return (num / den[..., None]).astype(q_.dtype), ck, cv
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(qs, ns_, ns_, cs, cs, P(dp), P(dp)),
+            out_specs=(qs, cs, cs), check_vma=False)(
+            q, k_new, v_new, k_cache, v_cache, write_pos, eff_len)
+
+    qs, ns_, cs = (P(dp, None, None), P(dp, None, None),
+                   P(dp, None, None, None))
+
+    def body(q_, kn, vn, ck, cv, pos, ln):
+        ck, cv = update(ck, cv, kn, vn, pos, 0)
+        return decode_attention(q_, ck, cv, ln, **kw), ck, cv
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(qs, ns_, ns_, cs, cs, P(dp), P(dp)),
+        out_specs=(qs, cs, cs), check_vma=False)(
+        q, k_new, v_new, k_cache, v_cache, write_pos, eff_len)
+
+def sharded_decode_attention(q, k_cache, v_cache, lengths, *,
+                             window: Optional[int] = None,
+                             softcap: Optional[float] = None,
+                             scale: Optional[float] = None,
+                             block_kv: int = 512):
+    """q: (B, Hq, D); caches: (B, Hkv, S, D); lengths: (B,).
+
+    Returns (B, Hq, D).  SP path: cache slot dim sharded over 'model';
+    per-shard partials are LSE-combined with pmax/psum ('flash-decode').
+    """
+    mesh = maybe_mesh()
+    kw = dict(window=window, softcap=softcap, scale=scale, block_kv=block_kv)
+    if not _use_wrappers(mesh):
+        return decode_attention(q, k_cache, v_cache, lengths, **kw)
+
+    b, hq, _ = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    dp = _dp(mesh, b)
+    tp = _tp(mesh)
+
+    if hq % tp == 0 and hkv % tp == 0:
+        qs = P(dp, "model", None)
+        cs = P(dp, "model", None, None)
+
+        def body(q_, ck, cv, ln):
+            return decode_attention(q_, ck, cv, ln, **kw)
+
+        return jax.shard_map(
+            body, mesh=mesh, in_specs=(qs, cs, cs, P(dp)),
+            out_specs=qs, check_vma=False)(q, k_cache, v_cache, lengths)
+
+    if s % tp == 0 and window is None:
+        # SP decode: shard the cache sequence dim; combine partials.
+        qs = P(dp, None, None)
+        cs = P(dp, None, "model", None)
+        s_loc = s // tp
+
+        def body(q_, ck, cv, ln):
+            off = jax.lax.axis_index("model") * s_loc
+            loc_len = jnp.clip(ln - off, 0, s_loc).astype(jnp.int32)
+            acc, m, l = decode_attention(q_, ck, cv, loc_len,
+                                         return_residuals=True, **kw)
+            # cross-shard log-sum-exp combine (the flash-decode reduction)
+            m_g = jax.lax.pmax(m, "model")
+            w = jnp.exp(m - m_g)
+            num = jax.lax.psum(acc.astype(jnp.float32) * w[..., None],
+                               "model")
+            den = jax.lax.psum(l * w, "model")
+            den = jnp.where(den == 0.0, 1.0, den)
+            return (num / den[..., None]).astype(q_.dtype)
+
+        return jax.shard_map(
+            body, mesh=mesh, in_specs=(qs, cs, cs, P(dp)),
+            out_specs=qs, check_vma=False)(q, k_cache, v_cache, lengths)
+
+    qs = P(dp, None, None)
+    cs = P(dp, None, None, None)
+
+    def body(q_, ck, cv, ln):
+        return decode_attention(q_, ck, cv, ln, **kw)
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(qs, cs, cs, P(dp)),
+        out_specs=qs, check_vma=False)(q, k_cache, v_cache, lengths)
+
+
+# ------------------------------------------------------------- mamba ----
+
+def sharded_mamba_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 64):
+    """x/dt: (B,S,d_inner); A: (d_inner,n); Bm/Cm: (B,S,n); D: (d_inner,).
+
+    Channel parallel: the diagonal SSM recurrence never mixes channels,
+    so sharding d_inner over 'model' needs zero collectives."""
+    mesh = maybe_mesh()
+    if not _use_wrappers(mesh):
+        return mamba_scan(x, dt, A, Bm, Cm, D, chunk=chunk)
+
+    b, _, d_inner = x.shape
+    dp = _dp(mesh, b)
+    tp = _tp(mesh)
+    ch = "model" if d_inner % tp == 0 else None
+
+    xs = P(dp, None, ch)
+    out_specs = (P(dp, None, ch), P(dp, ch, None))
+
+    def body(x_, dt_, A_, B_, C_, D_):
+        return mamba_scan(x_, dt_, A_, B_, C_, D_, chunk=chunk)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(xs, xs, P(ch, None), P(dp, None, None), P(dp, None, None),
+                  P(ch)),
+        out_specs=out_specs, check_vma=False)(x, dt, A, Bm, Cm, D)
+
+
+# ------------------------------------------------------------- mlstm ----
+
+def sharded_mlstm_scan(q, k, v, i_gate, f_gate, *, chunk: int = 64):
+    """q/k: (B,H,S,Dk); v: (B,H,S,Dv); gates: (B,H,S).
+
+    Dv-sharded over 'model': C and the numerator split over value
+    channels; the normalizer n·q needs full Dk, so q/k/gates replicate."""
+    mesh = maybe_mesh()
+    if not _use_wrappers(mesh):
+        return mlstm_scan(q, k, v, i_gate, f_gate, chunk=chunk)
+
+    b, h, _, dv = q.shape[0], q.shape[1], q.shape[2], v.shape[3]
+    dp = _dp(mesh, b)
+    tp = _tp(mesh)
+    if h % tp == 0:
+        hs, vs = "model", None          # enough heads: shard heads instead
+    elif dv % tp == 0:
+        hs, vs = None, "model"
+    else:
+        hs = vs = None
+
+    qs = P(dp, hs, None, None)
+    vvs = P(dp, hs, None, vs)
+    gs = P(dp, hs, None)
+
+    def body(q_, k_, v_, i_, f_):
+        return mlstm_scan(q_, k_, v_, i_, f_, chunk=chunk)
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(qs, qs, vvs, gs, gs),
+        out_specs=vvs, check_vma=False)(q, k, v, i_gate, f_gate)
+
+
+# ----------------------------------------------------------- rmsnorm ----
+
+def sharded_rmsnorm(x, w, *, eps: float = 1e-6, weight_offset: float = 0.0,
+                    block_rows: int = 256):
+    """RMSNorm under a mesh runs the pure-jnp form; kernel off-mesh.
+
+    §Perf-A iteration history (gemma3-4b train_4k, collective bytes/chip):
+      unwrapped pallas kernel under GSPMD   — 390 GiB (partitioner
+        all-gathers around the while-loop; roofline fraction 0.078)
+      shard_map-wrapped kernel (A.1)        —  50 GiB: forward is clean,
+        but every wrapper boundary psums the replicated activations'
+        f32 cotangent over 'model' in backward (4-6 norms/layer)
+      pure-jnp norm under GSPMD (A.3, this) — norms fuse into the
+        surrounding elementwise HLO with zero boundaries.
+    The Pallas rmsnorm kernel remains the off-mesh / single-chip path
+    and the §4.1 parity subject; on-mesh the norm is memory-bound glue
+    where XLA fusion is already optimal — kernelizing it buys nothing
+    and the boundary costs an all-reduce per norm."""
+    mesh = maybe_mesh()
+    if not _use_wrappers(mesh):
+        return rmsnorm(x, w, eps=eps, weight_offset=weight_offset,
+                       block_rows=block_rows)
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+    return rmsnorm_ref(x, w, eps=eps, weight_offset=weight_offset)

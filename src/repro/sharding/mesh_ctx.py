@@ -1,0 +1,85 @@
+"""Mesh context: the active device mesh + canonical axis roles.
+
+Axis roles (DESIGN.md §5):
+  'pod'   — outermost, across pods (pure DP by default; PP optional)
+  'data'  — DP within a pod; ALSO the EP axis (experts live on it)
+  'model' — TP; ALSO the SP axis for sharded KV decode
+Meshes without a 'pod' axis are single-pod.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+
+
+_STATE = _State()
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _STATE.mesh = mesh
+
+
+def current_mesh() -> Mesh:
+    if _STATE.mesh is None:
+        raise RuntimeError("no active mesh; wrap with sharding.mesh_context")
+    return _STATE.mesh
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    prev = _STATE.mesh
+    _STATE.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def dp_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
+    mesh = mesh or current_mesh()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_axis(mesh: Optional[Mesh] = None) -> str:
+    return "model"
+
+
+def dp_size(mesh: Optional[Mesh] = None) -> int:
+    mesh = mesh or current_mesh()
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def tp_size(mesh: Optional[Mesh] = None) -> int:
+    mesh = mesh or current_mesh()
+    return mesh.shape["model"]
+
+
+def batch_spec(batch: int, mesh: Optional[Mesh] = None, *,
+               extra_dims: int = 1) -> P:
+    """PartitionSpec for a batch-leading array; falls back to replication
+    when the batch doesn't divide the DP world (e.g. long_500k B=1)."""
+    mesh = mesh or current_mesh()
+    axes = dp_axes(mesh)
+    # drop axes until divisible (prefers keeping 'data')
+    while axes:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if batch % n == 0:
+            break
+        axes = axes[1:]
+    lead = axes if len(axes) != 1 else axes[0]
+    return P(lead if axes else None, *([None] * extra_dims))

@@ -1,0 +1,177 @@
+"""Parameter partitioning rules (DP/TP/EP aware, divisibility-checked).
+
+Rules are matched against the flattened param path (joined with '/').
+Every spec is validated against the actual mesh: any dim whose size does
+not divide by its assigned axes falls back to replication for that dim —
+this is how e.g. whisper's 8 heads on a 16-way model axis degrade
+gracefully to replicated attention (optimizer state still shards over
+'data' via zero1_spec).
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding import mesh_ctx
+
+
+# (path regex, spec template). Templates use axis-name strings or None
+# per dim; matched against the RIGHTMOST dims (stacked-layer leading
+# dims are implicitly None/replicated).
+RULES: List[Tuple[str, Tuple]] = [
+    # embeddings / unembedding: shard d_model (embed) / vocab (unembed)
+    (r"embed/table$", (None, "model")),
+    (r"unembed/table$", (None, "model")),
+    (r"pos_embed$", (None, None)),
+    # attention (head-sharded)
+    (r"(attn|self_attn|cross_attn)/wq$", (None, "model", None)),
+    (r"(attn|self_attn|cross_attn)/w(k|v)$", (None, "model", None)),
+    (r"(attn|self_attn|cross_attn)/wo$", ("model", None, None)),
+    (r"(attn|self_attn|cross_attn)/(q|k)_norm$", (None,)),
+    # MLA
+    (r"attn/wq_mla$", (None, "model", None)),
+    (r"attn/wkv_a$", (None, None)),
+    (r"attn/wkv_b$", (None, "model", None)),
+    (r"attn/wo_mla$", ("model", None, None)),
+    # dense MLP
+    (r"mlp/w_(gate|up)$", (None, "model")),
+    (r"mlp/w_down$", ("model", None)),
+    # MoE: experts over the EP ('data') axis, ff over 'model'
+    (r"moe/router$", (None, None)),
+    (r"moe/we_(gate|up)$", ("data", None, "model")),
+    (r"moe/we_down$", ("data", "model", None)),
+    (r"moe/shared/w_(gate|up)$", (None, "model")),
+    (r"moe/shared/w_down$", ("model", None)),
+    (r"moe/dense/w_(gate|up)$", (None, "model")),
+    (r"moe/dense/w_down$", ("model", None)),
+    # mamba: channel (d_inner) parallel
+    (r"mamba/in_proj$", (None, "model")),
+    (r"mamba/conv_w$", ("model", None)),
+    (r"mamba/conv_b$", ("model",)),
+    (r"mamba/x_proj$", ("model", None)),
+    (r"mamba/dt_proj$", (None, "model")),
+    (r"mamba/dt_bias$", ("model",)),
+    (r"mamba/a_log$", ("model", None)),
+    (r"mamba/d_skip$", ("model",)),
+    (r"mamba/out_proj$", ("model", None)),
+    # xlstm
+    (r"mlstm/w_up(1|2)$", (None, "model")),
+    (r"mlstm/w(q|k|v)$", ("model", None)),
+    (r"mlstm/w_(i|f)$", (None, None)),
+    (r"mlstm/conv_w$", ("model", None)),
+    (r"mlstm/w_down$", ("model", None)),
+    (r"slstm/w_gates$", (None, None, None)),
+    (r"slstm/r_gates$", (None, None, None, None)),
+    (r"slstm/ffn/w_(gate|up)$", (None, "model")),
+    (r"slstm/ffn/w_down$", ("model", None)),
+    # norms & scalars: replicated
+    (r".*(norm|scale|bias)[^/]*$", None),
+]
+
+
+class PartitionRules:
+    def __init__(self, rules=None):
+        self.rules = [(re.compile(p), s) for p, s in (rules or RULES)]
+
+    def spec_for(self, path: str, ndim: int, shape: Tuple[int, ...],
+                 mesh: Mesh) -> P:
+        for pat, template in self.rules:
+            if pat.search(path):
+                if template is None:
+                    return P()
+                return _fit(template, ndim, shape, mesh)
+        return P()  # default: replicate
+
+    def tree_specs(self, params, mesh: Optional[Mesh] = None):
+        mesh = mesh or mesh_ctx.current_mesh()
+
+        def one(path, leaf):
+            p = "/".join(_key_str(k) for k in path)
+            return self.spec_for(p, leaf.ndim, leaf.shape, mesh)
+
+        return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _fit(template: Sequence, ndim: int, shape: Tuple[int, ...],
+         mesh: Mesh) -> P:
+    """Right-align template to ndim, validate divisibility per dim.
+
+    Axes whose assigned dim does not divide are *rescued* onto another
+    unassigned dim that does (e.g. arctic's 56 attention heads cannot
+    split 16 ways, so 'model' moves to the d_model dim instead of
+    replicating 13 GiB of attention weights per device)."""
+    tpl = list(template)
+    if len(tpl) > ndim:
+        tpl = tpl[len(tpl) - ndim:]
+    full = [None] * (ndim - len(tpl)) + tpl
+    out = []
+    dropped = []
+    for i, (dim, axis) in enumerate(zip(shape, full)):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        n = 1
+        for a in axes:
+            if a not in mesh.axis_names:
+                n = 0
+                break
+            n *= mesh.shape[a]
+        if n and dim % n == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+            if n:                      # axis exists but dim didn't divide
+                dropped.append(axes)
+    # rescue pass: place dropped axes on the largest unassigned dim
+    for axes in dropped:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        cands = sorted((d for d in range(ndim)
+                        if out[d] is None and shape[d] % n == 0 and
+                        shape[d] >= n),
+                       key=lambda d: -shape[d])
+        # skip the leading stacked-layers dim (scanned; keep replicated)
+        cands = [d for d in cands if not (d == 0 and ndim >= 3)]
+        if cands:
+            out[cands[0]] = axes[0] if len(axes) == 1 else axes
+    return P(*out)
+
+
+def param_specs(params, mesh: Optional[Mesh] = None):
+    return PartitionRules().tree_specs(params, mesh)
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Optimizer-state spec: the param spec, plus ZeRO-1 sharding over
+    'data' on the largest still-unsharded dim (moments are only touched
+    by the elementwise optimizer, so any extra partitioning is free)."""
+    if "data" not in mesh.axis_names:
+        return spec
+    used = set()
+    full = list(spec) + [None] * (len(shape) - len(spec))
+    for s in full:
+        for a in ((s,) if isinstance(s, str) else (s or ())):
+            used.add(a)
+    if "data" in used:
+        return spec
+    dsize = mesh.shape["data"]
+    order = sorted((i for i in range(len(shape)) if full[i] is None),
+                   key=lambda i: -shape[i])
+    for i in order:
+        if shape[i] % dsize == 0 and shape[i] >= dsize:
+            full[i] = "data"
+            return P(*full)
+    return spec

@@ -1,0 +1,2 @@
+from repro.train.trainer import (TrainConfig, Trainer, SimulatedFailure,
+                                 make_train_step)  # noqa: F401

@@ -1,0 +1,60 @@
+"""Checkpoint store: atomic commit, retention, async writer, restore."""
+import os
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _tree(x=1.0):
+    return {"a": jnp.full((4, 4), x), "nested": [jnp.arange(6),
+                                                 {"b": jnp.float32(x)}]}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 7, _tree(2.5), extra={"step": 7})
+    assert latest_step(d) == 7
+    got, extra = restore_checkpoint(d, 7, _tree(0.0))
+    assert extra["step"] == 7
+    np.testing.assert_array_equal(np.asarray(got["a"]),
+                                  np.full((4, 4), 2.5, np.float32))
+    np.testing.assert_array_equal(np.asarray(got["nested"][0]),
+                                  np.arange(6))
+
+
+def test_tmp_dirs_are_not_checkpoints(tmp_path):
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, "step_9.tmp"))     # crashed writer remnant
+    save_checkpoint(d, 3, _tree())
+    assert latest_step(d) == 3                      # .tmp never visible
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (10, 20, 30):
+        mgr.save(s, _tree(float(s)))
+    assert mgr.latest() == 30
+    kept = sorted(n for n in os.listdir(str(tmp_path))
+                  if n.startswith("step_"))
+    assert kept == ["step_20", "step_30"]
+
+
+def test_async_save_waits(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(1, _tree(1.0))
+    mgr.save(2, _tree(2.0))     # implicitly waits for save(1)
+    assert mgr.latest() == 2
+    got, _ = mgr.restore(2, _tree(0.0))
+    assert float(got["a"][0, 0]) == 2.0
+
+
+def test_restore_overwrites_dtype(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"w": jnp.ones((3,), jnp.float32)})
+    got, _ = restore_checkpoint(d, 1, {"w": jnp.zeros((3,), jnp.float32)})
+    assert got["w"].dtype == jnp.float32

@@ -1,0 +1,94 @@
+"""Shape/dtype sweep of the flash attention kernel vs the jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import context as ctx
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.flash_attention.native import flash_attention_native
+
+
+def _rand(shape, dtype, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, shape, jnp.float32).astype(dtype)
+
+
+CASES = [
+    # b, hq, hkv, s, d, causal, window, softcap, dtype
+    (1, 2, 2, 256, 64, True, None, None, jnp.float32),
+    (2, 4, 2, 256, 64, True, None, None, jnp.float32),     # GQA 2:1
+    (1, 8, 1, 128, 128, True, None, None, jnp.float32),    # MQA
+    (1, 2, 2, 256, 64, False, None, None, jnp.float32),    # bidirectional
+    (1, 2, 2, 512, 64, True, 128, None, jnp.float32),      # sliding window
+    (1, 2, 2, 256, 64, True, None, 50.0, jnp.float32),     # softcap
+    (1, 4, 4, 256, 64, True, 64, 30.0, jnp.float32),       # window+cap
+    (2, 2, 2, 256, 64, True, None, None, jnp.bfloat16),    # bf16
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,causal,window,softcap,dtype", CASES)
+def test_kernel_matches_ref(b, hq, hkv, s, d, causal, window, softcap, dtype):
+    q = _rand((b, hq, s, d), dtype, 0)
+    k = _rand((b, hkv, s, d), dtype, 1)
+    v = _rand((b, hkv, s, d), dtype, 2)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=128, block_kv=128)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, jnp.float32),
+                               np.asarray(want, jnp.float32),
+                               atol=tol, rtol=tol)
+    assert got.dtype == dtype
+
+
+def test_generic_target_uses_ref_path():
+    q = _rand((1, 2, 128, 64), jnp.float32)
+    k = _rand((1, 2, 128, 64), jnp.float32, 1)
+    v = _rand((1, 2, 128, 64), jnp.float32, 2)
+    with ctx.target("generic"):
+        got = flash_attention(q, k, v)
+    want = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_native_twin_bit_identical_in_interpret():
+    """Paper §4.1: portable vs native produce the same results."""
+    q = _rand((1, 4, 256, 64), jnp.float32)
+    k = _rand((1, 2, 256, 64), jnp.float32, 1)
+    v = _rand((1, 2, 256, 64), jnp.float32, 2)
+    portable = flash_attention(q, k, v, causal=True, block_q=128, block_kv=128)
+    native = flash_attention_native(q, k, v, causal=True, block_q=128,
+                                    block_kv=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(portable), np.asarray(native))
+
+
+def test_gradients_flow():
+    q = _rand((1, 2, 128, 64), jnp.float32)
+    k = _rand((1, 2, 128, 64), jnp.float32, 1)
+    v = _rand((1, 2, 128, 64), jnp.float32, 2)
+
+    def loss_kern(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, block_q=128, block_kv=128) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(flash_attention_ref(q, k, v) ** 2)
+
+    g_kern = jax.grad(loss_kern, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_kern, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_window_equals_full_when_large():
+    q = _rand((1, 2, 256, 64), jnp.float32)
+    k = _rand((1, 2, 256, 64), jnp.float32, 1)
+    v = _rand((1, 2, 256, 64), jnp.float32, 2)
+    a = flash_attention(q, k, v, causal=True, window=4096,
+                        block_q=128, block_kv=128)
+    b = flash_attention(q, k, v, causal=True, window=None,
+                        block_q=128, block_kv=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

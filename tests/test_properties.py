@@ -1,0 +1,162 @@
+"""Hypothesis property tests on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.scan_utils import chunked_scan
+from repro.kernels.decode_attention.ref import (combine_partials,
+                                                decode_attention_ref)
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.models.transformer import plan_segments
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------ segment plans ----
+
+@given(st.sampled_from(ARCH_IDS))
+@settings(max_examples=10, deadline=None)
+def test_plan_covers_all_layers_exactly(arch):
+    cfg = get_config(arch)
+    plans = plan_segments(cfg)
+    total = sum(len(p.block) * p.reps for p in plans)
+    assert total == cfg.num_layers
+    # flattened plan kinds == config layer kinds, moe flags correct
+    flat = []
+    for p in plans:
+        flat.extend(list(p.block) * p.reps)
+    kinds = cfg.layer_kinds()
+    for i, (kind, is_moe) in enumerate(flat):
+        assert kind == kinds[i]
+        assert is_moe == cfg.is_moe_layer(i)
+
+
+# ----------------------------------------------- flash mask invariants ----
+
+@given(
+    b=st.integers(1, 2), h=st.integers(1, 2),
+    s=st.sampled_from([8, 16, 24]),
+    window=st.one_of(st.none(), st.integers(2, 16)),
+    softcap=st.one_of(st.none(), st.floats(5.0, 50.0)),
+    causal=st.booleans(),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(max_examples=20, deadline=None)
+def test_flash_ref_matches_naive_softmax(b, h, s, window, softcap, causal,
+                                         seed):
+    """The flash oracle == explicit masked softmax (independent impl)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    d = 8
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, s, d), jnp.float32)
+    got = flash_attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap)
+
+    scores = np.einsum("bhqd,bhkd->bhqk", np.asarray(q),
+                       np.asarray(k)) / np.sqrt(d)
+    if softcap is not None:
+        scores = softcap * np.tanh(scores / softcap)
+    qi = np.arange(s)[:, None]
+    ki = np.arange(s)[None, :]
+    mask = np.ones((s, s), bool)
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= (qi - ki) < window
+    scores = np.where(mask, scores, -1e30)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = np.einsum("bhqk,bhkd->bhqd", p, np.asarray(v))
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-5, rtol=2e-5)
+
+
+# -------------------------------------- flash-decode combine invariance ----
+
+@given(
+    s=st.sampled_from([16, 32]),
+    n_shards=st.sampled_from([1, 2, 4]),
+    length=st.integers(1, 32),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(max_examples=20, deadline=None)
+def test_sp_decode_combine_is_shard_invariant(s, n_shards, length, seed):
+    """Splitting the KV cache into shards + LSE-combining partials gives
+    the same result as one full pass (the SP-decode correctness law)."""
+    length = min(length, s)
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    b, hq, hkv, d = 2, 4, 2, 8
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+    ck = jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32)
+    cv = jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32)
+    lengths = jnp.full((b,), length, jnp.int32)
+
+    full = decode_attention_ref(q, ck, cv, lengths)
+
+    s_loc = s // n_shards
+    accs, ms, ls = [], [], []
+    for i in range(n_shards):
+        loc_len = jnp.clip(lengths - i * s_loc, 0, s_loc)
+        acc, m, l = decode_attention_ref(
+            q, ck[:, :, i * s_loc:(i + 1) * s_loc],
+            cv[:, :, i * s_loc:(i + 1) * s_loc],
+            loc_len, return_residuals=True)
+        accs.append(acc), ms.append(m), ls.append(l)
+    combined = combine_partials(accs, ms, ls)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(combined),
+                               atol=2e-5, rtol=2e-5)
+
+
+# -------------------------------------------------- chunked scan law ----
+
+@given(
+    n=st.sampled_from([12, 64, 128]),
+    chunk=st.sampled_from([1, 8, 64, 256]),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(max_examples=15, deadline=None)
+def test_chunked_scan_equals_scan_with_grads(n, chunk, seed):
+    xs = jax.random.normal(jax.random.PRNGKey(seed), (n, 4))
+
+    def step(c, x):
+        c = 0.9 * c + jnp.tanh(x + c)
+        return c, c.sum()
+
+    def run_plain(xs):
+        c, ys = jax.lax.scan(step, jnp.zeros((4,)), xs)
+        return (c ** 2).sum() + ys.sum()
+
+    def run_chunked(xs):
+        c, ys = chunked_scan(step, jnp.zeros((4,)), xs, chunk=chunk)
+        return (c ** 2).sum() + ys.sum()
+
+    np.testing.assert_allclose(run_plain(xs), run_chunked(xs), rtol=1e-5,
+                               atol=1e-6)
+    # remat reassociates the recompute; f32 grads match to ~1e-5 abs
+    g1 = jax.grad(run_plain)(xs)
+    g2 = jax.grad(run_chunked)(xs)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4,
+                               atol=1e-5)
+
+
+# ------------------------------------------------ ring cache mapping ----
+
+@given(s=st.integers(1, 64), w=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_ring_cache_slot_mapping(s, w, seed):
+    """Prefill's ring layout == what decode's p%W writes would produce."""
+    from repro.models.transformer import _ring_from_full
+    k_full = jax.random.normal(jax.random.PRNGKey(seed), (1, 1, s, 4))
+    ring = _ring_from_full(k_full, s, w)
+    assert ring.shape == (1, 1, w, 4)
+    want = np.zeros((w, 4), np.float32)
+    for p in range(max(0, s - w), s):       # decode would write p -> p%W
+        want[p % w] = np.asarray(k_full[0, 0, p])
+    np.testing.assert_allclose(np.asarray(ring[0, 0]), want, atol=0)

@@ -1,0 +1,167 @@
+"""gmm / rmsnorm / mamba_scan / mlstm_scan vs their oracles (shape sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import context as ctx
+
+
+def _rand(shape, dtype=jnp.float32, seed=0, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(seed), shape,
+                              jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- gmm ----
+from repro.kernels.gmm.ops import gmm
+from repro.kernels.gmm.ref import gmm_ref
+
+
+@pytest.mark.parametrize("e,c,k,n,dtype", [
+    (4, 64, 128, 128, jnp.float32),
+    (2, 128, 256, 128, jnp.float32),
+    (8, 32, 64, 64, jnp.bfloat16),
+])
+def test_gmm_matches_ref(e, c, k, n, dtype):
+    lhs = _rand((e, c, k), dtype, 0)
+    rhs = _rand((e, k, n), dtype, 1)
+    sizes = jnp.arange(e, dtype=jnp.int32) * (c // max(e - 1, 1))
+    got = gmm(lhs, rhs, sizes, block_c=32, block_n=64, block_k=64)
+    want = gmm_ref(lhs, rhs, sizes)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got, jnp.float32),
+                               np.asarray(want, jnp.float32), atol=tol, rtol=tol)
+
+
+def test_gmm_grad_and_generic():
+    lhs = _rand((2, 32, 64), jnp.float32, 0)
+    rhs = _rand((2, 64, 32), jnp.float32, 1)
+    sizes = jnp.array([32, 20], jnp.int32)
+
+    def loss(l, r):
+        return jnp.sum(gmm(l, r, sizes, block_c=16, block_n=16, block_k=32) ** 2)
+
+    g1 = jax.grad(loss, (0, 1))(lhs, rhs)
+    with ctx.target("generic"):
+        g2 = jax.grad(loss, (0, 1))(lhs, rhs)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------ rmsnorm ----
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.rmsnorm.native import rmsnorm_native
+
+
+@pytest.mark.parametrize("shape,offset,dtype", [
+    ((4, 64, 256), 0.0, jnp.float32),
+    ((2, 128, 512), 1.0, jnp.float32),   # gemma convention
+    ((8, 256), 0.0, jnp.bfloat16),
+])
+def test_rmsnorm_matches_ref(shape, offset, dtype):
+    x = _rand(shape, dtype, 0)
+    w = _rand(shape[-1:], dtype, 1, scale=0.1)
+    got = rmsnorm(x, w, weight_offset=offset, block_rows=64)
+    want = rmsnorm_ref(x, w, weight_offset=offset)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, jnp.float32),
+                               np.asarray(want, jnp.float32), atol=tol, rtol=tol)
+
+
+def test_rmsnorm_native_twin_identical():
+    x = _rand((64, 256), jnp.float32, 0)
+    w = _rand((256,), jnp.float32, 1)
+    a = rmsnorm(x, w, block_rows=32)
+    b = rmsnorm_native(x, w, block_rows=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rmsnorm_grad():
+    x = _rand((16, 128), jnp.float32)
+    w = _rand((128,), jnp.float32, 1)
+    g1 = jax.grad(lambda x_, w_: jnp.sum(rmsnorm(x_, w_) ** 2), (0, 1))(x, w)
+    g2 = jax.grad(lambda x_, w_: jnp.sum(rmsnorm_ref(x_, w_) ** 2), (0, 1))(x, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------- mamba_scan ----
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+@pytest.mark.parametrize("b,s,d,n,chunk", [
+    (2, 64, 32, 8, 16),
+    (1, 128, 64, 16, 32),
+])
+def test_mamba_scan_matches_ref(b, s, d, n, chunk):
+    x = _rand((b, s, d), jnp.float32, 0)
+    dt = jax.nn.softplus(_rand((b, s, d), jnp.float32, 1))
+    A = -jnp.exp(_rand((d, n), jnp.float32, 2, scale=0.5))
+    Bm = _rand((b, s, n), jnp.float32, 3)
+    Cm = _rand((b, s, n), jnp.float32, 4)
+    D = _rand((d,), jnp.float32, 5)
+    y_k, h_k = mamba_scan(x, dt, A, Bm, Cm, D, chunk=chunk)
+    y_r, h_r = mamba_scan_ref(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_mamba_scan_grad():
+    b, s, d, n = 1, 32, 16, 8
+    x = _rand((b, s, d), jnp.float32, 0)
+    dt = jax.nn.softplus(_rand((b, s, d), jnp.float32, 1))
+    A = -jnp.exp(_rand((d, n), jnp.float32, 2, scale=0.5))
+    Bm = _rand((b, s, n), jnp.float32, 3)
+    Cm = _rand((b, s, n), jnp.float32, 4)
+    D = _rand((d,), jnp.float32, 5)
+
+    def loss(x_):
+        y, _ = mamba_scan(x_, dt, A, Bm, Cm, D, chunk=16)
+        return jnp.sum(y ** 2)
+
+    def loss_ref(x_):
+        y, _ = mamba_scan_ref(x_, dt, A, Bm, Cm, D)
+        return jnp.sum(y ** 2)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(loss)(x)),
+                               np.asarray(jax.grad(loss_ref)(x)),
+                               atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------- mlstm_scan ----
+from repro.kernels.mlstm_scan.ops import mlstm_scan
+from repro.kernels.mlstm_scan.ref import mlstm_scan_ref
+
+
+@pytest.mark.parametrize("b,h,s,dk,dv,chunk", [
+    (1, 2, 64, 32, 32, 16),
+    (2, 1, 128, 64, 64, 32),
+])
+def test_mlstm_scan_matches_ref(b, h, s, dk, dv, chunk):
+    q = _rand((b, h, s, dk), jnp.float32, 0)
+    k = _rand((b, h, s, dk), jnp.float32, 1)
+    v = _rand((b, h, s, dv), jnp.float32, 2)
+    ig = _rand((b, h, s), jnp.float32, 3)
+    fg = _rand((b, h, s), jnp.float32, 4) + 2.0
+    got = mlstm_scan(q, k, v, ig, fg, chunk=chunk)
+    want = mlstm_scan_ref(q, k, v, ig, fg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_mlstm_generic_matches_kernel():
+    b, h, s, dk, dv = 1, 1, 32, 16, 16
+    args = [_rand((b, h, s, dk), jnp.float32, i) for i in range(2)] + \
+           [_rand((b, h, s, dv), jnp.float32, 2)] + \
+           [_rand((b, h, s), jnp.float32, 3), _rand((b, h, s), jnp.float32, 4)]
+    with ctx.target("generic"):
+        a = mlstm_scan(*args, chunk=16)
+    bres = mlstm_scan(*args, chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bres),
+                               atol=2e-5, rtol=2e-5)

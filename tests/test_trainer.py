@@ -1,0 +1,98 @@
+"""Trainer: convergence, deterministic restart, fault injection,
+straggler detection, microbatch-accumulation equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs.smoke import smoke_config
+from repro.train import SimulatedFailure, TrainConfig, Trainer
+
+SHAPE = ShapeConfig("test", seq_len=32, global_batch=4, kind="train")
+
+
+def _trainer(tmp_path=None, **kw):
+    cfg = smoke_config("granite-8b", num_layers=2)
+    tc = TrainConfig(steps=kw.pop("steps", 6), peak_lr=3e-3,
+                     warmup_steps=2,
+                     ckpt_dir=str(tmp_path) if tmp_path else None,
+                     ckpt_every=kw.pop("ckpt_every", 3), **kw)
+    return Trainer(cfg, SHAPE, tc)
+
+
+def test_loss_decreases():
+    cfg = smoke_config("granite-8b", num_layers=2)
+    tc = TrainConfig(steps=20, peak_lr=1e-2, warmup_steps=2)
+    hist = Trainer(cfg, SHAPE, tc).run()["history"]
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.05, (first, last)
+
+
+def test_restart_is_deterministic(tmp_path):
+    # run 6 steps straight
+    t_full = _trainer(tmp_path / "a", steps=6, ckpt_every=3)
+    full = t_full.run()["history"]
+
+    # run 3 steps, "crash", restart and run to 6
+    t1 = _trainer(tmp_path / "b", steps=3, ckpt_every=3)
+    t1.run()
+    t2 = _trainer(tmp_path / "b", steps=6, ckpt_every=3)
+    resumed = t2.run()["history"]
+    assert resumed[0]["step"] == 3          # restarted from the checkpoint
+    # same data + same restored state => same losses as the straight run
+    np.testing.assert_allclose(
+        [h["loss"] for h in resumed],
+        [h["loss"] for h in full[3:]], rtol=2e-4, atol=2e-4)
+
+
+def test_fault_injection_and_recovery(tmp_path):
+    t = _trainer(tmp_path, steps=6, ckpt_every=2, fail_at_step=4)
+    with pytest.raises(SimulatedFailure):
+        t.run()
+    # recovery: new trainer picks up from the last COMMITTED checkpoint.
+    # The step-4 save is async and races the injected failure: resuming
+    # from 4 (save won) or 2 (crash won — atomic commit discards the
+    # partial write) are both correct recovery points.
+    t2 = _trainer(tmp_path, steps=6, ckpt_every=2)
+    out = t2.run()
+    assert out["history"][0]["step"] in (2, 4)
+    assert out["history"][-1]["step"] == 5
+
+
+def test_straggler_detection():
+    t = _trainer(steps=1)
+    for step, dt in enumerate([1.0, 1.0, 1.0, 1.0, 5.0, 1.0]):
+        t._track_straggler(step, dt)
+    assert t.straggler_events == [4]
+
+
+def test_microbatch_equivalence():
+    """grad accumulation over M microbatches == single big batch."""
+    cfg = smoke_config("granite-8b", num_layers=2)
+    from repro.models.registry import build_model
+    from repro.optim import AdamWConfig
+    from repro.train.trainer import make_train_step
+    from repro.data import SyntheticLM
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig()
+    from repro.optim import adamw_init
+    batch = {k: jnp.asarray(v) for k, v in
+             SyntheticLM(cfg, SHAPE, seed=1).batch_at(0).items()}
+
+    s1 = jax.jit(make_train_step(model, opt_cfg, lambda s: 1e-3, 1))
+    s2 = jax.jit(make_train_step(model, opt_cfg, lambda s: 1e-3, 2))
+    p1, _, m1 = s1(params, adamw_init(params, opt_cfg), batch)
+    p2, _, m2 = s2(params, adamw_init(params, opt_cfg), batch)
+    # losses averaged over microbatches differ only by batch statistics
+    # of the loss denominators; parameters after one step must agree
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-3, rtol=5e-3)

@@ -1,0 +1,141 @@
+"""Unit tests for the declare_variant dispatch system (paper §3.2)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import context as ctx
+from repro.core import variant as V
+
+
+def _mk_base():
+    @V.declare_target(name=f"_t_base_{id(object())}")
+    def base(x):
+        return ("base", x)
+    return base
+
+
+def test_base_fallback_when_no_variant_matches():
+    base = _mk_base()
+    with ctx.target("generic"):
+        assert base(1) == ("base", 1)
+
+
+def test_arch_variant_selected():
+    base = _mk_base()
+
+    @V.declare_variant(base, match=V.match(device=V.arch("tpu")))
+    def tpu_impl(x):
+        return ("tpu", x)
+
+    with ctx.target("tpu"):
+        assert base(2) == ("tpu", 2)
+    with ctx.target("interpret"):
+        assert base(2) == ("base", 2)
+
+
+def test_match_any_extension():
+    """Paper's match_any: one variant serves several archs (nvptx,nvptx64)."""
+    base = _mk_base()
+
+    @V.declare_variant(base, match=V.match(device=V.arch("interpret", "generic"),
+                                           implementation="match_any"))
+    def both(x):
+        return ("both", x)
+
+    with ctx.target("interpret"):
+        assert base(0) == ("both", 0)
+    with ctx.target("generic"):
+        assert base(0) == ("both", 0)
+    with ctx.target("tpu"):
+        assert base(0) == ("base", 0)
+
+
+def test_default_all_semantics_requires_exact():
+    """Without match_any, multiple arch props can't all hold (scalar trait)."""
+    base = _mk_base()
+
+    @V.declare_variant(base, match=V.match(device=V.arch("interpret", "generic")))
+    def never(x):
+        return ("never", x)
+
+    for a in ("interpret", "generic", "tpu"):
+        with ctx.target(a):
+            assert base(1) == ("base", 1)
+
+
+def test_match_none_extension():
+    base = _mk_base()
+
+    @V.declare_variant(base, match=V.match(device=V.arch("tpu"),
+                                           implementation="match_none"))
+    def not_tpu(x):
+        return ("not_tpu", x)
+
+    with ctx.target("tpu"):
+        assert base(1) == ("base", 1)
+    with ctx.target("interpret"):
+        assert base(1) == ("not_tpu", 1)
+
+
+def test_scoring_isa_beats_arch():
+    """OpenMP 5.1 scoring: more-significant selector sets win."""
+    base = _mk_base()
+
+    @V.declare_variant(base, match=V.match(device=V.arch("tpu")))
+    def arch_only(x):
+        return ("arch", x)
+
+    @V.declare_variant(base, match=V.match(device=[V.arch("tpu"), V.isa("v5e")]))
+    def arch_isa(x):
+        return ("arch+isa", x)
+
+    with ctx.target("tpu", isa="v5e"):
+        assert base(1) == ("arch+isa", 1)
+    with ctx.target("tpu", isa="v4"):
+        assert base(1) == ("arch", 1)
+    with ctx.target("tpu"):
+        assert base(1) == ("arch", 1)
+
+
+def test_tie_breaks_by_registration_order():
+    base = _mk_base()
+
+    @V.declare_variant(base, match=V.match(device=V.arch("tpu")))
+    def first(x):
+        return ("first", x)
+
+    @V.declare_variant(base, match=V.match(device=V.arch("tpu")))
+    def second(x):
+        return ("second", x)
+
+    with ctx.target("tpu"):
+        assert base(1) == ("second", 1)
+
+
+def test_variant_error_stub():
+    @V.declare_target(name=f"_t_stub_{id(object())}")
+    def stub(x):
+        raise V.VariantError("target dependent implementation missing")
+
+    with ctx.target("generic"):
+        with pytest.raises(V.VariantError):
+            stub(1)
+
+
+def test_context_detection_on_cpu():
+    # container is CPU-only => default target is the interpreter
+    assert ctx.detect_default_context().arch == ctx.ARCH_INTERPRET
+    assert ctx.current_context().arch == ctx.ARCH_INTERPRET
+
+
+def test_context_nesting():
+    with ctx.target("tpu"):
+        assert ctx.current_context().arch == "tpu"
+        with ctx.target("generic"):
+            assert ctx.current_context().arch == "generic"
+        assert ctx.current_context().arch == "tpu"
+    assert ctx.current_context().arch == ctx.ARCH_INTERPRET
+
+
+def test_unknown_arch_rejected():
+    with pytest.raises(ValueError):
+        ctx.target("cuda")
