@@ -14,9 +14,16 @@ Compared pairs:
   * rmsnorm:         kernels/rmsnorm/{rmsnorm,native}.py
   * all six SPEC ACCEL stand-ins: NativeRuntime vs DeviceRuntime binding
   * both miniQMC target regions
+
+In addition, a registry-driven sweep enumerates every ``device_op``
+declaration (repro.kernels.registry) and checks the dispatched kernel
+(interpret arch) against the oracle (generic arch) on the op's
+registered example inputs — ``--smoke`` runs only this sweep (the
+scripts/check.sh tier-1 entry point).
 """
 from __future__ import annotations
 
+import argparse
 import collections
 import functools
 import re
@@ -124,7 +131,30 @@ def run():
     return results
 
 
-def main():
+def run_registry():
+    """device_op registry sweep: dispatched kernel vs oracle per op."""
+    from repro.kernels import registry as R
+
+    key = jax.random.PRNGKey(7)
+    # one comparison implementation, shared with tests/test_op_registry.py
+    return [op.parity_diff(key) for op in R.all_ops()]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="registry sweep only (fast tier-1 entry point)")
+    args = ap.parse_args(argv)
+
+    print("op,max_abs_diff,within_tol")
+    reg_rows = run_registry()
+    for r in reg_rows:
+        print(f"{r['op']},{r['max_abs_diff']:.3e},{r['within_tol']}")
+    if not all(r["within_tol"] for r in reg_rows):
+        raise SystemExit("registry parity sweep FAILED")
+    if args.smoke:
+        return
+
     rows = run()
     print("case,ops_native,ops_portable,histogram_identical,bit_identical")
     for r in rows:

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 entry point: collection-clean pytest + the registry parity smoke.
+#
+#   ./scripts/check.sh          # full tier-1
+#   ./scripts/check.sh --fast   # skip the slow end-to-end suites
+#
+# pyproject.toml sets pythonpath=["src", "."], so bare `python -m pytest`
+# works; PYTHONPATH is still exported for the benchmark module run and
+# for older pytest versions.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+FAST=""
+if [[ "${1:-}" == "--fast" ]]; then
+    FAST="--ignore=tests/test_arch_smoke.py --ignore=tests/test_distributed.py --ignore=tests/test_trainer.py"
+fi
+
+echo "== pytest (collection must be clean) =="
+# --co surfaces collection errors (e.g. unguarded optional deps) on their own
+python -m pytest --co -q >/dev/null
+python -m pytest -q ${FAST}
+
+echo "== benchmarks/parity.py --smoke (device_op registry sweep) =="
+python -m benchmarks.parity --smoke
+
+echo "tier-1 OK"

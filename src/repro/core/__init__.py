@@ -13,4 +13,5 @@ from repro.core.variant import (  # noqa: F401
     kind, match, vendor,
 )
 from repro.core.runtime import DeviceRuntime, kernel_call, runtime  # noqa: F401
-from repro.core import atomics, intrinsics, memory  # noqa: F401
+from repro.core.op import DeviceOp, device_op, get_op, op_registry  # noqa: F401
+from repro.core import atomics, intrinsics, memory, tuning  # noqa: F401

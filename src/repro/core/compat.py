@@ -1,0 +1,19 @@
+"""Version compatibility shims for the jax API surface.
+
+Kept separate from any kernel/sharding module so version-portability
+concerns live in one small place.
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                   # jax >= 0.6 spells it jax.shard_map
+    shard_map = jax.shard_map
+except AttributeError:                 # 0.4.x: experimental, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+__all__ = ["shard_map"]

@@ -46,4 +46,4 @@ def _compiler_params_tpu(dimension_semantics=None, vmem_limit_bytes=None):
 
 @declare_variant(I.memory_space_any, match=match(device=arch("tpu")))
 def _memory_space_any_tpu():
-    return pltpu.MemorySpace.ANY
+    return pltpu.TPUMemorySpace.ANY

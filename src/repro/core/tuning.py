@@ -1,0 +1,131 @@
+"""Per-target block-size tables — the tuning axis of ``device_op``.
+
+The paper separates *what* a kernel computes (common, portable) from
+*how* it is scheduled on a target (target-dependent).  Block/tile sizes
+are the scheduling half: the right ``block_q`` for a compiled TPU kernel
+is not the right one for the CPU interpreter, and hardcoding ``512`` in
+every op signature (the seed state) bakes one target's choice into the
+portable layer.
+
+This module is the target-dependent table those defaults move into:
+
+* every ``device_op`` registers wildcard defaults for its tunables
+  (``block_q``, ``chunk``, ...) at declaration time;
+* targets (or an autotuner) may override any entry per ``arch`` or per
+  ``(arch, isa)`` — the most specific entry wins, mirroring the
+  OpenMP context-selector scoring used for code variants
+  (``core/variant.py``): isa-specific beats arch-specific beats
+  wildcard;
+* op callers pass ``block_q=None`` (the new signature default) and the
+  op resolves the value against the *current* ``TargetContext`` at
+  trace time — explicit caller values always win.
+
+``set_block_size`` is the hook a future autotuner plugs into: measure,
+then write the winning configuration back for ``(op, param, arch, isa)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+from repro.core import context as ctx_mod
+
+__all__ = [
+    "TuningTable", "table", "block_size", "set_block_size",
+    "register_defaults", "entries",
+]
+
+# (op, param, arch, isa) — arch/isa None = wildcard.
+_Key = Tuple[str, str, Optional[str], Optional[str]]
+
+
+@dataclasses.dataclass(frozen=True)
+class _Entry:
+    value: Any
+    source: str  # "default" | "target" | "override"
+
+
+class TuningTable:
+    """Target-keyed tunable-parameter store with specificity lookup."""
+
+    def __init__(self):
+        self._entries: Dict[_Key, _Entry] = {}
+        self._lock = threading.Lock()
+
+    # -- registration -----------------------------------------------------
+    def register_defaults(self, op: str, params: Dict[str, Any]) -> None:
+        """Wildcard defaults, set once at ``device_op`` declaration."""
+        with self._lock:
+            for name, value in params.items():
+                self._entries.setdefault((op, name, None, None),
+                                         _Entry(value, "default"))
+
+    def set(self, op: str, param: str, value: Any, *,
+            arch: Optional[str] = None, isa: Optional[str] = None,
+            source: str = "override") -> None:
+        """Install/overwrite an entry.  ``isa`` requires ``arch``.
+
+        This is the autotuning write-back hook: the most specific key
+        the tuner can name (op, param, arch, isa) gets the measured
+        winner.
+        """
+        if isa is not None and arch is None:
+            raise ValueError("isa-specific tuning entries need an arch")
+        with self._lock:
+            self._entries[(op, param, arch, isa)] = _Entry(value, source)
+
+    # -- lookup -----------------------------------------------------------
+    def lookup(self, op: str, param: str,
+               tc: Optional[ctx_mod.TargetContext] = None) -> Any:
+        """Most-specific match for the active target context.
+
+        Specificity (high to low): (arch, isa) > (arch,) > wildcard —
+        the same dominance order the variant selector scoring gives
+        isa > arch.
+        """
+        tc = tc or ctx_mod.current_context()
+        arch, isa = tc.device.arch, tc.device.isa
+        for key in ((op, param, arch, isa) if isa else None,
+                    (op, param, arch, None),
+                    (op, param, None, None)):
+            if key is not None and key in self._entries:
+                return self._entries[key].value
+        raise KeyError(f"no tuning entry for op={op!r} param={param!r} "
+                       f"(arch={arch!r}, isa={isa!r})")
+
+    def remove(self, op: str, param: str, *, arch: Optional[str] = None,
+               isa: Optional[str] = None) -> None:
+        """Drop one entry (no-op if absent) so lookup falls back to the
+        next-most-specific key — the inverse of :meth:`set`."""
+        with self._lock:
+            self._entries.pop((op, param, arch, isa), None)
+
+    def entries(self, op: Optional[str] = None) -> Iterator[Tuple[_Key, Any]]:
+        for key, e in sorted(self._entries.items(),
+                             key=lambda kv: tuple(x or "" for x in kv[0])):
+            if op is None or key[0] == op:
+                yield key, e.value
+
+
+#: Process-wide table; ``device_op`` declarations and targets write here.
+table = TuningTable()
+
+
+def block_size(op: str, param: str,
+               tc: Optional[ctx_mod.TargetContext] = None) -> Any:
+    return table.lookup(op, param, tc)
+
+
+def set_block_size(op: str, param: str, value: Any, *,
+                   arch: Optional[str] = None,
+                   isa: Optional[str] = None) -> None:
+    table.set(op, param, value, arch=arch, isa=isa)
+
+
+def register_defaults(op: str, params: Dict[str, Any]) -> None:
+    table.register_defaults(op, params)
+
+
+def entries(op: Optional[str] = None):
+    return table.entries(op)

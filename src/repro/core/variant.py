@@ -144,8 +144,14 @@ def match(*, device: Optional[Sequence[TraitSelector] | TraitSelector] = None,
     ext = None
     if implementation is not None:
         impls = [implementation] if isinstance(implementation, str) else list(implementation)
-        for e in impls:
-            ext = extension(e)
+        exts = {extension(e) for e in impls}
+        if len(exts) > 1:
+            # match_any and match_none contradict each other; refuse
+            # instead of silently keeping whichever was listed last.
+            raise ValueError(
+                f"conflicting implementation extensions {sorted(exts)}; "
+                "a selector takes at most one of match_any/match_none")
+        ext = exts.pop() if exts else None
     return Matcher(tuple(sels), ext)
 
 

@@ -2,12 +2,22 @@
 
 Each kernel package ships:
   <name>.py — the portable-runtime kernel (pl.pallas_call + BlockSpec)
-  ops.py    — the jit-able public entry point with declare_variant
-              dispatch (tpu/interpret -> kernel, generic -> ref) and
-              custom_vjp where training needs gradients
+  ops.py    — a ``device_op`` declaration (core/op.py) naming the
+              ref/kernel pair; dispatch, custom_vjp wiring, and
+              block-size defaults all come from the declaration
   ref.py    — pure-jnp oracle used for tests, for the generic target,
               and for the recompute backward
   native.py — (flash_attention, rmsnorm only) the kernel written the
               pre-paper way, hard-coding pltpu intrinsics, used by the
               §4.1 code-comparison parity benchmark.
+
+``repro.kernels.registry`` enumerates every declared op (with its
+ref/kernel pair, example inputs, and parity tolerances) for the
+auto-generated parity sweeps.
 """
+from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.kernels.gmm.ops import gmm  # noqa: F401
+from repro.kernels.mamba_scan.ops import mamba_scan  # noqa: F401
+from repro.kernels.mlstm_scan.ops import mlstm_scan  # noqa: F401
+from repro.kernels.rmsnorm.ops import rmsnorm  # noqa: F401

@@ -31,7 +31,7 @@ def _smem_space(rt: DeviceRuntime):
     """Scalar control data lives in SMEM (the runtime's alloc_scalar
     space); interpret mode honors the same descriptor."""
     from jax.experimental.pallas import tpu as pltpu
-    return pltpu.MemorySpace.SMEM
+    return pltpu.TPUMemorySpace.SMEM
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,

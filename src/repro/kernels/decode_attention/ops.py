@@ -1,37 +1,65 @@
-"""Public decode-attention op with variant dispatch + SP sharded variant."""
+"""Public decode-attention op, declared against ``core/op.py``.
+
+Declared ``differentiable=False``: decode is inference-only, so the op
+dispatches straight through the variant registry with no ``custom_vjp``
+wrapper.  The op returns the unnormalized (acc, m, l) residuals; this
+module's public wrapper normalizes, and sequence-parallel decode
+combines residuals across shards instead (``combine_partials``).
+"""
 from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
-from repro.core.variant import declare_target, declare_variant, match, arch
+from repro.core.op import device_op
 from repro.kernels.decode_attention import ref as _ref
 from repro.kernels.decode_attention import decode_attention as _kern
 
 
-@declare_target(name="decode_attention_impl")
-def _impl(q, k_cache, v_cache, lengths, window, softcap, scale, block_kv,
-          kv_offset):
+def _ref_impl(q, k_cache, v_cache, lengths, *, window, softcap, scale,
+              block_kv, kv_offset):
+    del block_kv
     return _ref.decode_attention_ref(
         q, k_cache, v_cache, lengths, window=window, softcap=softcap,
         scale=scale, kv_offset=kv_offset, return_residuals=True)
 
 
-@declare_variant(_impl, match=match(device=arch("tpu", "interpret"),
-                                    implementation="match_any"))
-def _impl_pallas(q, k_cache, v_cache, lengths, window, softcap, scale,
+def _kernel_impl(q, k_cache, v_cache, lengths, *, window, softcap, scale,
                  block_kv, kv_offset):
     return _kern.decode_attention_fwd(
         q, k_cache, v_cache, lengths, window=window, softcap=softcap,
         scale=scale, block_kv=block_kv, kv_offset=kv_offset)
 
 
+def _example(key):
+    kq, kk, kv = jax.random.split(key, 3)
+    b, hq, hkv, s, d = 2, 4, 2, 128, 64
+    q = jax.random.normal(kq, (b, hq, d), jnp.float32)
+    kc = jax.random.normal(kk, (b, hkv, s, d), jnp.float32)
+    vc = jax.random.normal(kv, (b, hkv, s, d), jnp.float32)
+    lengths = jnp.array([s, s // 2], jnp.int32)
+    return (q, kc, vc, lengths), dict(window=None, softcap=None, scale=None,
+                                      block_kv=None, kv_offset=0)
+
+
+decode_attention_op = device_op(
+    name="decode_attention",
+    ref=_ref_impl,
+    kernel=_kernel_impl,
+    tunables={"block_kv": 512},
+    tuning={"tpu": {"block_kv": 1024}},
+    differentiable=False,
+    example=_example,
+)
+
+
 def decode_attention(q, k_cache, v_cache, lengths, *,
                      window: Optional[int] = None,
                      softcap: Optional[float] = None,
                      scale: Optional[float] = None,
-                     block_kv: int = 512,
+                     block_kv: Optional[int] = None,
                      kv_offset: int = 0,
                      return_residuals: bool = False):
     """Single-token GQA decode attention.
@@ -39,10 +67,12 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
     q: (B, Hq, D); caches: (B, Hkv, S, D); lengths: (B,) int32 (valid
     prefix; the query is the newest token).  With return_residuals the
     unnormalized (acc, m, l) come back for cross-shard LSE combines
-    (sequence-parallel decode over a sharded KV cache).
+    (sequence-parallel decode over a sharded KV cache).  ``block_kv``
+    defaults to the per-target tuning table.
     """
-    acc, m, l = _impl(q, k_cache, v_cache, lengths, window, softcap, scale,
-                      block_kv, kv_offset)
+    acc, m, l = decode_attention_op(
+        q, k_cache, v_cache, lengths, window=window, softcap=softcap,
+        scale=scale, block_kv=block_kv, kv_offset=kv_offset)
     if return_residuals:
         return acc, m, l
     l_safe = jnp.where(l == 0.0, 1.0, l)

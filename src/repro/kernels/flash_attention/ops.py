@@ -1,102 +1,78 @@
-"""Public flash-attention op: variant dispatch + custom_vjp.
+"""Public flash-attention op, declared against ``core/op.py``.
 
-Forward dispatches through declare_variant: the tpu/interpret targets run
-the portable-runtime Pallas kernel, the generic target runs the pure-jnp
+Forward dispatches through the variant registry: tpu/interpret run the
+portable-runtime Pallas kernel, the generic target runs the pure-jnp
 oracle (the "new target for free" path).  Backward recomputes through
 the reference implementation (flash-style recompute — no quadratic
-softmax tensor is saved between fwd and bwd).
+softmax tensor is saved between fwd and bwd); it is declared as a
+``bwd=`` override because of ``q_offset``:
 
-``q_offset`` comes in two flavors: a Python int (baked into the kernel —
-the common case, zero IR overhead) or a traced scalar (sequence-parallel
-shards inside shard_map), which flows through as a real operand.
+``q_offset`` comes in two flavors: a Python int (a static parameter —
+baked into the kernel, zero IR overhead) or a traced scalar
+(sequence-parallel shards inside shard_map), which flows through as a
+real fourth operand and must receive a ``None`` cotangent.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.variant import declare_target, declare_variant, match, arch
+from repro.core.op import device_op
 from repro.kernels.flash_attention import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _kern
 
 
-@declare_target(name="flash_attention_impl")
-def _impl(q, k, v, qoff, causal, window, softcap, scale, block_q, block_kv):
-    # Portable base: the oracle (serves the generic target).
+def _ref_impl(q, k, v, qoff=None, *, causal, window, softcap, scale,
+              q_offset=0, block_q, block_kv):
+    del block_q, block_kv                      # scheduling params: ref-free
+    off = q_offset if qoff is None else qoff
     return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
                                     softcap=softcap, scale=scale,
-                                    q_offset=qoff)
+                                    q_offset=off)
 
 
-@declare_variant(_impl, match=match(device=arch("tpu", "interpret"),
-                                    implementation="match_any"))
-def _impl_pallas(q, k, v, qoff, causal, window, softcap, scale, block_q,
-                 block_kv):
+def _kernel_impl(q, k, v, qoff=None, *, causal, window, softcap, scale,
+                 q_offset=0, block_q, block_kv):
+    off = q_offset if qoff is None else qoff
     return _kern.flash_attention_fwd(
         q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
-        q_offset=qoff, block_q=block_q, block_kv=block_kv)
+        q_offset=off, block_q=block_q, block_kv=block_kv)
 
 
-# ---------------------------------------------------------------------------
-# static q_offset (Python int): offset lives in nondiff args, IR unchanged
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
-def _fa(q, k, v, causal, window, softcap, scale, qoff, block_q, block_kv):
-    return _impl(q, k, v, qoff, causal, window, softcap, scale, block_q,
-                 block_kv)
-
-
-def _fa_fwd(q, k, v, causal, window, softcap, scale, qoff, block_q, block_kv):
-    out = _impl(q, k, v, qoff, causal, window, softcap, scale, block_q,
-                block_kv)
-    return out, (q, k, v)
-
-
-def _fa_bwd(causal, window, softcap, scale, qoff, block_q, block_kv, res, g):
-    q, k, v = res
+def _bwd(params, res, g):
+    """Override: recompute via ref; a dynamic-``q_offset`` operand (4th
+    residual, traced int) is closed over and gets no cotangent."""
+    q, k, v, *rest = res
+    off = rest[0] if rest else params.get("q_offset", 0)
     _, vjp = jax.vjp(
         lambda q_, k_, v_: _ref.flash_attention_ref(
-            q_, k_, v_, causal=causal, window=window, softcap=softcap,
-            scale=scale, q_offset=qoff),
+            q_, k_, v_, causal=params["causal"], window=params["window"],
+            softcap=params["softcap"], scale=params["scale"], q_offset=off),
         q, k, v)
-    return vjp(g)
+    return (*vjp(g), *([None] * len(rest)))
 
 
-_fa.defvjp(_fa_fwd, _fa_bwd)
+def _example(key):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 4, 128, 64), jnp.float32)
+    k = jax.random.normal(kk, (1, 2, 128, 64), jnp.float32)
+    v = jax.random.normal(kv, (1, 2, 128, 64), jnp.float32)
+    return (q, k, v), dict(causal=True, window=64, softcap=30.0, scale=None,
+                           q_offset=0, block_q=None, block_kv=None)
 
 
-# ---------------------------------------------------------------------------
-# dynamic q_offset (traced scalar): offset is a real (integer) operand
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
-def _fa_dyn(q, k, v, qoff, causal, window, softcap, scale, block_q, block_kv):
-    return _impl(q, k, v, qoff, causal, window, softcap, scale, block_q,
-                 block_kv)
-
-
-def _fa_dyn_fwd(q, k, v, qoff, causal, window, softcap, scale, block_q,
-                block_kv):
-    out = _impl(q, k, v, qoff, causal, window, softcap, scale, block_q,
-                block_kv)
-    return out, (q, k, v, qoff)
-
-
-def _fa_dyn_bwd(causal, window, softcap, scale, block_q, block_kv, res, g):
-    q, k, v, qoff = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: _ref.flash_attention_ref(
-            q_, k_, v_, causal=causal, window=window, softcap=softcap,
-            scale=scale, q_offset=qoff),
-        q, k, v)
-    return (*vjp(g), None)
-
-
-_fa_dyn.defvjp(_fa_dyn_fwd, _fa_dyn_bwd)
+flash_attention_op = device_op(
+    name="flash_attention",
+    ref=_ref_impl,
+    kernel=_kernel_impl,
+    tunables={"block_q": 512, "block_kv": 512},
+    tuning={"tpu": {"block_q": 1024, "block_kv": 1024},
+            ("tpu", "v5e"): {"block_q": 512, "block_kv": 512}},
+    bwd=_bwd,
+    example=_example,
+)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,
@@ -104,15 +80,17 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     softcap: Optional[float] = None,
                     scale: Optional[float] = None,
                     q_offset: Union[int, jax.Array] = 0,
-                    block_q: int = 512, block_kv: int = 512):
+                    block_q: Optional[int] = None,
+                    block_kv: Optional[int] = None):
     """Differentiable multi-head/GQA flash attention.
 
     q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0.
     ``q_offset``: global position of q row 0 (int or traced scalar) for
     sequence-parallel shards; Sq may differ from Skv (cross-attention).
+    ``block_q``/``block_kv`` default to the per-target tuning table.
     """
+    kw = dict(causal=causal, window=window, softcap=softcap, scale=scale,
+              block_q=block_q, block_kv=block_kv)
     if isinstance(q_offset, int):
-        return _fa(q, k, v, causal, window, softcap, scale, q_offset,
-                   block_q, block_kv)
-    return _fa_dyn(q, k, v, q_offset, causal, window, softcap, scale,
-                   block_q, block_kv)
+        return flash_attention_op(q, k, v, q_offset=q_offset, **kw)
+    return flash_attention_op(q, k, v, q_offset, **kw)

@@ -62,7 +62,7 @@ def gmm_fwd(lhs, rhs, group_sizes, *, block_c: int = 512, block_n: int = 512,
         grid=(e, pl.cdiv(c, block_c), pl.cdiv(n, block_n), pl.cdiv(k, block_k)),
         in_specs=[
             pl.BlockSpec((1,), lambda ie, ic, jn, ik: (ie,),
-                         memory_space=pltpu.MemorySpace.SMEM),
+                         memory_space=pltpu.TPUMemorySpace.SMEM),
             pl.BlockSpec((1, block_c, block_k),
                          lambda ie, ic, jn, ik: (ie, ic, ik)),
             pl.BlockSpec((1, block_k, block_n),

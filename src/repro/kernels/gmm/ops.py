@@ -1,43 +1,39 @@
-"""Public grouped-matmul op (differentiable, variant-dispatched)."""
+"""Public grouped-matmul op, declared against ``core/op.py``.
+
+The backward is a ``bwd=`` override: instead of the default
+ref-recompute it masks the cotangent to each expert's valid rows and
+contracts with two einsums — cheaper than differentiating through the
+reference matmul and exact for the masked-row semantics.
+"""
 from __future__ import annotations
 
-import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.variant import declare_target, declare_variant, match, arch
+from repro.core.op import device_op
 from repro.kernels.gmm import ref as _ref
 from repro.kernels.gmm import gmm as _kern
 
 
-@declare_target(name="gmm_impl")
-def _impl(lhs, rhs, group_sizes, block_c, block_n, block_k):
+def _ref_impl(lhs, rhs, group_sizes, *, block_c, block_n, block_k):
+    del block_c, block_n, block_k
     return _ref.gmm_ref(lhs, rhs, group_sizes)
 
 
-@declare_variant(_impl, match=match(device=arch("tpu", "interpret"),
-                                    implementation="match_any"))
-def _impl_pallas(lhs, rhs, group_sizes, block_c, block_n, block_k):
+def _kernel_impl(lhs, rhs, group_sizes, *, block_c, block_n, block_k):
     return _kern.gmm_fwd(lhs, rhs, group_sizes, block_c=block_c,
                          block_n=block_n, block_k=block_k)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _gmm(lhs, rhs, group_sizes, block_c, block_n, block_k):
-    return _impl(lhs, rhs, group_sizes, block_c, block_n, block_k)
-
-
-def _gmm_fwd(lhs, rhs, group_sizes, block_c, block_n, block_k):
-    return _impl(lhs, rhs, group_sizes, block_c, block_n, block_k), \
-        (lhs, rhs, group_sizes)
-
-
-def _gmm_bwd(block_c, block_n, block_k, res, g):
+def _bwd(params, res, g):
+    """Override: einsum backward over valid rows; no ref recompute."""
     lhs, rhs, group_sizes = res
     c = lhs.shape[1]
     row = jnp.arange(c)[None, :, None]
-    gm = jnp.where(row < group_sizes[:, None, None], g.astype(jnp.float32), 0.0)
+    gm = jnp.where(row < group_sizes[:, None, None], g.astype(jnp.float32),
+                   0.0)
     dlhs = jnp.einsum("ecn,ekn->eck", gm,
                       rhs.astype(jnp.float32)).astype(lhs.dtype)
     drhs = jnp.einsum("eck,ecn->ekn", lhs.astype(jnp.float32),
@@ -45,10 +41,29 @@ def _gmm_bwd(block_c, block_n, block_k, res, g):
     return dlhs, drhs, None
 
 
-_gmm.defvjp(_gmm_fwd, _gmm_bwd)
+def _example(key):
+    kl, kr = jax.random.split(key)
+    e, c, k, n = 4, 64, 128, 128
+    lhs = jax.random.normal(kl, (e, c, k), jnp.float32)
+    rhs = jax.random.normal(kr, (e, k, n), jnp.float32)
+    sizes = jnp.arange(e, dtype=jnp.int32) * (c // (e - 1))
+    return (lhs, rhs, sizes), dict(block_c=None, block_n=None, block_k=None)
 
 
-def gmm(lhs, rhs, group_sizes, *, block_c: int = 512, block_n: int = 512,
-        block_k: int = 512):
-    """(E, C, K) @ (E, K, N) -> (E, C, N) with per-expert valid-row masking."""
-    return _gmm(lhs, rhs, group_sizes, block_c, block_n, block_k)
+gmm_op = device_op(
+    name="gmm",
+    ref=_ref_impl,
+    kernel=_kernel_impl,
+    tunables={"block_c": 512, "block_n": 512, "block_k": 512},
+    bwd=_bwd,
+    example=_example,
+    tol={"atol": 2e-4, "rtol": 2e-4},
+)
+
+
+def gmm(lhs, rhs, group_sizes, *, block_c: Optional[int] = None,
+        block_n: Optional[int] = None, block_k: Optional[int] = None):
+    """(E, C, K) @ (E, K, N) -> (E, C, N) with per-expert valid-row
+    masking.  Block sizes default to the per-target tuning table."""
+    return gmm_op(lhs, rhs, group_sizes, block_c=block_c, block_n=block_n,
+                  block_k=block_k)

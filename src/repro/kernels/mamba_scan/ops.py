@@ -1,46 +1,52 @@
-"""Public selective-scan op (differentiable via ref-recompute vjp)."""
+"""Public selective-scan op, declared against ``core/op.py``.
+
+Pure declaration: the tuple output (y, h_T) flows through the shared
+ref-recompute backward unchanged (``jax.vjp`` handles the pytree).
+"""
 from __future__ import annotations
 
-import functools
+from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
-from repro.core.variant import declare_target, declare_variant, match, arch
+from repro.core.op import device_op
 from repro.kernels.mamba_scan import ref as _ref
 from repro.kernels.mamba_scan import mamba_scan as _kern
 
 
-@declare_target(name="mamba_scan_impl")
-def _impl(x, dt, A, Bm, Cm, D, chunk):
+def _ref_impl(x, dt, A, Bm, Cm, D, *, chunk):
+    del chunk
     return _ref.mamba_scan_ref(x, dt, A, Bm, Cm, D)
 
 
-@declare_variant(_impl, match=match(device=arch("tpu", "interpret"),
-                                    implementation="match_any"))
-def _impl_pallas(x, dt, A, Bm, Cm, D, chunk):
+def _kernel_impl(x, dt, A, Bm, Cm, D, *, chunk):
     return _kern.mamba_scan_fwd(x, dt, A, Bm, Cm, D, chunk=chunk)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
-def _scan(x, dt, A, Bm, Cm, D, chunk):
-    return _impl(x, dt, A, Bm, Cm, D, chunk)
+def _example(key):
+    ks = jax.random.split(key, 6)
+    b, s, d, n = 2, 64, 32, 8
+    x = jax.random.normal(ks[0], (b, s, d), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, d), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (d, n), jnp.float32) * 0.5)
+    Bm = jax.random.normal(ks[3], (b, s, n), jnp.float32)
+    Cm = jax.random.normal(ks[4], (b, s, n), jnp.float32)
+    D = jax.random.normal(ks[5], (d,), jnp.float32)
+    return (x, dt, A, Bm, Cm, D), dict(chunk=None)
 
 
-def _scan_fwd(x, dt, A, Bm, Cm, D, chunk):
-    return _impl(x, dt, A, Bm, Cm, D, chunk), (x, dt, A, Bm, Cm, D)
+mamba_scan_op = device_op(
+    name="mamba_scan",
+    ref=_ref_impl,
+    kernel=_kernel_impl,
+    tunables={"chunk": 64},
+    example=_example,
+    tol={"atol": 1e-4, "rtol": 1e-4},
+)
 
 
-def _scan_bwd(chunk, res, g):
-    x, dt, A, Bm, Cm, D = res
-    gy, gh = g
-    _, vjp = jax.vjp(
-        lambda *a: _ref.mamba_scan_ref(*a), x, dt, A, Bm, Cm, D)
-    return vjp((gy, gh))
-
-
-_scan.defvjp(_scan_fwd, _scan_bwd)
-
-
-def mamba_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 64):
-    """Selective scan; returns (y (B,S,d_inner), h_T (B,d_inner,d_state))."""
-    return _scan(x, dt, A, Bm, Cm, D, chunk)
+def mamba_scan(x, dt, A, Bm, Cm, D, *, chunk: Optional[int] = None):
+    """Selective scan; returns (y (B,S,d_inner), h_T (B,d_inner,d_state)).
+    ``chunk`` defaults to the per-target tuning table."""
+    return mamba_scan_op(x, dt, A, Bm, Cm, D, chunk=chunk)

@@ -1,45 +1,51 @@
-"""Public mLSTM scan op (differentiable via ref-recompute vjp)."""
+"""Public mLSTM scan op, declared against ``core/op.py``.
+
+Pure declaration: dispatch, ref-recompute backward, and the ``chunk``
+tuning default all come from the ``device_op`` layer.
+"""
 from __future__ import annotations
 
-import functools
+from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
-from repro.core.variant import declare_target, declare_variant, match, arch
+from repro.core.op import device_op
 from repro.kernels.mlstm_scan import ref as _ref
 from repro.kernels.mlstm_scan import mlstm_scan as _kern
 
 
-@declare_target(name="mlstm_scan_impl")
-def _impl(q, k, v, i_gate, f_gate, chunk):
+def _ref_impl(q, k, v, i_gate, f_gate, *, chunk):
+    del chunk
     return _ref.mlstm_scan_ref(q, k, v, i_gate, f_gate)
 
 
-@declare_variant(_impl, match=match(device=arch("tpu", "interpret"),
-                                    implementation="match_any"))
-def _impl_pallas(q, k, v, i_gate, f_gate, chunk):
+def _kernel_impl(q, k, v, i_gate, f_gate, *, chunk):
     return _kern.mlstm_scan_fwd(q, k, v, i_gate, f_gate, chunk=chunk)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
-def _scan(q, k, v, i_gate, f_gate, chunk):
-    return _impl(q, k, v, i_gate, f_gate, chunk)
+def _example(key):
+    ks = jax.random.split(key, 5)
+    b, h, s, dk, dv = 1, 2, 64, 32, 32
+    q = jax.random.normal(ks[0], (b, h, s, dk), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, s, dk), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, s, dv), jnp.float32)
+    ig = jax.random.normal(ks[3], (b, h, s), jnp.float32)
+    fg = jax.random.normal(ks[4], (b, h, s), jnp.float32) + 2.0
+    return (q, k, v, ig, fg), dict(chunk=None)
 
 
-def _scan_fwd(q, k, v, i_gate, f_gate, chunk):
-    return _impl(q, k, v, i_gate, f_gate, chunk), (q, k, v, i_gate, f_gate)
+mlstm_scan_op = device_op(
+    name="mlstm_scan",
+    ref=_ref_impl,
+    kernel=_kernel_impl,
+    tunables={"chunk": 64},
+    example=_example,
+    tol={"atol": 2e-4, "rtol": 2e-4},
+)
 
 
-def _scan_bwd(chunk, res, g):
-    q, k, v, i_gate, f_gate = res
-    _, vjp = jax.vjp(lambda *a: _ref.mlstm_scan_ref(*a),
-                     q, k, v, i_gate, f_gate)
-    return vjp(g)
-
-
-_scan.defvjp(_scan_fwd, _scan_bwd)
-
-
-def mlstm_scan(q, k, v, i_gate, f_gate, *, chunk: int = 64):
-    """Stabilized mLSTM: q,k (B,H,S,Dk), v (B,H,S,Dv), gates (B,H,S)."""
-    return _scan(q, k, v, i_gate, f_gate, chunk)
+def mlstm_scan(q, k, v, i_gate, f_gate, *, chunk: Optional[int] = None):
+    """Stabilized mLSTM: q,k (B,H,S,Dk), v (B,H,S,Dv), gates (B,H,S).
+    ``chunk`` defaults to the per-target tuning table."""
+    return mlstm_scan_op(q, k, v, i_gate, f_gate, chunk=chunk)

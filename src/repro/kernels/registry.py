@@ -1,0 +1,18 @@
+"""Kernel op registry — import this module and every op is registered.
+
+``core/op.py`` owns the registry datastructure; the ``repro.kernels``
+package ``__init__`` owns the *population* (it imports each kernel
+package's ``ops.py``, whose ``device_op`` declaration self-registers).
+Importing this module pulls the package in, so parity tests
+(``tests/test_op_registry.py``) and ``benchmarks/parity.py --smoke``
+can enumerate ops from here.  A newly added kernel package only needs
+its import/re-export line in ``kernels/__init__.py`` to join every
+sweep.
+"""
+from __future__ import annotations
+
+import repro.kernels  # noqa: F401  (package __init__ registers every op)
+
+from repro.core.op import all_ops, get_op, op_registry  # noqa: F401
+
+__all__ = ["all_ops", "get_op", "op_registry"]

@@ -1,48 +1,51 @@
-"""Public fused-RMSNorm op (differentiable via ref-recompute vjp)."""
+"""Public fused-RMSNorm op, declared against ``core/op.py``.
+
+Pure declaration: dispatch, ref-recompute backward, and the
+``block_rows`` tuning default all come from the ``device_op`` layer.
+"""
 from __future__ import annotations
 
-import functools
+from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
-from repro.core.variant import declare_target, declare_variant, match, arch
+from repro.core.op import device_op
 from repro.kernels.rmsnorm import ref as _ref
 from repro.kernels.rmsnorm import rmsnorm as _kern
 
 
-@declare_target(name="rmsnorm_impl")
-def _impl(x, w, eps, weight_offset, block_rows):
+def _ref_impl(x, w, *, eps, weight_offset, block_rows):
+    del block_rows
     return _ref.rmsnorm_ref(x, w, eps=eps, weight_offset=weight_offset)
 
 
-@declare_variant(_impl, match=match(device=arch("tpu", "interpret"),
-                                    implementation="match_any"))
-def _impl_pallas(x, w, eps, weight_offset, block_rows):
+def _kernel_impl(x, w, *, eps, weight_offset, block_rows):
     return _kern.rmsnorm_fwd(x, w, eps=eps, weight_offset=weight_offset,
                              block_rows=block_rows)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _rms(x, w, eps, weight_offset, block_rows):
-    return _impl(x, w, eps, weight_offset, block_rows)
+def _example(key):
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (64, 256), jnp.float32)
+    w = jax.random.normal(kw, (256,), jnp.float32) * 0.1
+    return (x, w), dict(eps=1e-6, weight_offset=1.0, block_rows=None)
 
 
-def _rms_fwd(x, w, eps, weight_offset, block_rows):
-    return _impl(x, w, eps, weight_offset, block_rows), (x, w)
-
-
-def _rms_bwd(eps, weight_offset, block_rows, res, g):
-    x, w = res
-    _, vjp = jax.vjp(
-        lambda x_, w_: _ref.rmsnorm_ref(x_, w_, eps=eps,
-                                        weight_offset=weight_offset), x, w)
-    return vjp(g)
-
-
-_rms.defvjp(_rms_fwd, _rms_bwd)
+rmsnorm_op = device_op(
+    name="rmsnorm",
+    ref=_ref_impl,
+    kernel=_kernel_impl,
+    tunables={"block_rows": 256},
+    tuning={"tpu": {"block_rows": 512}},
+    example=_example,
+    tol={"atol": 1e-5, "rtol": 1e-5},
+)
 
 
 def rmsnorm(x, w, *, eps: float = 1e-6, weight_offset: float = 0.0,
-            block_rows: int = 256):
-    """Fused RMSNorm: x * rsqrt(mean(x^2)+eps) * (w + offset)."""
-    return _rms(x, w, eps, weight_offset, block_rows)
+            block_rows: Optional[int] = None):
+    """Fused RMSNorm: x * rsqrt(mean(x^2)+eps) * (w + offset).
+    ``block_rows`` defaults to the per-target tuning table."""
+    return rmsnorm_op(x, w, eps=eps, weight_offset=weight_offset,
+                      block_rows=block_rows)

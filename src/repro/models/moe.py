@@ -36,7 +36,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.kernels.gmm.ops import gmm
 from repro.models import layers as L
-from repro.sharding.kernel_sharding import maybe_mesh
+from repro.sharding.kernel_sharding import maybe_mesh, shard_map
 
 __all__ = ["init_moe", "apply_moe"]
 
@@ -297,7 +297,7 @@ def _apply_moe_mesh(p, x, cfg: ModelConfig, mesh, dp_axes):
         y = y.reshape(bl, sl, d).astype(xdt)
         return y, lb, z
 
-    y, lb, z = jax.shard_map(
+    y, lb, z = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, w_specs["router"], w_specs["we_gate"],
                   w_specs["we_up"], w_specs["we_down"]),

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.core.runtime import runtime
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.flash_attention.ops import flash_attention
@@ -49,7 +50,7 @@ from repro.sharding import mesh_ctx
 __all__ = [
     "sharded_flash_attention", "sharded_decode_attention",
     "sharded_mamba_scan", "sharded_mlstm_scan", "sharded_rmsnorm",
-    "maybe_mesh",
+    "maybe_mesh", "shard_map",
 ]
 
 
@@ -91,7 +92,8 @@ def sharded_flash_attention(q, k, v, *, causal: bool = True,
                             window: Optional[int] = None,
                             softcap: Optional[float] = None,
                             scale: Optional[float] = None,
-                            block_q: int = 512, block_kv: int = 512):
+                            block_q: Optional[int] = None,
+                            block_kv: Optional[int] = None):
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D)."""
     mesh = maybe_mesh()
     kw = dict(causal=causal, window=window, softcap=softcap, scale=scale,
@@ -112,8 +114,8 @@ def sharded_flash_attention(q, k, v, *, causal: bool = True,
         def body(q_, k_, v_):
             return flash_attention(q_, k_, v_, **kw)
 
-        return jax.shard_map(body, mesh=mesh, in_specs=(qs, kvs, kvs),
-                             out_specs=qs, check_vma=False)(q, k, v)
+        return shard_map(body, mesh=mesh, in_specs=(qs, kvs, kvs),
+                         out_specs=qs, check_vma=False)(q, k, v)
 
     # NOTE (§Perf-A.2, refuted): a fused batch×head sharding — flatten
     # (B, H) and shard the merged dim over every axis so attention is
@@ -133,8 +135,8 @@ def sharded_flash_attention(q, k, v, *, causal: bool = True,
             off = jax.lax.axis_index("model") * sq_loc
             return flash_attention(q_, k_, v_, q_offset=off, **kw)
 
-        return jax.shard_map(body, mesh=mesh, in_specs=(qs, kvs, kvs),
-                             out_specs=qs, check_vma=False)(q, k, v)
+        return shard_map(body, mesh=mesh, in_specs=(qs, kvs, kvs),
+                         out_specs=qs, check_vma=False)(q, k, v)
 
     # fallback: replicate over 'model' (batch-only sharding)
     qs = P(dp, None, None, None)
@@ -142,8 +144,8 @@ def sharded_flash_attention(q, k, v, *, causal: bool = True,
     def body(q_, k_, v_):
         return flash_attention(q_, k_, v_, **kw)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(qs, qs, qs),
-                         out_specs=qs, check_vma=False)(q, k, v)
+    return shard_map(body, mesh=mesh, in_specs=(qs, qs, qs),
+                     out_specs=qs, check_vma=False)(q, k, v)
 
 
 # ------------------------------------------------------------ decode ----
@@ -153,7 +155,7 @@ def sharded_decode_update_attend(q, k_new, v_new, k_cache, v_cache,
                                  window: Optional[int] = None,
                                  softcap: Optional[float] = None,
                                  scale: Optional[float] = None,
-                                 block_kv: int = 512):
+                                 block_kv: Optional[int] = None):
     """Fused cache-update + decode attention.
 
     q: (B,Hq,D); k_new/v_new: (B,Hkv,D) rope'd; caches: (B,Hkv,S,D);
@@ -193,7 +195,7 @@ def sharded_decode_update_attend(q, k_new, v_new, k_cache, v_cache,
             ck, cv = update(ck, cv, kn, vn, pos, 0)
             return decode_attention(q_, ck, cv, ln, **kw), ck, cv
 
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh,
             in_specs=(qs, ns_, ns_, cs, cs, P(dp), P(dp)),
             out_specs=(qs, cs, cs), check_vma=False)(
@@ -218,7 +220,7 @@ def sharded_decode_update_attend(q, k_new, v_new, k_cache, v_cache,
             den = jnp.where(den == 0.0, 1.0, den)
             return (num / den[..., None]).astype(q_.dtype), ck, cv
 
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh,
             in_specs=(qs, ns_, ns_, cs, cs, P(dp), P(dp)),
             out_specs=(qs, cs, cs), check_vma=False)(
@@ -231,7 +233,7 @@ def sharded_decode_update_attend(q, k_new, v_new, k_cache, v_cache,
         ck, cv = update(ck, cv, kn, vn, pos, 0)
         return decode_attention(q_, ck, cv, ln, **kw), ck, cv
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=(qs, ns_, ns_, cs, cs, P(dp), P(dp)),
         out_specs=(qs, cs, cs), check_vma=False)(
         q, k_new, v_new, k_cache, v_cache, write_pos, eff_len)
@@ -240,7 +242,7 @@ def sharded_decode_attention(q, k_cache, v_cache, lengths, *,
                              window: Optional[int] = None,
                              softcap: Optional[float] = None,
                              scale: Optional[float] = None,
-                             block_kv: int = 512):
+                             block_kv: Optional[int] = None):
     """q: (B, Hq, D); caches: (B, Hkv, S, D); lengths: (B,).
 
     Returns (B, Hq, D).  SP path: cache slot dim sharded over 'model';
@@ -263,7 +265,7 @@ def sharded_decode_attention(q, k_cache, v_cache, lengths, *,
         def body(q_, ck, cv, ln):
             return decode_attention(q_, ck, cv, ln, **kw)
 
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh, in_specs=(qs, cs, cs, P(dp)),
             out_specs=qs, check_vma=False)(q, k_cache, v_cache, lengths)
 
@@ -287,7 +289,7 @@ def sharded_decode_attention(q, k_cache, v_cache, lengths, *,
             den = jnp.where(den == 0.0, 1.0, den)
             return (num / den[..., None]).astype(q_.dtype)
 
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh, in_specs=(qs, cs, cs, P(dp)),
             out_specs=qs, check_vma=False)(q, k_cache, v_cache, lengths)
 
@@ -297,14 +299,14 @@ def sharded_decode_attention(q, k_cache, v_cache, lengths, *,
     def body(q_, ck, cv, ln):
         return decode_attention(q_, ck, cv, ln, **kw)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=(qs, cs, cs, P(dp)),
         out_specs=qs, check_vma=False)(q, k_cache, v_cache, lengths)
 
 
 # ------------------------------------------------------------- mamba ----
 
-def sharded_mamba_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 64):
+def sharded_mamba_scan(x, dt, A, Bm, Cm, D, *, chunk: Optional[int] = None):
     """x/dt: (B,S,d_inner); A: (d_inner,n); Bm/Cm: (B,S,n); D: (d_inner,).
 
     Channel parallel: the diagonal SSM recurrence never mixes channels,
@@ -324,7 +326,7 @@ def sharded_mamba_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 64):
     def body(x_, dt_, A_, B_, C_, D_):
         return mamba_scan(x_, dt_, A_, B_, C_, D_, chunk=chunk)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(xs, xs, P(ch, None), P(dp, None, None), P(dp, None, None),
                   P(ch)),
@@ -333,7 +335,7 @@ def sharded_mamba_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 64):
 
 # ------------------------------------------------------------- mlstm ----
 
-def sharded_mlstm_scan(q, k, v, i_gate, f_gate, *, chunk: int = 64):
+def sharded_mlstm_scan(q, k, v, i_gate, f_gate, *, chunk: Optional[int] = None):
     """q/k: (B,H,S,Dk); v: (B,H,S,Dv); gates: (B,H,S).
 
     Dv-sharded over 'model': C and the numerator split over value
@@ -359,7 +361,7 @@ def sharded_mlstm_scan(q, k, v, i_gate, f_gate, *, chunk: int = 64):
     def body(q_, k_, v_, i_, f_):
         return mlstm_scan(q_, k_, v_, i_, f_, chunk=chunk)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=(qs, qs, vvs, gs, gs),
         out_specs=vvs, check_vma=False)(q, k, v, i_gate, f_gate)
 
@@ -367,7 +369,7 @@ def sharded_mlstm_scan(q, k, v, i_gate, f_gate, *, chunk: int = 64):
 # ----------------------------------------------------------- rmsnorm ----
 
 def sharded_rmsnorm(x, w, *, eps: float = 1e-6, weight_offset: float = 0.0,
-                    block_rows: int = 256):
+                    block_rows: Optional[int] = None):
     """RMSNorm under a mesh runs the pure-jnp form; kernel off-mesh.
 
     §Perf-A iteration history (gemma3-4b train_4k, collective bytes/chip):

@@ -13,6 +13,7 @@ os.environ.setdefault("XLA_FLAGS",
 import dataclasses  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
+from repro.core.compat import shard_map  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs.base import ShapeConfig  # noqa: E402
@@ -158,10 +159,10 @@ def case_compressed_psum():
         mean, ef = compressed_psum({"g": g}, {"g": ef}, "data")
         return mean["g"], ef["g"]
 
-    f = jax.jit(jax.shard_map(body, mesh=mesh,
-                              in_specs=(P("data", None), P("data", None)),
-                              out_specs=(P(None, None), P("data", None)),
-                              check_vma=False))
+    f = jax.jit(shard_map(body, mesh=mesh,
+                          in_specs=(P("data", None), P("data", None)),
+                          out_specs=(P(None, None), P("data", None)),
+                          check_vma=False))
     ef = jnp.zeros((8, 256))
     got, ef = f(g_global, ef)
     rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))

@@ -139,3 +139,106 @@ def test_context_nesting():
 def test_unknown_arch_rejected():
     with pytest.raises(ValueError):
         ctx.target("cuda")
+
+
+# ---------------------------------------------------------------------------
+# Edge cases the device_op layer leans on (ISSUE 1 satellite coverage)
+# ---------------------------------------------------------------------------
+
+def test_match_rejects_conflicting_extensions():
+    """match_any + match_none contradict; must raise, not keep the last."""
+    with pytest.raises(ValueError):
+        V.match(device=V.arch("tpu"),
+                implementation=["match_any", "match_none"])
+
+
+def test_match_accepts_duplicate_extension_list():
+    m = V.match(device=V.arch("tpu", "interpret"),
+                implementation=["match_any", "match_any"])
+    assert m.ext == "match_any"
+
+
+def test_match_single_extension_in_list():
+    m = V.match(device=V.arch("tpu"), implementation=["match_none"])
+    assert m.ext == "match_none"
+
+
+def test_scoring_tiebreak_prefers_later_of_equal_score():
+    """OpenMP §7.2: equal-score candidates tie-break by registration
+    order — later registration wins even with earlier+later interleaved
+    across different-but-equal-scoring selectors."""
+    base = _mk_base()
+
+    @V.declare_variant(base, match=V.match(device=V.arch("interpret")))
+    def a(x):
+        return ("a", x)
+
+    @V.declare_variant(base, match=V.match(
+        device=V.arch("tpu", "interpret"), implementation="match_any"))
+    def b(x):
+        return ("b", x)
+
+    # same score (one arch selector each); b registered later -> wins
+    with ctx.target("interpret"):
+        assert base(1) == ("b", 1)
+
+
+def test_match_none_with_multiple_props():
+    """match_none: NO listed property may match the context."""
+    base = _mk_base()
+
+    @V.declare_variant(base, match=V.match(
+        device=V.arch("tpu", "interpret"), implementation="match_none"))
+    def neither(x):
+        return ("neither", x)
+
+    with ctx.target("generic"):
+        assert base(0) == ("neither", 0)
+    with ctx.target("tpu"):
+        assert base(0) == ("base", 0)
+    with ctx.target("interpret"):
+        assert base(0) == ("base", 0)
+
+
+def test_variant_for_is_context_independent():
+    """variant_for(arch) answers for *that* arch no matter the context."""
+    base = _mk_base()
+
+    @V.declare_variant(base, match=V.match(device=V.arch("tpu")))
+    def tpu_impl(x):
+        return ("tpu", x)
+
+    with ctx.target("generic"):
+        assert base.variant_for("tpu")(5) == ("tpu", 5)
+        assert base(5) == ("base", 5)
+
+
+def test_variant_for_under_nested_target_contexts():
+    """Nested targets: variant_for pushes/pops cleanly and the outer
+    context is restored afterwards."""
+    base = _mk_base()
+
+    @V.declare_variant(base, match=V.match(device=V.arch("interpret")))
+    def interp(x):
+        return ("interp", x)
+
+    with ctx.target("tpu"):
+        with ctx.target("generic"):
+            assert base.variant_for("interpret")(3) == ("interp", 3)
+            assert ctx.current_context().arch == "generic"
+        assert ctx.current_context().arch == "tpu"
+    assert ctx.current_context().arch == ctx.ARCH_INTERPRET
+
+
+def test_isa_specific_variant_under_nested_contexts():
+    base = _mk_base()
+
+    @V.declare_variant(base, match=V.match(device=[V.arch("tpu"),
+                                                   V.isa("v5e")]))
+    def v5e_impl(x):
+        return ("v5e", x)
+
+    with ctx.target("tpu", isa="v5e"):
+        with ctx.target("tpu", isa="v4"):
+            assert base(1) == ("base", 1)
+        assert base(1) == ("v5e", 1)
