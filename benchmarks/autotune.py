@@ -1,0 +1,155 @@
+"""Registry-driven autotune sweep + the standing perf trajectory.
+
+Sweeps every registered ``device_op`` (or ``--op`` subsets) over its
+declared ``search_space`` on each requested arch, prints before/after
+per-op timings, and emits ``BENCH_autotune.json`` at the repo root —
+the machine-readable perf trajectory ROADMAP asks every future PR to
+move (per op: baseline_ms, tuned_ms, speedup, winning config,
+arch/isa).
+
+  python -m benchmarks.autotune --write-cache          # full sweep
+  python -m benchmarks.autotune --budget 2 --op rmsnorm --arch interpret
+
+``--write-cache`` persists the winners via ``tuning.save_caches()`` to
+``tuning_cache/<arch>[__<isa>].json`` (or ``--cache-dir``); any later
+process that imports ``repro.kernels`` resolves ``block_*=None`` to
+the cached winners without re-tuning.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def bench_json_path() -> str:
+    """Canonical trajectory location: <repo root>/BENCH_autotune.json."""
+    return os.path.join(_REPO_ROOT, "BENCH_autotune.json")
+
+
+def format_rows(payload: Dict[str, Any]) -> List[str]:
+    """Render a BENCH_autotune.json payload as aligned table lines
+    (shared with benchmarks/run.py's ## Autotune section)."""
+    header = (f"{'op':<18} {'arch':<10} {'isa':<6} {'baseline_ms':>12} "
+              f"{'tuned_ms':>10} {'speedup':>8}  winning config")
+    lines = [header, "-" * len(header)]
+    for r in payload.get("results", ()):
+        cfg = " ".join(f"{k}={v}" for k, v in
+                       sorted(r.get("winning_config", {}).items()))
+        lines.append(
+            f"{r['op']:<18} {r['arch']:<10} {str(r.get('isa') or '-'):<6} "
+            f"{r['baseline_ms']:>12.3f} {r['tuned_ms']:>10.3f} "
+            f"{r['speedup']:>7.2f}x  {cfg}")
+    return lines
+
+
+def main(argv=None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--op", action="append", default=None,
+                    help="tune only this op (repeatable); default: all")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="max candidates per op (baseline included)")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="target arch (repeatable); default: "
+                         "interpret + generic")
+    ap.add_argument("--isa", default=None,
+                    help="tune at (arch, isa) specificity instead of arch")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed runs per candidate (median is kept)")
+    ap.add_argument("--warmup", type=int, default=1,
+                    help="untimed runs per candidate (absorbs compile)")
+    ap.add_argument("--write-cache", action="store_true",
+                    help="persist winners via tuning.save_caches()")
+    ap.add_argument("--cache-dir", default=None,
+                    help="use this cache dir for BOTH auto-load and "
+                         "save instead of the in-package tuning_cache/ "
+                         "(sets $REPRO_TUNING_CACHE_DIR before the "
+                         "kernels import, so committed entries are not "
+                         "layered in and re-persisted as this dir's)")
+    ap.add_argument("--out", default=None,
+                    help=f"trajectory path (default: {bench_json_path()} "
+                         "for a full sweep; a partial --op sweep writes "
+                         "no trajectory unless --out is given)")
+    args = ap.parse_args(argv)
+
+    if args.cache_dir:
+        os.environ["REPRO_TUNING_CACHE_DIR"] = args.cache_dir
+
+    from repro.core import autotune as at
+    from repro.core import context as ctx
+    from repro.core import tuning
+    from repro.kernels import registry as R
+
+    archs = args.arch or [ctx.ARCH_INTERPRET, ctx.ARCH_GENERIC]
+    for a in archs:
+        if a not in ctx.KNOWN_ARCHS:
+            ap.error(f"unknown arch {a!r}; known: {ctx.KNOWN_ARCHS}")
+    if args.op:
+        ops = []
+        for name in args.op:
+            if name not in R.op_registry:
+                ap.error(f"unknown op {name!r}; registered: "
+                         f"{sorted(R.op_registry)}")
+            ops.append(R.get_op(name))
+    else:
+        ops = list(R.all_ops())
+
+    results = []
+    for arch in archs:
+        # On the generic arch dispatch picks the reference, which
+        # ignores scheduling params — every candidate is the identical
+        # computation.  Measure the baseline only (the portability-floor
+        # row of the trajectory): searching would mine measurement noise
+        # for a fabricated speedup, and never write entries back that
+        # would shadow the declaration wildcards.
+        generic = arch == ctx.ARCH_GENERIC
+        results += at.autotune_all(
+            ops, archs=[arch], isa=args.isa,
+            budget=1 if generic else args.budget,
+            repeats=args.repeats, warmup=args.warmup, progress=print,
+            write_back=not generic)
+
+    payload = {
+        "bench": "autotune",
+        "generated_by": "python -m benchmarks.autotune",
+        "archs": archs,
+        "budget": args.budget,
+        "repeats": args.repeats,
+        "results": [r.to_json() for r in results],
+    }
+    print()
+    for line in format_rows(payload):
+        print(line)
+
+    out = args.out
+    if out is None:
+        if args.op:
+            # A partial sweep must not clobber the committed full-sweep
+            # trajectory (the standing perf record ROADMAP points at).
+            print(f"\n(partial --op sweep: not overwriting "
+                  f"{bench_json_path()}; pass --out to save)")
+        else:
+            out = bench_json_path()
+    if out is not None:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"\nwrote trajectory: {out}")
+
+    if args.write_cache:
+        paths = tuning.save_caches(args.cache_dir)
+        for p in paths:
+            print(f"wrote tuning cache: {p}")
+
+    bad = [r for r in results if r.tuned_ms > r.baseline_ms]
+    if bad:  # cannot happen by construction; fail loudly if it does
+        raise SystemExit(f"tuned_ms > baseline_ms for "
+                         f"{[r.op for r in bad]}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,10 @@ import sys
 
 
 def measure(arch: str, shape: str, mesh: str, out_dir: str):
+    # Normalize + create here (not only in main) so API callers and any
+    # cwd — installed package, repo root without experiments/ — work.
+    out_dir = os.path.abspath(os.path.normpath(out_dir))
+    os.makedirs(out_dir, exist_ok=True)
     cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
            "--shape", shape, "--mesh", mesh, "--out", out_dir, "--force"]
     r = subprocess.run(cmd, capture_output=True, text=True)
@@ -38,9 +42,12 @@ def measure(arch: str, shape: str, mesh: str, out_dir: str):
 
 def main():
     arch, shape, mesh = sys.argv[1:4]
+    # Anchor the default on this file's absolute location, not the cwd
+    # (os.path.dirname(__file__) is "" when run from the benchmarks dir).
     out_dir = sys.argv[4] if len(sys.argv) > 4 else os.path.join(
-        os.path.dirname(__file__), "..", "experiments", "dryrun")
-    measure(arch, shape, mesh, os.path.normpath(out_dir))
+        os.path.dirname(os.path.abspath(__file__)), "..", "experiments",
+        "dryrun")
+    measure(arch, shape, mesh, out_dir)
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ import argparse
 import collections
 import functools
 import re
+import time
 from typing import Dict, Tuple
 
 import jax
@@ -132,12 +133,23 @@ def run():
 
 
 def run_registry():
-    """device_op registry sweep: dispatched kernel vs oracle per op."""
+    """device_op registry sweep: dispatched kernel vs oracle per op.
+
+    Example inputs are memoized per (op, key) by ``op.example_inputs``,
+    so the sweep pays example construction once as the registry grows;
+    per-op wall time is reported so a regression names its op.
+    """
     from repro.kernels import registry as R
 
     key = jax.random.PRNGKey(7)
+    rows = []
     # one comparison implementation, shared with tests/test_op_registry.py
-    return [op.parity_diff(key) for op in R.all_ops()]
+    for op in R.all_ops():
+        t0 = time.perf_counter()
+        r = op.parity_diff(key)
+        r["wall_s"] = time.perf_counter() - t0
+        rows.append(r)
+    return rows
 
 
 def main(argv=None):
@@ -146,10 +158,11 @@ def main(argv=None):
                     help="registry sweep only (fast tier-1 entry point)")
     args = ap.parse_args(argv)
 
-    print("op,max_abs_diff,within_tol")
+    print("op,max_abs_diff,within_tol,wall_s")
     reg_rows = run_registry()
     for r in reg_rows:
-        print(f"{r['op']},{r['max_abs_diff']:.3e},{r['within_tol']}")
+        print(f"{r['op']},{r['max_abs_diff']:.3e},{r['within_tol']},"
+              f"{r['wall_s']:.2f}")
     if not all(r["within_tol"] for r in reg_rows):
         raise SystemExit("registry parity sweep FAILED")
     if args.smoke:

@@ -3,10 +3,13 @@
   Fig. 2   — SPEC ACCEL stand-ins, original vs new runtime
   Table 1  — miniQMC target regions, original vs new runtime
   §4.1     — code comparison (op-histogram + bit-identity)
+  §Autotune— per-op tuned-vs-baseline trajectory (BENCH_autotune.json)
   §Roofline— per-cell terms from the dry-run records (if present)
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 
 
@@ -30,6 +33,20 @@ def main() -> None:
     print("=" * 72)
     from benchmarks import parity
     parity.main()
+
+    print()
+    print("=" * 72)
+    print("## Autotune (from BENCH_autotune.json)")
+    print("=" * 72)
+    from benchmarks.autotune import bench_json_path, format_rows
+    path = bench_json_path()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in format_rows(json.load(f)):
+                print(line)
+    else:
+        print("(no BENCH_autotune.json; run "
+              "python -m benchmarks.autotune --write-cache)")
 
     print()
     print("=" * 72)

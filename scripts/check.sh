@@ -25,4 +25,16 @@ python -m pytest -q ${FAST}
 echo "== benchmarks/parity.py --smoke (device_op registry sweep) =="
 python -m benchmarks.parity --smoke
 
+echo "== benchmarks/autotune.py tune-smoke (search loop + cache write-back) =="
+# Seconds, not minutes: one op, two candidates, interpret arch.  Cache
+# and trajectory land in a throwaway dir so CI never dirties the repo,
+# but the full search->gate->measure->write-back path is exercised.
+TUNE_TMP="$(mktemp -d)"
+trap 'rm -rf "$TUNE_TMP"' EXIT
+python -m benchmarks.autotune --budget 2 --op rmsnorm --arch interpret \
+    --write-cache --cache-dir "$TUNE_TMP/tuning_cache" \
+    --out "$TUNE_TMP/BENCH_autotune.json"
+test -s "$TUNE_TMP/BENCH_autotune.json"
+test -s "$TUNE_TMP/tuning_cache/interpret.json"
+
 echo "tier-1 OK"

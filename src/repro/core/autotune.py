@@ -1,0 +1,272 @@
+"""Measurement-driven autotuner — the loop that turns the tuning
+*table* into a tuning *system*.
+
+The paper's performance argument is that the portable runtime matches
+native only once target-dependent scheduling choices (block/tile sizes)
+are specialized per architecture.  PR 1 gave those choices a home
+(:mod:`repro.core.tuning`, keyed ``(op, param, arch, isa)``) and a
+write-back hook (``set_block_size``); this module is what plugs into
+the hook:
+
+1. **enumerate** — for any registered :class:`~repro.core.op.DeviceOp`,
+   sweep :meth:`~repro.core.op.DeviceOp.candidate_configs`: the
+   declared ``search_space`` per tunable, constraint-pruned, baseline
+   (the declaration's hand-default resolution) first.
+2. **dedup** — kernels clamp block sizes to operand shapes, so at the
+   example's scale several candidates can lower to the identical
+   program; only the first config per distinct StableHLO lowering is
+   measured (ranking identical programs would mine timing noise for a
+   fabricated winner), the rest are recorded as aliases.
+3. **gate** — a candidate is only eligible if its output matches the
+   generic-arch oracle (the op's reference implementation) within the
+   op's declared parity tolerances.  A fast-but-wrong schedule must
+   never win.
+4. **measure** — median-of-``repeats`` walltime after ``warmup`` runs,
+   per candidate, under the requested target context.  The measurer is
+   injectable so tests can drive the search with a stubbed clock.
+5. **write back** — the winner lands in the global table via
+   ``set_block_size(..., source="autotuned")``, most-specific key the
+   caller named (arch or arch+isa); ``tuning.save_caches()`` then
+   persists it for every future process.
+
+Because the baseline config is itself measured as candidate #0 and the
+winner is the argmin over eligible candidates, ``tuned_ms <=
+baseline_ms`` holds by construction for every op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import statistics
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core import context as ctx_mod
+from repro.core import tuning as tuning_mod
+from repro.core.op import DeviceOp, compare_outputs
+
+__all__ = [
+    "Candidate", "OpTuneResult", "autotune_op", "autotune_all",
+    "median_walltime_ms", "outputs_match",
+]
+
+#: measurer signature: (run: () -> output, config) -> median milliseconds.
+Measurer = Callable[[Callable[[], Any], Dict[str, Any]], float]
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One measured (or rejected) configuration."""
+    config: Dict[str, Any]
+    correct: Optional[bool]          # False = failed the oracle gate
+    median_ms: Optional[float]       # None when rejected/errored
+    note: str = ""
+
+
+@dataclasses.dataclass
+class OpTuneResult:
+    """The autotuner's verdict for one (op, arch, isa) cell."""
+    op: str
+    arch: str
+    isa: Optional[str]
+    baseline_config: Dict[str, Any]
+    baseline_ms: float
+    best_config: Dict[str, Any]
+    tuned_ms: float
+    candidates: List[Candidate]
+    written: bool
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_ms / self.tuned_ms if self.tuned_ms else 1.0
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "op": self.op, "arch": self.arch, "isa": self.isa,
+            "baseline_config": self.baseline_config,
+            "baseline_ms": round(self.baseline_ms, 4),
+            "winning_config": self.best_config,
+            "tuned_ms": round(self.tuned_ms, 4),
+            "speedup": round(self.speedup, 3),
+            "candidates_measured": sum(1 for c in self.candidates
+                                       if c.median_ms is not None),
+            "candidates_rejected": sum(1 for c in self.candidates
+                                       if c.correct is False),
+            "candidates_aliased": sum(1 for c in self.candidates
+                                      if c.correct is None
+                                      and c.median_ms is None),
+            "written": self.written,
+        }
+
+
+def median_walltime_ms(run: Callable[[], Any], *, repeats: int = 3,
+                       warmup: int = 1) -> float:
+    """Default measurer: median-of-``repeats`` after ``warmup`` calls
+    (the warmup absorbs compilation; results are blocked on inside
+    ``run``, so perf_counter brackets real device work)."""
+    for _ in range(max(warmup, 0)):
+        run()
+    times = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        run()
+        times.append((time.perf_counter() - t0) * 1e3)
+    return statistics.median(times)
+
+
+def outputs_match(got, want, tol: Dict[str, float]) -> bool:
+    """The correctness gate — delegates to the single comparison
+    implementation shared with the parity suite
+    (:func:`repro.core.op.compare_outputs`)."""
+    return compare_outputs(got, want, tol)["within_tol"]
+
+
+def _make_runner(op: DeviceOp, operands: Tuple, merged: Dict[str, Any],
+                 arch: str, isa: Optional[str]
+                 ) -> Tuple[Callable[[], Any], Callable[[], str]]:
+    """``(run, lowered)`` for one candidate: ``run`` executes the op
+    jitted under the target context and blocks on the result (built
+    once per candidate so repeated measurement calls hit the jit cache
+    instead of re-tracing); ``lowered`` returns the StableHLO text of
+    the same program, used to detect candidates that collapse to an
+    identical kernel after shape clamping."""
+    @jax.jit
+    def jitted(*ops):
+        return op(*ops, **merged)
+
+    def run():
+        with ctx_mod.target(arch, isa=isa):
+            out = jitted(*operands)
+        return jax.block_until_ready(out)
+
+    def lowered() -> str:
+        with ctx_mod.target(arch, isa=isa):
+            return jitted.lower(*operands).as_text()
+
+    return run, lowered
+
+
+def autotune_op(op: DeviceOp, *, arch: str, isa: Optional[str] = None,
+                key=None, budget: Optional[int] = None,
+                repeats: int = 3, warmup: int = 1,
+                measurer: Optional[Measurer] = None,
+                write_back: bool = True) -> OpTuneResult:
+    """Search, gate, measure, and (optionally) write back one op's
+    tunables for ``(arch, isa)``.  See the module docstring for the
+    loop; ``measurer`` is injectable for stubbed-clock tests."""
+    if not op.tunables:
+        raise ValueError(f"op {op.name!r} has no tunables to search")
+    key = key if key is not None else jax.random.PRNGKey(0)
+    measure = measurer or (
+        lambda run, cfg: median_walltime_ms(run, repeats=repeats,
+                                            warmup=warmup))
+
+    operands, params = op.example_inputs(key)
+    # Oracle: the reference under the generic arch — the "new target
+    # for free" path is also the ground truth every schedule must hit.
+    with ctx_mod.target(ctx_mod.ARCH_GENERIC):
+        want = jax.block_until_ready(op.ref_call(operands, params))
+
+    # Baseline = the *declaration's* resolution (wildcard/hand-target
+    # entries only).  Resolving against the full table would measure a
+    # previous autotune run's cached winner against itself, collapsing
+    # every regenerated trajectory to 1.00x.
+    with ctx_mod.target(arch, isa=isa) as tc:
+        base_cfg = {
+            p: (params[p] if params.get(p) is not None
+                else tuning_mod.table.lookup(
+                    op.name, p, tc, sources=tuning_mod.DECLARED_SOURCES))
+            for p in op.tunables}
+
+    candidates: List[Candidate] = []
+    best: Optional[Candidate] = None
+    baseline_ms: Optional[float] = None
+    seen_lowerings: Dict[str, Dict[str, Any]] = {}
+    for i, cfg in enumerate(op.candidate_configs(base=base_cfg,
+                                                 budget=budget)):
+        merged = dict(params)
+        merged.update(cfg)
+        run, lowered = _make_runner(op, operands, merged, arch, isa)
+        # Alias dedup: kernels clamp block sizes to the operand shapes,
+        # so at example scale several candidates can lower to the
+        # *identical* program.  Ranking those against each other would
+        # measure pure noise — only the first config of each distinct
+        # lowering is measured, the rest are recorded as aliases.
+        try:
+            digest = hashlib.sha256(
+                lowered().encode("utf-8")).hexdigest()
+        except Exception:
+            digest = None          # let run() surface the real error
+        if digest is not None and digest in seen_lowerings:
+            rep = seen_lowerings[digest]
+            candidates.append(Candidate(
+                cfg, None, None,
+                f"aliases {rep['cfg']} after clamping "
+                f"(identical lowering; not separately measured)"))
+            continue
+        try:
+            got = run()
+        except Exception as e:  # illegal schedule the constraints missed
+            candidates.append(Candidate(cfg, False, None,
+                                        f"error: {type(e).__name__}: {e}"))
+            continue
+        if not outputs_match(got, want, op.tol):
+            candidates.append(Candidate(cfg, False, None,
+                                        "rejected: fails oracle parity"))
+            continue
+        if digest is not None:
+            seen_lowerings[digest] = {"cfg": dict(cfg)}
+        ms = measure(run, cfg)
+        cand = Candidate(cfg, True, ms)
+        candidates.append(cand)
+        if i == 0:
+            baseline_ms = ms       # candidate #0 is the baseline config
+        if best is None or ms < best.median_ms:
+            best = cand
+    if best is None:
+        raise RuntimeError(
+            f"autotune {op.name!r} on arch={arch!r}: every candidate "
+            f"failed the correctness gate "
+            f"({[c.note for c in candidates]})")
+    if baseline_ms is None:       # baseline itself was rejected
+        baseline_ms = best.median_ms
+
+    written = False
+    if write_back:
+        # Only searched params were measured; an unsearched tunable's
+        # resolved default must not be pinned as an arch-specific
+        # "autotuned" entry (it would shadow later declaration edits).
+        for p, v in best.config.items():
+            if p in op.search_space:
+                tuning_mod.set_block_size(op.name, p, v, arch=arch,
+                                          isa=isa, source="autotuned")
+                written = True
+    return OpTuneResult(op=op.name, arch=arch, isa=isa,
+                        baseline_config=base_cfg, baseline_ms=baseline_ms,
+                        best_config=dict(best.config),
+                        tuned_ms=best.median_ms,
+                        candidates=candidates, written=written)
+
+
+def autotune_all(ops: Sequence[DeviceOp], *, archs: Sequence[str],
+                 isa: Optional[str] = None, budget: Optional[int] = None,
+                 repeats: int = 3, warmup: int = 1,
+                 measurer: Optional[Measurer] = None,
+                 write_back: bool = True,
+                 progress: Optional[Callable[[str], None]] = None
+                 ) -> List[OpTuneResult]:
+    """Sweep ``ops`` × ``archs``; skips tunable-less ops."""
+    results = []
+    for arch in archs:
+        for op in ops:
+            if not op.tunables:
+                continue
+            if progress:
+                progress(f"tuning {op.name} on {arch}"
+                         f"{f'/{isa}' if isa else ''} ...")
+            results.append(autotune_op(
+                op, arch=arch, isa=isa, budget=budget, repeats=repeats,
+                warmup=warmup, measurer=measurer, write_back=write_back))
+    return results

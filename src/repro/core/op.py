@@ -26,7 +26,10 @@ collapses that boilerplate into one declaration per kernel:
   ``(op, param, arch, isa)`` instead of being hardcoded per signature.
   A call site passing ``block_q=None`` gets the table entry for the
   active :class:`~repro.core.context.TargetContext`; explicit values
-  win.
+  win.  Each op also declares a ``search_space=`` (candidate values per
+  tunable) plus ``constraints=`` (predicates over a full config that
+  prune illegal tile/shape combos); :mod:`repro.core.autotune` sweeps
+  :meth:`DeviceOp.candidate_configs` and writes measured winners back.
 
 * **registry** — every declaration lands in :data:`op_registry`, with
   an ``example`` input builder and parity tolerances, so parity tests
@@ -63,16 +66,20 @@ DESIGN.md §8 walks through both.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Iterable, Mapping, Optional, Sequence, Tuple
+import itertools
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, \
+    Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import context as ctx_mod
 from repro.core import tuning as tuning_mod
 from repro.core import variant as variant_mod
 
-__all__ = ["DeviceOp", "device_op", "op_registry", "get_op", "all_ops"]
+__all__ = ["DeviceOp", "device_op", "op_registry", "get_op", "all_ops",
+           "compare_outputs"]
 
 #: name -> DeviceOp; parity tests and benchmarks enumerate this.
 op_registry: Dict[str, "DeviceOp"] = {}
@@ -85,6 +92,43 @@ def _freeze(params: Mapping[str, Any]) -> _Params:
         return tuple(sorted(params.items()))
     except TypeError as e:  # unsortable key mix — should not happen
         raise TypeError(f"op params must have str keys: {params}") from e
+
+
+def _key_bytes(key) -> bytes:
+    """Stable bytes for a PRNG key (old uint32 pair or new typed key)."""
+    try:
+        arr = np.asarray(key)
+    except TypeError:
+        arr = np.asarray(jax.random.key_data(key))
+    return arr.tobytes()
+
+
+def compare_outputs(got, want, tol: Mapping[str, float]) -> Dict[str, Any]:
+    """THE output comparison: structure + per-leaf float32 allclose.
+
+    The single comparison implementation behind the parity suite,
+    ``benchmarks/parity.py --smoke``, and the autotuner's correctness
+    gate — one site to fix if tolerances or comparison semantics ever
+    change.
+    """
+    structure_match = (jax.tree_util.tree_structure(got)
+                       == jax.tree_util.tree_structure(want))
+    max_abs = 0.0
+    within = structure_match
+    if structure_match:
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(want)):
+            a32 = jnp.asarray(a, jnp.float32)
+            b32 = jnp.asarray(b, jnp.float32)
+            if a32.shape != b32.shape:
+                within = False
+                max_abs = float("inf")
+                continue
+            max_abs = max(max_abs, float(jnp.max(jnp.abs(a32 - b32))))
+            within &= bool(jnp.allclose(a32, b32, atol=tol["atol"],
+                                        rtol=tol["rtol"]))
+    return {"max_abs_diff": max_abs, "within_tol": within,
+            "structure_match": structure_match}
 
 
 class DeviceOp:
@@ -103,6 +147,9 @@ class DeviceOp:
                                                 ctx_mod.ARCH_INTERPRET),
                  tunables: Optional[Mapping[str, Any]] = None,
                  tuning: Optional[Mapping[Any, Mapping[str, Any]]] = None,
+                 search_space: Optional[Mapping[str, Sequence[Any]]] = None,
+                 constraints: Optional[Sequence[Callable[[Dict[str, Any]],
+                                                         bool]]] = None,
                  bwd: Optional[Callable] = None,
                  differentiable: bool = True,
                  diff_operands: Optional[Sequence[int]] = None,
@@ -115,6 +162,14 @@ class DeviceOp:
         self.ref = ref
         self.kernel = kernel
         self.tunables = tuple((tunables or {}).keys())
+        self.search_space = {k: tuple(v)
+                             for k, v in (search_space or {}).items()}
+        unknown = set(self.search_space) - set(self.tunables)
+        if unknown:
+            raise ValueError(f"device_op {name!r}: search_space names "
+                             f"non-tunable params {sorted(unknown)}")
+        self.constraints = tuple(constraints or ())
+        self._example_cache: Dict[bytes, Tuple[Tuple, Dict[str, Any]]] = {}
         self.differentiable = differentiable
         self.diff_operands = (tuple(diff_operands)
                               if diff_operands is not None else None)
@@ -171,6 +226,53 @@ class DeviceOp:
                 params[p] = tuning_mod.block_size(self.name, p, tc)
         return params
 
+    def candidate_configs(self, *, base: Optional[Mapping[str, Any]] = None,
+                          budget: Optional[int] = None
+                          ) -> List[Dict[str, Any]]:
+        """Enumerate tunable configs for the autotuner.
+
+        The ``base`` (current-table) config always comes first — it is
+        the measured baseline and the fallback if every other candidate
+        fails the correctness gate.  The rest is the constraint-filtered
+        cartesian product of ``search_space``, deduplicated against the
+        base; ``budget`` caps the total number returned (base included).
+        """
+        base_cfg = dict(base or {})
+        names = [p for p in self.tunables if p in self.search_space]
+        configs: List[Dict[str, Any]] = [dict(base_cfg)]
+        seen = {_freeze(base_cfg)}
+        for combo in itertools.product(*(self.search_space[p]
+                                         for p in names)):
+            cfg = dict(base_cfg)
+            cfg.update(zip(names, combo))
+            if not all(pred(cfg) for pred in self.constraints):
+                continue
+            frozen = _freeze(cfg)
+            if frozen in seen:
+                continue
+            seen.add(frozen)
+            configs.append(cfg)
+        if budget is not None:
+            configs = configs[:max(1, budget)]
+        return configs
+
+    def example_inputs(self, key) -> Tuple[Tuple, Dict[str, Any]]:
+        """``example(key)``, memoized per key value.
+
+        Example construction traces through ``jax.random``; sweeps that
+        visit every op repeatedly (parity smoke, the autotuner's
+        baseline + oracle + candidates) would otherwise re-trace it
+        from scratch each time.
+        """
+        if self.example is None:
+            raise ValueError(f"op {self.name!r} declares no example inputs")
+        kb = _key_bytes(key)
+        hit = self._example_cache.get(kb)
+        if hit is None:
+            hit = self.example(key)
+            self._example_cache[kb] = hit
+        return hit
+
     def __call__(self, *operands, **params):
         params = self.resolve_params(params)
         if not self.differentiable:
@@ -195,27 +297,12 @@ class DeviceOp:
         test suite and ``benchmarks/parity.py --smoke`` — one site to
         fix if tolerances or comparison semantics ever change.
         """
-        if self.example is None:
-            raise ValueError(f"op {self.name!r} declares no example inputs")
-        operands, params = self.example(key)
+        operands, params = self.example_inputs(key)
         with ctx_mod.target(arch_a):
             got = self(*operands, **params)
         with ctx_mod.target(arch_b):
             want = self(*operands, **params)
-        structure_match = (jax.tree_util.tree_structure(got)
-                           == jax.tree_util.tree_structure(want))
-        max_abs = 0.0
-        within = structure_match
-        if structure_match:
-            for a, b in zip(jax.tree_util.tree_leaves(got),
-                            jax.tree_util.tree_leaves(want)):
-                a32 = jnp.asarray(a, jnp.float32)
-                b32 = jnp.asarray(b, jnp.float32)
-                max_abs = max(max_abs, float(jnp.max(jnp.abs(a32 - b32))))
-                within &= bool(jnp.allclose(a32, b32, atol=self.tol["atol"],
-                                            rtol=self.tol["rtol"]))
-        return {"op": self.name, "max_abs_diff": max_abs,
-                "within_tol": within, "structure_match": structure_match}
+        return {"op": self.name, **compare_outputs(got, want, self.tol)}
 
     # -- backward helpers --------------------------------------------------
     def _diff_indices(self, operands: Sequence[Any]) -> Tuple[int, ...]:

@@ -11,39 +11,97 @@ This module is the target-dependent table those defaults move into:
 
 * every ``device_op`` registers wildcard defaults for its tunables
   (``block_q``, ``chunk``, ...) at declaration time;
-* targets (or an autotuner) may override any entry per ``arch`` or per
-  ``(arch, isa)`` — the most specific entry wins, mirroring the
-  OpenMP context-selector scoring used for code variants
-  (``core/variant.py``): isa-specific beats arch-specific beats
-  wildcard;
+* targets (or the autotuner, :mod:`repro.core.autotune`) may override
+  any entry per ``arch`` or per ``(arch, isa)`` — the most specific
+  entry wins, mirroring the OpenMP context-selector scoring used for
+  code variants (``core/variant.py``): isa-specific beats arch-specific
+  beats wildcard;
 * op callers pass ``block_q=None`` (the new signature default) and the
   op resolves the value against the *current* ``TargetContext`` at
   trace time — explicit caller values always win.
 
-``set_block_size`` is the hook a future autotuner plugs into: measure,
-then write the winning configuration back for ``(op, param, arch, isa)``.
+``set_block_size`` is the autotuner write-back hook: measure, then
+write the winning configuration back for ``(op, param, arch, isa)``
+with ``source="autotuned"``.
+
+**Persistence** — tuned configurations survive processes.  The table
+round-trips to JSON cache files keyed by target
+(``tuning_cache/<arch>[__<isa>].json`` under this package, overridable
+via ``$REPRO_TUNING_CACHE_DIR``).  ``repro.kernels`` auto-loads the
+caches right after every op registers, so any process that imports the
+kernels resolves ``block_*=None`` to the cached winners without
+re-tuning; ``serve``/``train`` launchers also call
+:func:`load_caches` explicitly at startup.  Entries whose op/param is
+no longer registered are dropped with a warning, not a crash.
+
+Provenance (``source`` per entry): ``default`` (declaration wildcard),
+``target`` (hand-written per-arch entry in the declaration),
+``autotuned`` (measured winner written back by the autotuner),
+``override`` (ad-hoc ``set_block_size`` caller).  Only non-``default``
+entries are persisted — wildcards are re-derived from declarations.
+
+``python -m repro.core.tuning`` pretty-prints every entry with its
+specificity and source.
 """
 from __future__ import annotations
 
 import dataclasses
+import difflib
+import json
+import os
 import threading
-from typing import Any, Dict, Iterator, Optional, Tuple
+import warnings
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from repro.core import context as ctx_mod
 
 __all__ = [
     "TuningTable", "table", "block_size", "set_block_size",
-    "register_defaults", "entries",
+    "register_defaults", "entries", "load_caches", "save_caches",
+    "default_cache_dir", "cache_filename",
 ]
 
 # (op, param, arch, isa) — arch/isa None = wildcard.
 _Key = Tuple[str, str, Optional[str], Optional[str]]
 
+#: Known provenance values, least to most interesting.
+SOURCES = ("default", "target", "override", "autotuned")
+
+#: Sources owned by kernels/*/ops.py declarations — the "hand defaults"
+#: the autotuner measures its baseline against.
+DECLARED_SOURCES = ("default", "target")
+
+CACHE_FORMAT = 1
+CACHE_ENV = "REPRO_TUNING_CACHE_DIR"
+
 
 @dataclasses.dataclass(frozen=True)
 class _Entry:
     value: Any
-    source: str  # "default" | "target" | "override"
+    source: str  # "default" | "target" | "override" | "autotuned"
+
+
+def default_cache_dir() -> str:
+    """Cache directory: ``$REPRO_TUNING_CACHE_DIR`` or the in-package
+    ``tuning_cache/`` (ships with the repo, so winners travel with it)."""
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "tuning_cache")
+
+
+def cache_filename(arch: str, isa: Optional[str] = None) -> str:
+    return f"{arch}__{isa}.json" if isa else f"{arch}.json"
+
+
+def _specificity(key: _Key) -> str:
+    _, _, arch, isa = key
+    if isa is not None:
+        return "arch+isa"
+    if arch is not None:
+        return "arch"
+    return "wildcard"
 
 
 class TuningTable:
@@ -68,31 +126,52 @@ class TuningTable:
 
         This is the autotuning write-back hook: the most specific key
         the tuner can name (op, param, arch, isa) gets the measured
-        winner.
+        winner, tagged ``source="autotuned"``.
         """
         if isa is not None and arch is None:
             raise ValueError("isa-specific tuning entries need an arch")
+        if source not in SOURCES:
+            raise ValueError(f"unknown tuning source {source!r}; "
+                             f"known: {SOURCES}")
         with self._lock:
             self._entries[(op, param, arch, isa)] = _Entry(value, source)
 
     # -- lookup -----------------------------------------------------------
     def lookup(self, op: str, param: str,
-               tc: Optional[ctx_mod.TargetContext] = None) -> Any:
+               tc: Optional[ctx_mod.TargetContext] = None, *,
+               sources: Optional[Tuple[str, ...]] = None) -> Any:
         """Most-specific match for the active target context.
 
         Specificity (high to low): (arch, isa) > (arch,) > wildcard —
         the same dominance order the variant selector scoring gives
-        isa > arch.
+        isa > arch.  ``sources`` restricts which provenances may match
+        (e.g. ``DECLARED_SOURCES`` resolves the hand defaults as if no
+        autotune write-back had ever happened).
         """
         tc = tc or ctx_mod.current_context()
         arch, isa = tc.device.arch, tc.device.isa
         for key in ((op, param, arch, isa) if isa else None,
                     (op, param, arch, None),
                     (op, param, None, None)):
-            if key is not None and key in self._entries:
-                return self._entries[key].value
+            if key is None:
+                continue
+            e = self._entries.get(key)
+            if e is not None and (sources is None or e.source in sources):
+                return e.value
         raise KeyError(f"no tuning entry for op={op!r} param={param!r} "
-                       f"(arch={arch!r}, isa={isa!r})")
+                       f"(arch={arch!r}, isa={isa!r}); {self._miss_hint(op)}")
+
+    def _miss_hint(self, op: str) -> str:
+        """Nearest registered keys, so a failed lookup names what *is*
+        in the table instead of dead-ending."""
+        params = sorted({k[1] for k in self._entries if k[0] == op})
+        if params:
+            return f"registered params for op {op!r}: {params}"
+        ops = sorted({k[0] for k in self._entries})
+        close = difflib.get_close_matches(op, ops, n=3, cutoff=0.4)
+        if close:
+            return f"op {op!r} has no entries; nearest registered ops: {close}"
+        return f"op {op!r} has no entries; registered ops: {ops[:8]}"
 
     def remove(self, op: str, param: str, *, arch: Optional[str] = None,
                isa: Optional[str] = None) -> None:
@@ -102,14 +181,162 @@ class TuningTable:
             self._entries.pop((op, param, arch, isa), None)
 
     def entries(self, op: Optional[str] = None) -> Iterator[Tuple[_Key, Any]]:
+        for key, e in self.items(op):
+            yield key, e.value
+
+    def items(self, op: Optional[str] = None) -> Iterator[Tuple[_Key, _Entry]]:
+        """Like :meth:`entries` but yields the full entry (value+source)."""
         for key, e in sorted(self._entries.items(),
                              key=lambda kv: tuple(x or "" for x in kv[0])):
             if op is None or key[0] == op:
-                yield key, e.value
+                yield key, e
+
+    def source_of(self, op: str, param: str, *,
+                  arch: Optional[str] = None,
+                  isa: Optional[str] = None) -> Optional[str]:
+        e = self._entries.get((op, param, arch, isa))
+        return e.source if e is not None else None
+
+    # -- snapshot/restore (hermetic tests, tuner dry-runs) -----------------
+    def snapshot(self) -> Dict[_Key, _Entry]:
+        """An immutable-enough copy of the table state; pair with
+        :meth:`restore` to keep tests and tuner dry-runs hermetic."""
+        with self._lock:
+            return dict(self._entries)
+
+    def restore(self, snap: Dict[_Key, _Entry]) -> None:
+        with self._lock:
+            self._entries = dict(snap)
+
+    # -- persistence -------------------------------------------------------
+    #: Only measured winners and explicit overrides persist.  "default"
+    #: and "target" entries are declaration-owned: re-derived from
+    #: kernels/*/ops.py at import, so a cache file can never fossilize
+    #: a value whose declaration was later edited.
+    PERSISTED_SOURCES = ("autotuned", "override")
+
+    def save(self, path: str, *, arch: str, isa: Optional[str] = None
+             ) -> int:
+        """Write the persistable entries for ``(arch, isa)`` to ``path``.
+
+        One file per target key — the cache directory mirrors the
+        table's specificity axis, so loading a file can never change
+        another target's resolution.
+        """
+        rows: List[Dict[str, Any]] = []
+        for (op, param, a, i), e in self.items():
+            if a == arch and i == isa and e.source in self.PERSISTED_SOURCES:
+                rows.append({"op": op, "param": param, "value": e.value,
+                             "source": e.source})
+        payload = {"format": CACHE_FORMAT, "arch": arch, "isa": isa,
+                   "entries": rows}
+        path = os.path.abspath(path)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        # Atomic publish: a concurrent reader (another process's
+        # import-time load_caches) must never see a truncated file.
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+        return len(rows)
+
+    def save_dir(self, cache_dir: Optional[str] = None) -> List[str]:
+        """Persist every arch-specific slice; returns the files written."""
+        cache_dir = cache_dir or default_cache_dir()
+        targets = sorted({(k[2], k[3]) for k, e in self.items()
+                          if k[2] is not None
+                          and e.source in self.PERSISTED_SOURCES},
+                         key=lambda t: (t[0], t[1] or ""))
+        paths = []
+        for arch, isa in targets:
+            p = os.path.join(cache_dir, cache_filename(arch, isa))
+            self.save(p, arch=arch, isa=isa)
+            paths.append(p)
+        return paths
+
+    def load(self, path: str, *, validate: bool = True) -> int:
+        """Load one cache file; returns the number of entries installed.
+
+        Stale entries — an op or param that is no longer registered —
+        are dropped with a warning instead of crashing: a cache file
+        must never be able to brick an import.
+        """
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("format") != CACHE_FORMAT:
+            warnings.warn(f"tuning cache {path}: unknown format "
+                          f"{payload.get('format')!r}; ignoring file")
+            return 0
+        arch, isa = payload.get("arch"), payload.get("isa")
+        if not arch:
+            warnings.warn(f"tuning cache {path}: missing arch; ignoring file")
+            return 0
+        known = _registered_tunables() if validate else None
+        # Stage then install: a bad row is skipped with a warning and
+        # can never leave the file half-applied.
+        staged = []
+        for row in payload.get("entries", ()):
+            op, param = row.get("op"), row.get("param")
+            if known is not None and (op not in known
+                                      or param not in known[op]):
+                warnings.warn(
+                    f"tuning cache {path}: dropping stale entry "
+                    f"{op!r}.{param!r} (no longer a registered tunable)")
+                continue
+            if "value" not in row:
+                warnings.warn(f"tuning cache {path}: dropping entry "
+                              f"{op!r}.{param!r} with no value")
+                continue
+            source = row.get("source", "autotuned")
+            if source not in self.PERSISTED_SOURCES:
+                # declaration-owned or unknown provenance has no
+                # business coming from a cache file
+                warnings.warn(f"tuning cache {path}: dropping entry "
+                              f"{op!r}.{param!r} with source {source!r}")
+                continue
+            staged.append((op, param, row["value"], source))
+        for op, param, value, source in staged:
+            self.set(op, param, value, arch=arch, isa=isa, source=source)
+        return len(staged)
+
+    # -- introspection -----------------------------------------------------
+    def dump(self, op: Optional[str] = None) -> str:
+        """Human-readable listing: every entry with specificity+source."""
+        header = (f"{'op':<18} {'param':<12} {'arch':<10} {'isa':<8} "
+                  f"{'specificity':<11} {'source':<10} value")
+        lines = [header, "-" * len(header)]
+        for key, e in self.items(op):
+            o, p, a, i = key
+            lines.append(f"{o:<18} {p:<12} {a or '*':<10} {i or '*':<8} "
+                         f"{_specificity(key):<11} {e.source:<10} {e.value}")
+        if len(lines) == 2:
+            lines.append(f"(no entries{f' for op {op!r}' if op else ''})")
+        return "\n".join(lines)
+
+
+def _registered_tunables() -> Dict[str, set]:
+    """op name -> declared tunables, importing the kernel packages so
+    the registry is populated before validation.  Late import: op.py
+    imports this module at load time; by the time a cache is loaded the
+    module graph is complete (or mid-``repro.kernels`` import, where
+    every ops.py has already run)."""
+    import repro.kernels  # noqa: F401  (self-registers every device_op)
+    from repro.core.op import op_registry
+    return {name: set(op.tunables) for name, op in op_registry.items()}
 
 
 #: Process-wide table; ``device_op`` declarations and targets write here.
 table = TuningTable()
+
+#: Cache files already applied to ``table`` (abs paths), for idempotence.
+_loaded_cache_paths: set = set()
+
+#: Paths being loaded right now — validation imports the kernel
+#: packages, whose __init__ re-enters load_caches; this stops the
+#: re-entrant pass from double-loading without permanently claiming a
+#: path that fails to load.
+_loading_cache_paths: set = set()
 
 
 def block_size(op: str, param: str,
@@ -119,8 +346,9 @@ def block_size(op: str, param: str,
 
 def set_block_size(op: str, param: str, value: Any, *,
                    arch: Optional[str] = None,
-                   isa: Optional[str] = None) -> None:
-    table.set(op, param, value, arch=arch, isa=isa)
+                   isa: Optional[str] = None,
+                   source: str = "override") -> None:
+    table.set(op, param, value, arch=arch, isa=isa, source=source)
 
 
 def register_defaults(op: str, params: Dict[str, Any]) -> None:
@@ -129,3 +357,69 @@ def register_defaults(op: str, params: Dict[str, Any]) -> None:
 
 def entries(op: Optional[str] = None):
     return table.entries(op)
+
+
+def load_caches(cache_dir: Optional[str] = None, *,
+                force: bool = False) -> int:
+    """Apply every cache file under ``cache_dir`` to the global table.
+
+    Idempotent per path (``repro.kernels`` auto-loads at import; the
+    ``serve``/``train`` launchers call this again at startup and get a
+    no-op).  Returns the number of entries installed this call.
+    """
+    cache_dir = cache_dir or default_cache_dir()
+    if not os.path.isdir(cache_dir):
+        return 0
+    n = 0
+    for fname in sorted(os.listdir(cache_dir)):
+        if not fname.endswith(".json"):
+            continue
+        path = os.path.abspath(os.path.join(cache_dir, fname))
+        if not force and path in _loaded_cache_paths:
+            continue
+        if path in _loading_cache_paths:
+            continue
+        _loading_cache_paths.add(path)
+        try:
+            n += table.load(path)
+            # only a successful load claims the path: a file that was
+            # momentarily corrupt (e.g. mid-write by a concurrent
+            # --write-cache) gets retried by the next load_caches call
+            _loaded_cache_paths.add(path)
+        except Exception as e:  # a bad cache file must never brick import
+            warnings.warn(f"tuning cache {path}: failed to load "
+                          f"({type(e).__name__}: {e}); ignoring file")
+        finally:
+            _loading_cache_paths.discard(path)
+    return n
+
+
+def save_caches(cache_dir: Optional[str] = None) -> List[str]:
+    """Persist the global table's arch-specific slices; returns paths."""
+    return table.save_dir(cache_dir)
+
+
+def main(argv=None) -> None:
+    """``python -m repro.core.tuning`` — pretty-print the live table."""
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Dump the tuning table (defaults + caches) with "
+                    "specificity and provenance per entry.")
+    ap.add_argument("--op", default=None, help="restrict to one op")
+    ap.add_argument("--cache-dir", default=None,
+                    help="inspect this cache dir INSTEAD of the default "
+                         f"(sets ${CACHE_ENV} before the kernels import, "
+                         "so the default caches are not layered in)")
+    args = ap.parse_args(argv)
+    if args.cache_dir:
+        os.environ[CACHE_ENV] = args.cache_dir
+    import repro.kernels  # noqa: F401  (register every op + auto-load caches)
+    print(table.dump(op=args.op))
+
+
+if __name__ == "__main__":
+    # Run the *imported* module's main so the table the kernel
+    # declarations populated is the table we print (running a module as
+    # __main__ creates a second module object with its own globals).
+    from repro.core import tuning as _tuning
+    _tuning.main()

@@ -21,3 +21,11 @@ from repro.kernels.gmm.ops import gmm  # noqa: F401
 from repro.kernels.mamba_scan.ops import mamba_scan  # noqa: F401
 from repro.kernels.mlstm_scan.ops import mlstm_scan  # noqa: F401
 from repro.kernels.rmsnorm.ops import rmsnorm  # noqa: F401
+
+# Every op is registered now — apply the persisted per-arch tuning
+# caches so block_*=None resolves to autotuned winners in any process
+# that imports the kernels (no re-tuning; stale entries are dropped
+# with a warning inside load_caches).
+from repro.core import tuning as _tuning
+
+_tuning.load_caches()

@@ -50,6 +50,8 @@ decode_attention_op = device_op(
     kernel=_kernel_impl,
     tunables={"block_kv": 512},
     tuning={"tpu": {"block_kv": 1024}},
+    # One query row per (batch, head): block_kv is the only tile axis.
+    search_space={"block_kv": (64, 128, 256, 512, 1024)},
     differentiable=False,
     example=_example,
 )

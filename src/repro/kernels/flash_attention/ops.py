@@ -70,6 +70,13 @@ flash_attention_op = device_op(
     tunables={"block_q": 512, "block_kv": 512},
     tuning={"tpu": {"block_q": 1024, "block_kv": 1024},
             ("tpu", "v5e"): {"block_q": 512, "block_kv": 512}},
+    # The fp32 score tile is (block_q, block_kv): cap it at 4 MiB
+    # (1024*1024 fp32 — the largest hand entry, known to fit) so no
+    # candidate over-commits VMEM; 2048-per-axis candidates are legal
+    # only paired with a small enough partner.
+    search_space={"block_q": (64, 128, 256, 512, 1024, 2048),
+                  "block_kv": (64, 128, 256, 512, 1024, 2048)},
+    constraints=(lambda c: c["block_q"] * c["block_kv"] <= 1024 * 1024,),
     bwd=_bwd,
     example=_example,
 )

@@ -55,6 +55,17 @@ gmm_op = device_op(
     ref=_ref_impl,
     kernel=_kernel_impl,
     tunables={"block_c": 512, "block_n": 512, "block_k": 512},
+    # Tile footprint = lhs (c,k) + rhs (k,n) + fp32 acc scratch (c,n);
+    # bound the sum so no candidate over-commits shared memory: the
+    # (512,512,512) default sits exactly at the cap, and 1024-per-axis
+    # candidates are legal only with small enough partner tiles.
+    search_space={"block_c": (64, 128, 256, 512, 1024),
+                  "block_n": (64, 128, 256, 512, 1024),
+                  "block_k": (64, 128, 256, 512, 1024)},
+    constraints=(lambda c: (c["block_c"] * c["block_k"]
+                            + c["block_k"] * c["block_n"]
+                            + c["block_c"] * c["block_n"])
+                 <= 3 * 512 * 512,),
     bwd=_bwd,
     example=_example,
     tol={"atol": 2e-4, "rtol": 2e-4},

@@ -40,6 +40,9 @@ mlstm_scan_op = device_op(
     ref=_ref_impl,
     kernel=_kernel_impl,
     tunables={"chunk": 64},
+    # Same trade as mamba_scan: grid-step amortization vs loop body
+    # length; the (Dk, Dv) matrix state carries across any chunking.
+    search_space={"chunk": (16, 32, 64, 128)},
     example=_example,
     tol={"atol": 2e-4, "rtol": 2e-4},
 )

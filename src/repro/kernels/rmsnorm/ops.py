@@ -38,6 +38,9 @@ rmsnorm_op = device_op(
     kernel=_kernel_impl,
     tunables={"block_rows": 256},
     tuning={"tpu": {"block_rows": 512}},
+    # Row-blocked 1D grid: any block height is legal (the kernel clamps
+    # to the row count), so the space is a pure sweep.
+    search_space={"block_rows": (32, 64, 128, 256, 512)},
     example=_example,
     tol={"atol": 1e-5, "rtol": 1e-5},
 )

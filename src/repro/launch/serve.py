@@ -28,8 +28,14 @@ def main():
 
     from repro.configs import get_config
     from repro.configs.smoke import smoke_config
+    from repro.core import tuning
     from repro.models.registry import build_model
     from repro.serve import Engine, Request, ServeConfig
+
+    # Pick up persisted per-arch tuning caches before any kernel traces:
+    # block_*=None then resolves to autotuned winners, no re-tuning.
+    # (No-op if repro.kernels already auto-loaded them at import.)
+    tuning.load_caches()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)

@@ -42,8 +42,14 @@ def main():
     from repro.configs import SHAPES, get_config
     from repro.configs.base import ShapeConfig
     from repro.configs.smoke import smoke_config
+    from repro.core import tuning
     from repro.launch.mesh import make_production_mesh
     from repro.train import TrainConfig, Trainer
+
+    # Pick up persisted per-arch tuning caches before the step traces:
+    # block_*=None then resolves to autotuned winners, no re-tuning.
+    # (No-op if repro.kernels already auto-loaded them at import.)
+    tuning.load_caches()
 
     if args.smoke:
         cfg = smoke_config(args.arch)

@@ -1,0 +1,314 @@
+"""Tuning persistence + autotune search coverage (ISSUE 2).
+
+Covers: JSON round-trip (specificity order + ``source`` provenance),
+the search loop on a stubbed-clock measurer, the correctness gate, and
+the snapshot/restore hermeticity hook every test here leans on.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import context as ctx
+from repro.core import tuning
+from repro.core.autotune import autotune_op
+from repro.core.op import device_op, op_registry
+from repro.kernels import registry as R  # noqa: F401  (register every op)
+
+
+@pytest.fixture(autouse=True)
+def hermetic_table():
+    """snapshot/restore around every test: table writes (autotuner
+    write-backs, overrides) and probe-op registrations never leak."""
+    snap = tuning.table.snapshot()
+    ops_before = set(op_registry)
+    yield
+    tuning.table.restore(snap)
+    for name in set(op_registry) - ops_before:
+        op_registry.pop(name, None)
+
+
+def _probe_op(name, *, bad_block=None, search=(8, 16, 32)):
+    """A tiny registered op whose kernel can be made deliberately wrong
+    for one block size (to exercise the correctness gate).  ``block``
+    shows up as a shape, so each candidate has a distinct lowering and
+    the alias dedup doesn't collapse the search."""
+    def ref(x, *, block):
+        del block
+        return x * 2.0
+
+    def kernel(x, *, block):
+        if bad_block is not None and block == bad_block:
+            return x * 3.0          # fast-but-wrong schedule
+        return x * 2.0 + jnp.zeros((block,), x.dtype).sum()
+
+    def example(key):
+        del key
+        return (jnp.ones((4, 4), jnp.float32),), {"block": None}
+
+    return device_op(name=name, ref=ref, kernel=kernel,
+                     tunables={"block": search[0]},
+                     search_space={"block": search},
+                     example=example, differentiable=False)
+
+
+_COSTS = {8: 5.0, 16: 1.0, 32: 3.0}
+
+
+def _stub_measurer(run, cfg):
+    return _COSTS[cfg["block"]]
+
+
+# ---------------------------------------------------------------------------
+# Persistence
+# ---------------------------------------------------------------------------
+
+def test_json_roundtrip_preserves_specificity_and_source(tmp_path):
+    t = tuning.TuningTable()
+    t.register_defaults("rmsnorm", {"block_rows": 256})
+    t.set("rmsnorm", "block_rows", 64, arch="interpret", source="autotuned")
+    t.set("rmsnorm", "block_rows", 32, arch="interpret", isa="sim",
+          source="override")
+    p_arch = tmp_path / tuning.cache_filename("interpret")
+    p_isa = tmp_path / tuning.cache_filename("interpret", "sim")
+    assert t.save(str(p_arch), arch="interpret") == 1
+    assert t.save(str(p_isa), arch="interpret", isa="sim") == 1
+
+    t2 = tuning.TuningTable()
+    t2.register_defaults("rmsnorm", {"block_rows": 256})
+    assert t2.load(str(p_arch)) == 1
+    assert t2.load(str(p_isa)) == 1
+    # specificity order survives the round-trip: isa > arch > wildcard
+    assert t2.lookup("rmsnorm", "block_rows",
+                     ctx.target("interpret", isa="sim")._ctx) == 32
+    assert t2.lookup("rmsnorm", "block_rows",
+                     ctx.target("interpret")._ctx) == 64
+    assert t2.lookup("rmsnorm", "block_rows",
+                     ctx.target("generic")._ctx) == 256
+    # provenance survives too
+    assert t2.source_of("rmsnorm", "block_rows",
+                        arch="interpret") == "autotuned"
+    assert t2.source_of("rmsnorm", "block_rows", arch="interpret",
+                        isa="sim") == "override"
+
+
+def test_declaration_owned_entries_are_not_persisted(tmp_path):
+    """default *and* target entries are re-derived from kernels/*/ops.py
+    at import; persisting them would fossilize later declaration edits."""
+    t = tuning.TuningTable()
+    t.register_defaults("rmsnorm", {"block_rows": 256})
+    t.set("rmsnorm", "block_rows", 512, arch="tpu", source="target")
+    assert t.save(str(tmp_path / "interpret.json"), arch="interpret") == 0
+    assert t.save(str(tmp_path / "tpu.json"), arch="tpu") == 0
+    assert json.load(open(tmp_path / "tpu.json"))["entries"] == []
+    assert t.save_dir(str(tmp_path / "d")) == []
+
+
+def test_load_drops_stale_entries_with_warning(tmp_path):
+    p = tmp_path / "interpret.json"
+    payload = {"format": tuning.CACHE_FORMAT, "arch": "interpret",
+               "isa": None,
+               "entries": [{"op": "ghost_op", "param": "block",
+                            "value": 7, "source": "autotuned"},
+                           {"op": "rmsnorm", "param": "ghost_param",
+                            "value": 7, "source": "autotuned"},
+                           {"op": "rmsnorm", "param": "block_rows",
+                            "value": 48, "source": "autotuned"}]}
+    p.write_text(json.dumps(payload))
+    t = tuning.TuningTable()
+    with pytest.warns(UserWarning, match="stale"):
+        n = t.load(str(p))
+    assert n == 1  # only the live rmsnorm.block_rows entry survives
+    assert t.lookup("rmsnorm", "block_rows",
+                    ctx.target("interpret")._ctx) == 48
+
+
+def test_load_caches_applies_and_is_idempotent(tmp_path):
+    tuning.set_block_size("rmsnorm", "block_rows", 48, arch="interpret",
+                          source="autotuned")
+    paths = tuning.save_caches(str(tmp_path))
+    assert any(p.endswith("interpret.json") for p in paths)
+    tuning.table.remove("rmsnorm", "block_rows", arch="interpret")
+    assert tuning.load_caches(str(tmp_path), force=True) >= 1
+    with ctx.target("interpret"):
+        assert tuning.block_size("rmsnorm", "block_rows") == 48
+    # per-path idempotence: a second (non-forced) load is a no-op
+    assert tuning.load_caches(str(tmp_path)) == 0
+
+
+def test_snapshot_restore_keeps_state_hermetic():
+    with ctx.target("interpret"):
+        before = tuning.block_size("rmsnorm", "block_rows")
+    snap = tuning.table.snapshot()
+    tuning.set_block_size("rmsnorm", "block_rows", 7, arch="interpret")
+    with ctx.target("interpret"):
+        assert tuning.block_size("rmsnorm", "block_rows") == 7
+    tuning.table.restore(snap)
+    with ctx.target("interpret"):
+        assert tuning.block_size("rmsnorm", "block_rows") == before
+
+
+# ---------------------------------------------------------------------------
+# Lookup diagnostics + dump (satellite: actionable KeyError, pretty-print)
+# ---------------------------------------------------------------------------
+
+def test_lookup_keyerror_names_registered_params():
+    with pytest.raises(KeyError) as ei:
+        tuning.block_size("rmsnorm", "definitely_not_a_param",
+                          ctx.target("generic")._ctx)
+    assert "block_rows" in str(ei.value)
+
+
+def test_lookup_keyerror_suggests_nearest_op():
+    with pytest.raises(KeyError) as ei:
+        tuning.block_size("rmsnrm", "block_rows",
+                          ctx.target("generic")._ctx)
+    assert "rmsnorm" in str(ei.value)
+
+
+def test_dump_shows_specificity_and_source():
+    tuning.set_block_size("rmsnorm", "block_rows", 96, arch="interpret",
+                          isa="sim", source="autotuned")
+    s = tuning.table.dump(op="rmsnorm")
+    assert "wildcard" in s and "default" in s
+    assert "arch+isa" in s and "autotuned" in s
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+def test_candidate_configs_baseline_first_constraints_budget():
+    op = R.get_op("flash_attention")
+    base = {"block_q": 512, "block_kv": 512}
+    cfgs = op.candidate_configs(base=base)
+    assert cfgs[0] == base
+    assert sum(1 for c in cfgs if c == base) == 1  # deduped
+    # the declared VMEM constraint prunes the over-4MiB corners but
+    # keeps the hand tpu entry (1024, 1024) reachable
+    assert all(c["block_q"] * c["block_kv"] <= 1024 * 1024 for c in cfgs)
+    assert {"block_q": 1024, "block_kv": 1024} in cfgs
+    assert {"block_q": 2048, "block_kv": 2048} not in cfgs
+    assert len(op.candidate_configs(base=base, budget=3)) == 3
+
+
+def test_autotuner_stubbed_clock_picks_fastest():
+    op = _probe_op("autotune_probe_fast")
+    res = autotune_op(op, arch="interpret", measurer=_stub_measurer)
+    assert res.baseline_config == {"block": 8}
+    assert res.best_config == {"block": 16}
+    assert res.baseline_ms == 5.0 and res.tuned_ms == 1.0
+    assert res.speedup == pytest.approx(5.0)
+    assert res.tuned_ms <= res.baseline_ms
+    # winner was written back at (op, param, arch) with provenance
+    with ctx.target("interpret"):
+        assert tuning.block_size("autotune_probe_fast", "block") == 16
+    assert tuning.table.source_of("autotune_probe_fast", "block",
+                                  arch="interpret") == "autotuned"
+    # ...and only for that arch: generic still resolves the wildcard
+    with ctx.target("generic"):
+        assert tuning.block_size("autotune_probe_fast", "block") == 8
+
+
+def test_rerun_baseline_ignores_previous_write_back():
+    """Regenerating the trajectory must keep measuring against the
+    declaration's hand defaults — not against the previous run's cached
+    winner (which would collapse every re-run to 1.00x)."""
+    op = _probe_op("autotune_probe_rerun")
+    first = autotune_op(op, arch="interpret", measurer=_stub_measurer)
+    assert first.best_config == {"block": 16}  # now in the table
+    second = autotune_op(op, arch="interpret", measurer=_stub_measurer)
+    assert second.baseline_config == {"block": 8}  # still the declared one
+    assert second.speedup == pytest.approx(5.0)
+
+
+def test_correctness_gate_rejects_wrong_candidate():
+    op = _probe_op("autotune_probe_bad", bad_block=16)
+    res = autotune_op(op, arch="interpret", measurer=_stub_measurer)
+    # block=16 is the stub-fastest but wrong; the gate must exclude it
+    assert res.best_config == {"block": 32}
+    rejected = [c for c in res.candidates if c.config == {"block": 16}]
+    assert len(rejected) == 1
+    assert rejected[0].correct is False
+    assert rejected[0].median_ms is None
+    with ctx.target("interpret"):
+        assert tuning.block_size("autotune_probe_bad", "block") == 32
+
+
+def test_alias_dedup_skips_identical_lowerings():
+    """Candidates that clamp to the identical program must share one
+    measurement — otherwise the 'winner' among them is timing noise."""
+    def ref(x, *, block):
+        del block
+        return x * 2.0
+
+    def kernel(x, *, block):
+        eff = min(block, 16)      # clamp, like every real kernel
+        # eff only shows up as a shape, so output is unchanged but the
+        # lowering is distinct per *effective* block
+        return x * 2.0 + jnp.zeros((eff,), x.dtype).sum()
+
+    def example(key):
+        del key
+        return (jnp.ones((4, 4), jnp.float32),), {"block": None}
+
+    op = device_op(name="autotune_probe_alias", ref=ref, kernel=kernel,
+                   tunables={"block": 8},
+                   search_space={"block": (8, 16, 32)},
+                   example=example, differentiable=False)
+    # stub clock would crown 32 — but 32 aliases 16 after clamping, so
+    # it must never be measured or win
+    costs = {8: 5.0, 16: 1.0, 32: 0.5}
+    res = autotune_op(op, arch="interpret",
+                      measurer=lambda run, cfg: costs[cfg["block"]])
+    assert res.best_config == {"block": 16}
+    aliased = [c for c in res.candidates if c.config == {"block": 32}]
+    assert len(aliased) == 1
+    assert aliased[0].median_ms is None and aliased[0].correct is None
+    assert "aliases" in aliased[0].note
+    with ctx.target("interpret"):
+        assert tuning.block_size("autotune_probe_alias", "block") == 16
+
+
+def test_write_back_only_touches_searched_params():
+    """A tunable outside the search_space keeps its wildcard resolution:
+    pinning its un-measured default as an arch entry would shadow later
+    declaration edits."""
+    def ref(x, *, block, other):
+        del block, other
+        return x * 2.0
+
+    def kernel(x, *, block, other):
+        del other
+        return x * 2.0 + jnp.zeros((block,), x.dtype).sum()
+
+    def example(key):
+        del key
+        return (jnp.ones((4, 4), jnp.float32),), {"block": None,
+                                                  "other": None}
+
+    op = device_op(name="autotune_probe_partial", ref=ref, kernel=kernel,
+                   tunables={"block": 8, "other": 99},
+                   search_space={"block": (8, 16, 32)},
+                   example=example, differentiable=False)
+    res = autotune_op(op, arch="interpret", measurer=_stub_measurer)
+    assert res.best_config["block"] == 16
+    assert tuning.table.source_of("autotune_probe_partial", "block",
+                                  arch="interpret") == "autotuned"
+    # the unsearched param got no arch-specific entry at all
+    assert tuning.table.source_of("autotune_probe_partial", "other",
+                                  arch="interpret") is None
+    with ctx.target("interpret"):
+        assert tuning.block_size("autotune_probe_partial", "other") == 99
+
+
+def test_autotuner_no_write_back_leaves_table_untouched():
+    op = _probe_op("autotune_probe_dry")
+    res = autotune_op(op, arch="interpret", measurer=_stub_measurer,
+                      write_back=False)
+    assert res.best_config == {"block": 16} and not res.written
+    with ctx.target("interpret"):
+        assert tuning.block_size("autotune_probe_dry", "block") == 8
