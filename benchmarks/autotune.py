@@ -134,6 +134,17 @@ def main(argv=None) -> Dict[str, Any]:
         else:
             out = bench_json_path()
     if out is not None:
+        # keep the serving section (benchmarks/serve_bench.py owns it) —
+        # a kernel-sweep regeneration must not drop the other half of
+        # the trajectory.
+        if os.path.exists(out):
+            try:
+                with open(out) as f:
+                    prev = json.load(f)
+                if "serving" in prev:
+                    payload["serving"] = prev["serving"]
+            except (OSError, ValueError):
+                pass
         with open(out, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)
             f.write("\n")

@@ -50,6 +50,19 @@ def main() -> None:
 
     print()
     print("=" * 72)
+    print("## Serving (from BENCH_autotune.json)")
+    print("=" * 72)
+    from benchmarks.serve_bench import format_serving_rows
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in format_serving_rows(json.load(f)):
+                print(line)
+    else:
+        print("(no BENCH_autotune.json; run "
+              "python -m benchmarks.serve_bench --update-bench)")
+
+    print()
+    print("=" * 72)
     print("## Roofline (from experiments/dryrun)")
     print("=" * 72)
     try:

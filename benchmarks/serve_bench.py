@@ -1,0 +1,260 @@
+"""Serving-throughput benchmark: paged engine vs the pre-PR slot engine.
+
+Measures end-to-end decode tokens/sec for three engines on the same
+request stream (smoke-scale model, interpret arch — the portable
+regime CI can check):
+
+  legacy_slot — a faithful copy of the pre-paging engine loop: per-
+                request batch-1 prefill, host-rebuilt active mask and
+                one ``int()`` sync per slot per step (kept here as the
+                measured baseline; the live engine no longer works
+                this way)
+  slot        — the rewritten engine, dense slot cache (device-resident
+                state, batched prefill, one sync/step)
+  paged       — the rewritten engine over the paged KV pool + paged
+                flash-decode kernel
+
+  python -m benchmarks.serve_bench                 # print table
+  python -m benchmarks.serve_bench --update-bench  # + merge the rows
+      into BENCH_autotune.json under "serving" (the ROADMAP perf
+      trajectory; benchmarks/autotune.py preserves the section)
+  python -m benchmarks.serve_bench --smoke         # tiny paged-vs-slot
+      parity gate for scripts/check.sh
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# The pre-PR engine, verbatim in behavior: kept as the benchmark baseline.
+# ---------------------------------------------------------------------------
+
+class LegacySlotEngine:
+    """The seed serving loop: slot-granular cache, host-driven scheduler.
+
+    Every inefficiency here is deliberate — it is the measured "before":
+    batch-1 prefill per admission, a Python list comprehension rebuilt
+    into a device array every step, and one blocking ``int()`` per slot
+    per step.
+    """
+
+    def __init__(self, model, params, sc):
+        self.model, self.params, self.sc = model, params, sc
+        self.caches = model.init_decode_caches(sc.slots, sc.cache_len)
+        self.lengths = jnp.zeros((sc.slots,), jnp.int32)
+        self.cur_tok = jnp.zeros((sc.slots,), jnp.int32)
+        self.active: List[Optional[Any]] = [None] * sc.slots
+        self.queue: List[Any] = []
+        self._prefill = jax.jit(
+            lambda p, t: model.prefill(p, t, sc.cache_len, {}))
+        self._decode = jax.jit(model.decode_step)
+
+    def _insert_slot(self, pool, one, slot):
+        def upd(p, o):
+            return jax.lax.dynamic_update_slice_in_dim(
+                p, o.astype(p.dtype), slot, axis=1)
+        return jax.tree_util.tree_map(upd, pool, one)
+
+    def _admit(self):
+        for slot in range(self.sc.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
+                logits, cache1 = self._prefill(self.params, toks)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+                self.caches = jax.tree_util.tree_map(
+                    lambda pool, one: self._insert_slot(pool, one, slot),
+                    self.caches, cache1)
+                self.lengths = self.lengths.at[slot].set(len(req.tokens))
+                self.cur_tok = self.cur_tok.at[slot].set(tok)
+                req.out.append(int(tok))
+                self.active[slot] = req
+                self._maybe_finish(slot)
+
+    def _maybe_finish(self, slot):
+        req = self.active[slot]
+        if req is None:
+            return
+        full = int(self.lengths[slot]) + 1 >= self.sc.cache_len
+        if len(req.out) >= self.sc.max_new_tokens or full:
+            req.done = True
+            self.active[slot] = None
+            self.lengths = self.lengths.at[slot].set(0)
+
+    def step(self) -> bool:
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return False
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           self.cur_tok, self.lengths)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.lengths = self.lengths + jnp.asarray(
+            [1 if r is not None else 0 for r in self.active], jnp.int32)
+        self.cur_tok = next_tok
+        for slot, req in enumerate(self.active):
+            if req is not None:
+                req.out.append(int(next_tok[slot]))
+                self._maybe_finish(slot)
+        return True
+
+    def run_to_completion(self, requests, max_steps=10_000):
+        self.queue.extend(requests)
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return requests
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+def _requests(cfg, n, plen, seed=0):
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size, size=plen).tolist())
+            for i in range(n)]
+
+
+def _throughput(engine, cfg, n, plen) -> Dict[str, Any]:
+    # warm the jit caches with an identically-shaped stream, then
+    # measure on the SAME engine: steady-state serving throughput at a
+    # stable request-shape distribution, not compile time.
+    engine.run_to_completion(_requests(cfg, n, plen, seed=99))
+    reqs = _requests(cfg, n, plen)
+    t0 = time.perf_counter()
+    engine.run_to_completion(reqs)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in reqs)
+    assert all(r.done for r in reqs)
+    return {"new_tokens": toks, "wall_s": round(dt, 3),
+            "tok_per_s": round(toks / dt, 2),
+            "sample": reqs[0].out[:4]}
+
+
+def build(paged: bool, *, arch="granite-8b", layers=2, slots=4,
+          cache_len=64, max_new=8, legacy=False):
+    from repro.configs.smoke import smoke_config
+    from repro.models.registry import build_model
+    from repro.serve import Engine, ServeConfig
+    cfg = smoke_config(arch, num_layers=layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sc = ServeConfig(slots=slots, cache_len=cache_len,
+                     max_new_tokens=max_new, paged=paged)
+    eng = (LegacySlotEngine(model, params, sc) if legacy
+           else Engine(model, params, sc))
+    return eng, cfg
+
+
+def smoke() -> None:
+    """check.sh gate: tiny run, paged and slot outputs must be equal."""
+    outs = {}
+    for paged in (False, True):
+        eng, cfg = build(paged, layers=1, slots=2, cache_len=32, max_new=4)
+        reqs = _requests(cfg, 4, 6)
+        eng.run_to_completion(reqs)
+        assert all(r.done for r in reqs)
+        outs[paged] = [r.out for r in reqs]
+    assert outs[True] == outs[False], \
+        f"paged vs slot parity FAILED: {outs}"
+    print(f"serve-smoke OK: paged == slot on {len(outs[True])} requests "
+          f"({sum(len(o) for o in outs[True])} tokens)")
+
+
+def main(argv=None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast paged-vs-slot parity gate (no timing)")
+    ap.add_argument("--prompts", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--update-bench", action="store_true",
+                    help="merge rows into BENCH_autotune.json['serving']")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        smoke()
+        return {}
+
+    rows = []
+    for name, paged, legacy in (("legacy_slot", False, True),
+                                ("slot", False, False),
+                                ("paged", True, False)):
+        eng, cfg = build(paged, layers=args.layers, slots=args.slots,
+                         cache_len=args.cache_len, max_new=args.max_new,
+                         legacy=legacy)
+        r = _throughput(eng, cfg, args.prompts, args.prompt_len)
+        r["engine"] = name
+        rows.append(r)
+        print(f"{name:<12} {r['new_tokens']:>5} tok  {r['wall_s']:>7.3f}s  "
+              f"{r['tok_per_s']:>8.2f} tok/s")
+
+    base = rows[0]["tok_per_s"]
+    for r in rows:
+        r["speedup_vs_legacy"] = round(r["tok_per_s"] / base, 3)
+    samples = {r["engine"]: r.pop("sample") for r in rows}
+    assert samples["slot"] == samples["paged"], \
+        f"paged vs slot outputs diverged: {samples}"
+    print(f"\npaged speedup vs legacy_slot: "
+          f"{rows[-1]['speedup_vs_legacy']:.2f}x "
+          f"(slot: {rows[1]['speedup_vs_legacy']:.2f}x)")
+
+    payload = {
+        "bench": "serve",
+        "generated_by": "python -m benchmarks.serve_bench --update-bench",
+        "arch": "interpret",
+        "config": {"slots": args.slots, "cache_len": args.cache_len,
+                   "prompts": args.prompts, "prompt_len": args.prompt_len,
+                   "max_new": args.max_new, "layers": args.layers,
+                   "model": "granite-8b smoke"},
+        "results": rows,
+    }
+    if args.update_bench:
+        from benchmarks.autotune import bench_json_path
+        path = bench_json_path()
+        doc = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                doc = json.load(f)
+        doc["serving"] = payload
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"merged serving rows into {path}")
+    return payload
+
+
+def format_serving_rows(doc: Dict[str, Any]) -> List[str]:
+    """Render BENCH_autotune.json['serving'] (shared with run.py)."""
+    serving = doc.get("serving")
+    if not serving:
+        return ["(no serving rows; run "
+                "python -m benchmarks.serve_bench --update-bench)"]
+    cfg = serving.get("config", {})
+    header = (f"{'engine':<14} {'tokens':>7} {'wall_s':>8} "
+              f"{'tok/s':>9} {'vs legacy':>10}")
+    lines = [f"config: {json.dumps(cfg, sort_keys=True)}",
+             header, "-" * len(header)]
+    for r in serving.get("results", ()):
+        lines.append(
+            f"{r['engine']:<14} {r['new_tokens']:>7} {r['wall_s']:>8.3f} "
+            f"{r['tok_per_s']:>9.2f} {r['speedup_vs_legacy']:>9.2f}x")
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -37,4 +37,9 @@ python -m benchmarks.autotune --budget 2 --op rmsnorm --arch interpret \
 test -s "$TUNE_TMP/BENCH_autotune.json"
 test -s "$TUNE_TMP/tuning_cache/interpret.json"
 
+echo "== benchmarks/serve_bench.py --smoke (paged vs slot engine parity) =="
+# Tiny engine run on interpret: both cache layouts must produce the
+# same greedy outputs over a queued request stream.
+python -m benchmarks.serve_bench --smoke
+
 echo "tier-1 OK"

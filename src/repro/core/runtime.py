@@ -109,19 +109,45 @@ def runtime() -> DeviceRuntime:
 def kernel_call(kernel_fn, *, out_shape, grid=None, in_specs=None,
                 out_specs=None, scratch_shapes=(), dimension_semantics=None,
                 vmem_limit_bytes=None, name=None, rt: Optional[DeviceRuntime] = None,
-                **kwargs):
+                num_scalar_prefetch: int = 0, **kwargs):
     """``pallas_call`` with the target decided by the runtime.
 
     The single entry point kernels launch through — the analogue of the
     kernel-launch glue the device runtime provides.  On the ``generic``
     target callers should not reach this (ops.py dispatches to ref.py);
     calling it anyway falls back to interpret mode so behavior is total.
+
+    ``num_scalar_prefetch``: the leading N operands are small integer
+    control arrays (block tables, lengths) made available *before* the
+    kernel body runs so BlockSpec index maps can compute data-dependent
+    DMA source blocks — the paged-KV gather path.  Index maps then
+    receive the prefetched refs as trailing arguments after the grid
+    indices.  The interpreter honors the same descriptor, so this stays
+    in the common part of the runtime.
     """
     rt = rt or runtime()
     params = rt.compiler_params(dimension_semantics, vmem_limit_bytes)
     pk = dict(kwargs)
     if params is not None:
         pk["compiler_params"] = params
+    interpret = rt.interpret or not rt.use_pallas
+    if num_scalar_prefetch:
+        from jax.experimental.pallas import tpu as pltpu
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=num_scalar_prefetch,
+            grid=grid,
+            in_specs=list(in_specs) if in_specs is not None else [],
+            out_specs=out_specs,
+            scratch_shapes=list(scratch_shapes),
+        )
+        return pl.pallas_call(
+            kernel_fn,
+            out_shape=out_shape,
+            grid_spec=grid_spec,
+            interpret=interpret,
+            name=name,
+            **pk,
+        )
     return pl.pallas_call(
         kernel_fn,
         out_shape=out_shape,
@@ -129,7 +155,7 @@ def kernel_call(kernel_fn, *, out_shape, grid=None, in_specs=None,
         in_specs=in_specs if in_specs is not None else [],
         out_specs=out_specs,
         scratch_shapes=list(scratch_shapes),
-        interpret=(rt.interpret or not rt.use_pallas),
+        interpret=interpret,
         name=name,
         **pk,
     )

@@ -34,21 +34,24 @@ def _smem_space(rt: DeviceRuntime):
     return pltpu.TPUMemorySpace.SMEM
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
-                   acc_ref, m_ref, l_ref, *, rt: DeviceRuntime, scale: float,
-                   window: Optional[int], softcap: Optional[float],
-                   block_kv: int, kv_offset: int):
-    ik = rt.team_id(2)
-    nk = rt.num_teams(2)
+def flash_decode_step(q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+                      acc_ref, m_ref, l_ref, *, rt: DeviceRuntime,
+                      scale: float, window: Optional[int],
+                      softcap: Optional[float], k_start, length, ik, nk):
+    """One KV-block update of the online-softmax accumulation.
 
+    The shared body of the dense and paged decode kernels: the two
+    differ only in how KV blocks reach VMEM (contiguous BlockSpec walk
+    vs. block-table gather) — the flash math is target/layout common.
+    ``k_start`` is the global token position of this block's first row,
+    ``length`` the valid prefix, ``ik``/``nk`` this step's position on
+    the sequential KV grid axis (init on first, emit on last).
+    """
     @rt.when(ik == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
-
-    length = len_ref[0]                                   # tokens valid globally
-    k_start = kv_offset + ik * block_kv
 
     @rt.when(k_start < length)
     def _update():
@@ -82,6 +85,19 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
         o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)    # unnormalized
         m_out_ref[0, 0] = m_ref[...].astype(m_out_ref.dtype)
         l_out_ref[0, 0] = l_ref[...].astype(l_out_ref.dtype)
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+                   acc_ref, m_ref, l_ref, *, rt: DeviceRuntime, scale: float,
+                   window: Optional[int], softcap: Optional[float],
+                   block_kv: int, kv_offset: int):
+    ik = rt.team_id(2)
+    nk = rt.num_teams(2)
+    flash_decode_step(
+        q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+        acc_ref, m_ref, l_ref, rt=rt, scale=scale, window=window,
+        softcap=softcap, k_start=kv_offset + ik * block_kv,
+        length=len_ref[0], ik=ik, nk=nk)
 
 
 def decode_attention_fwd(q, k_cache, v_cache, lengths, *,

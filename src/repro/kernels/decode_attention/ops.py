@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core.op import device_op
 from repro.kernels.decode_attention import ref as _ref
 from repro.kernels.decode_attention import decode_attention as _kern
+from repro.kernels.decode_attention import paged as _paged
 
 
 def _ref_impl(q, k_cache, v_cache, lengths, *, window, softcap, scale,
@@ -82,3 +83,80 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
 
 
 combine_partials = _ref.combine_partials
+
+
+# ------------------------------------------------------------ paged ------
+
+def _paged_ref_impl(q, k_pages, v_pages, block_tables, lengths, *, window,
+                    softcap, scale, page_size, block_kv):
+    # Paging granularity is a scheduling choice; the oracle is the
+    # page-gathered dense computation, identical for every (page_size,
+    # block_kv) candidate — which is exactly what makes them tunable.
+    del page_size, block_kv
+    return _ref.paged_decode_attention_ref(
+        q, k_pages, v_pages, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, return_residuals=True)
+
+
+def _paged_kernel_impl(q, k_pages, v_pages, block_tables, lengths, *, window,
+                       softcap, scale, page_size, block_kv):
+    return _paged.paged_decode_attention_fwd(
+        q, k_pages, v_pages, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, page_size=page_size, block_kv=block_kv)
+
+
+def _paged_example(key):
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    b, hq, hkv, d = 2, 4, 2, 64
+    pages_per_slot, page_size = 4, 64          # physical ps = search-space max
+    n_pages = 1 + b * pages_per_slot           # page 0 = reserved null page
+    q = jax.random.normal(kq, (b, hq, d), jnp.float32)
+    kpg = jax.random.normal(kk, (hkv, n_pages, page_size, d), jnp.float32)
+    vpg = jax.random.normal(kv, (hkv, n_pages, page_size, d), jnp.float32)
+    # a deliberately scrambled page assignment — the gather must work for
+    # any permutation the allocator hands out, not just identity layout
+    perm = jax.random.permutation(kp, jnp.arange(1, n_pages, dtype=jnp.int32))
+    bt = perm.reshape(b, pages_per_slot)
+    bt = bt.at[1, -1].set(0)                   # slot 1 tail unallocated
+    lengths = jnp.array([3 * page_size + 17, 2 * page_size + 5], jnp.int32)
+    return (q, kpg, vpg, bt, lengths), dict(
+        window=None, softcap=None, scale=None, page_size=None, block_kv=None)
+
+
+paged_decode_attention_op = device_op(
+    name="paged_decode_attention",
+    ref=_paged_ref_impl,
+    kernel=_paged_kernel_impl,
+    tunables={"page_size": 64, "block_kv": 64},
+    # interpret favors fewer, larger grid steps; leave TPU to the tuner.
+    search_space={"page_size": (16, 32, 64), "block_kv": (16, 32, 64)},
+    # a KV block cannot span two non-contiguous pages, and the logical
+    # page must split the example's physical page evenly
+    constraints=(lambda cfg: cfg["page_size"] % cfg["block_kv"] == 0,),
+    differentiable=False,
+    example=_paged_example,
+)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           page_size: Optional[int] = None,
+                           block_kv: Optional[int] = None,
+                           return_residuals: bool = False):
+    """Single-token GQA decode attention over a paged KV pool.
+
+    q: (B, Hq, D); pools: (Hkv, P, ps, D); block_tables: (B, T) int32
+    page ids; lengths: (B,) valid prefix.  Semantics match
+    ``decode_attention`` over the page-gathered dense cache; tunables
+    (``page_size`` logical granularity, ``block_kv`` tokens per grid
+    step) default to the per-target tuning table.
+    """
+    acc, m, l = paged_decode_attention_op(
+        q, k_pages, v_pages, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, page_size=page_size, block_kv=block_kv)
+    if return_residuals:
+        return acc, m, l
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l_safe[..., None]).astype(q.dtype)

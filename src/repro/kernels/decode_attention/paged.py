@@ -1,0 +1,169 @@
+"""Paged flash-decode Pallas kernel (block-table KV gather).
+
+The serving engine stores KV in fixed-size *pages* drawn from a shared
+pool instead of one contiguous row per slot; a per-slot block table
+names the pages that hold its sequence.  This kernel runs the same
+online-softmax accumulation as the dense decode kernel
+(``flash_decode_step`` is shared), but the KV blocks reach VMEM through
+a block-table index map: the block tables and lengths ride as
+scalar-prefetch operands (``kernel_call(num_scalar_prefetch=2)``, the
+runtime facade's analogue of OpenMP's device-resident control data), so
+the DMA engine can resolve ``pool[bt[b, page]]`` before the body runs.
+One kernel source serves compiled TPU and the CPU interpreter — the
+gather is expressed in the portable BlockSpec layer, not in
+target-specific scatter/gather intrinsics.
+
+Layouts
+  q           (B, Hq, D)        one new token per slot
+  k/v pools   (Hkv, P, ps, D)   head-major page pool; page 0 is the
+                                allocator's reserved null page
+  block_tables(B, T) int32      page id per (slot, logical page)
+  lengths     (B,)   int32      valid tokens per slot
+
+``page_size`` is *logical*: when it divides the pool's physical page
+size the pool is re-viewed as ``(Hkv, P*r, page_size, D)`` — a
+contiguous split, free under XLA — so the autotuner can sweep page
+granularity against one physical example pool.  ``block_kv`` (tokens
+per grid step) must divide ``page_size``: a grid step's KV block can
+never span two non-contiguous pages.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.runtime import DeviceRuntime, kernel_call
+from repro.kernels.decode_attention.decode_attention import (
+    LANES, SUBLANES, flash_decode_step)
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_out_ref, l_out_ref,
+                         acc_ref, m_ref, l_ref, *, rt: DeviceRuntime,
+                         scale: float, window: Optional[int],
+                         softcap: Optional[float], block_kv: int):
+    del bt_ref                      # consumed by the index maps
+    ib = rt.team_id(0)
+    ik = rt.team_id(2)
+    nk = rt.num_teams(2)
+    flash_decode_step(
+        q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+        acc_ref, m_ref, l_ref, rt=rt, scale=scale, window=window,
+        softcap=softcap, k_start=ik * block_kv,
+        length=len_ref[ib], ik=ik, nk=nk)
+
+
+def repage(pool, block_tables, page_size: int):
+    """Re-view ``(H, P, ps, D)`` pool + table at a smaller logical page.
+
+    ``page_size`` must divide the physical page size; each physical
+    page becomes ``r = ps // page_size`` logical pages (a contiguous
+    axis split — no data movement) and the block table expands to name
+    them.  Identity when sizes already agree.
+    """
+    h, p, ps, d = pool.shape
+    if page_size == ps:
+        return pool, block_tables
+    if ps % page_size:
+        raise ValueError(f"logical page_size {page_size} must divide the "
+                         f"pool's physical page size {ps}")
+    r = ps // page_size
+    pool = pool.reshape(h, p * r, page_size, d)
+    bt = (block_tables[:, :, None] * r
+          + jnp.arange(r, dtype=block_tables.dtype)[None, None, :])
+    return pool, bt.reshape(block_tables.shape[0], -1)
+
+
+def paged_decode_attention_fwd(q, k_pages, v_pages, block_tables, lengths, *,
+                               window: Optional[int] = None,
+                               softcap: Optional[float] = None,
+                               scale: Optional[float] = None,
+                               page_size: Optional[int] = None,
+                               block_kv: int = 64,
+                               rt: Optional[DeviceRuntime] = None):
+    """q: (B, Hq, D); pools: (Hkv, P, ps, D); block_tables: (B, T);
+    lengths: (B,) int32.
+
+    Returns unnormalized (acc (B,Hq,Dv), m (B,Hq), l (B,Hq)) — the same
+    residual contract as the dense decode kernel, so callers normalize
+    or LSE-combine identically.
+    """
+    from repro.core.runtime import runtime
+    rt = rt or runtime()
+    b, hq, d = q.shape
+    hkv = k_pages.shape[0]
+    ps_phys = k_pages.shape[2]
+    dv = v_pages.shape[3]
+    page_size = ps_phys if page_size is None else page_size
+    k_pages, bt = repage(k_pages, block_tables, page_size)
+    v_pages, _ = repage(v_pages, block_tables, page_size)
+    n_pages = bt.shape[1]
+
+    group = hq // hkv
+    g8 = max(SUBLANES, group)
+    scale = (d ** -0.5) if scale is None else scale
+    # A grid step's KV block cannot span two non-contiguous pages, so
+    # block_kv must divide page_size.  The tuning table may hand us a
+    # value tuned for a different page size (e.g. the engine clamped
+    # page_size to an odd cache_len); clamp to the largest divisor
+    # rather than crash — it is a scheduling hint, not semantics.
+    block_kv = min(block_kv, page_size)
+    while page_size % block_kv:
+        block_kv -= 1
+    spp = page_size // block_kv            # sub-blocks per page
+    nk = n_pages * spp
+
+    qg = q.reshape(b, hkv, group, d)
+    if g8 != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g8 - group), (0, 0)))
+
+    kern = functools.partial(
+        _paged_decode_kernel, rt=rt, scale=scale, window=window,
+        softcap=softcap, block_kv=block_kv)
+
+    def kv_map(ib, ih, ik, bt_ref, len_ref):
+        del len_ref
+        return (ih, bt_ref[ib, ik // spp], ik % spp, 0)
+
+    def q_map(ib, ih, ik, bt_ref, len_ref):
+        del ik, bt_ref, len_ref
+        return (ib, ih, 0, 0)
+
+    grid = (b, hkv, nk)
+    acc, m, l = kernel_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, hkv, g8, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g8, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g8, LANES), jnp.float32),
+        ),
+        grid=grid,
+        num_scalar_prefetch=2,
+        in_specs=[
+            pl.BlockSpec((1, 1, g8, d), q_map),
+            pl.BlockSpec((1, 1, block_kv, d), kv_map),
+            pl.BlockSpec((1, 1, block_kv, dv), kv_map),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, g8, dv), q_map),
+            pl.BlockSpec((1, 1, g8, LANES), q_map),
+            pl.BlockSpec((1, 1, g8, LANES), q_map),
+        ),
+        scratch_shapes=[
+            rt.alloc_shared((g8, dv), jnp.float32),
+            rt.alloc_shared((g8, LANES), jnp.float32),
+            rt.alloc_shared((g8, LANES), jnp.float32),
+        ],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        name="portable_paged_decode_attention",
+        rt=rt,
+    )(bt, lengths, qg, k_pages, v_pages)
+
+    acc = acc[:, :, :group].reshape(b, hq, dv)
+    m = m[:, :, :group, 0].reshape(b, hq)
+    l = l[:, :, :group, 0].reshape(b, hq)
+    return acc, m, l

@@ -51,6 +51,36 @@ def decode_attention_ref(q, k_cache, v_cache, lengths, *,
     return out.astype(q.dtype)
 
 
+def gather_pages(pages, block_tables):
+    """Materialize a paged pool back to dense rows.
+
+    pages: (Hkv, P, ps, D) head-major pool; block_tables: (B, T) int32.
+    Returns (B, Hkv, T*ps, D) — slot-major dense caches, garbage rows
+    wherever the table points at unallocated (null) pages; callers mask
+    by length exactly as with a dense cache.
+    """
+    h, _, ps, d = pages.shape
+    b, t = block_tables.shape
+    gath = jnp.take(pages, block_tables.reshape(-1), axis=1)
+    gath = gath.reshape(h, b, t * ps, d)
+    return jnp.swapaxes(gath, 0, 1)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                               window: Optional[int] = None,
+                               softcap: Optional[float] = None,
+                               scale: Optional[float] = None,
+                               return_residuals: bool = False):
+    """Oracle for the paged kernel: gather pages dense, then the plain
+    decode oracle.  Paging must be *semantically invisible* — this is
+    the parity contract the paged kernel is gated against."""
+    k_dense = gather_pages(k_pages, block_tables)
+    v_dense = gather_pages(v_pages, block_tables)
+    return decode_attention_ref(
+        q, k_dense, v_dense, lengths, window=window, softcap=softcap,
+        scale=scale, return_residuals=return_residuals)
+
+
 def combine_partials(accs, ms, ls):
     """Merge flash-decode partials from KV shards (log-sum-exp combine).
 

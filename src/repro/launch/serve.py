@@ -1,9 +1,9 @@
-"""Serving launcher: continuous-batching engine over the slot pool.
+"""Serving launcher: continuous-batching engine (paged or slot cache).
 
 CPU demo (reduced config):
 
   python -m repro.launch.serve --arch granite-8b --smoke \
-      --prompts 6 --max-new 12
+      --prompts 6 --max-new 12 --paged
 """
 from __future__ import annotations
 
@@ -24,6 +24,10 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache + paged decode kernel")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV page size (default: autotuned winner)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -42,7 +46,8 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     sc = ServeConfig(slots=args.slots, cache_len=args.cache_len,
                      max_new_tokens=args.max_new,
-                     temperature=args.temperature)
+                     temperature=args.temperature,
+                     paged=args.paged, page_size=args.page_size)
     engine = Engine(model, params, sc)
 
     import numpy as np
@@ -55,7 +60,7 @@ def main():
     dt = time.perf_counter() - t0
     new_tokens = sum(len(r.out) for r in reqs)
     print(json.dumps({
-        "arch": args.arch, "requests": len(reqs),
+        "arch": args.arch, "paged": args.paged, "requests": len(reqs),
         "all_done": all(r.done for r in reqs),
         "new_tokens": new_tokens, "wall_s": round(dt, 2),
         "tok_per_s": round(new_tokens / dt, 1),

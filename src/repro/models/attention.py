@@ -19,8 +19,23 @@ from repro.sharding.kernel_sharding import (
     sharded_flash_attention as flash_attention,
     sharded_decode_attention as decode_attention,
     sharded_decode_update_attend as decode_update_attend,
+    sharded_paged_decode_update_attend as paged_decode_update_attend,
 )
 from repro.models import layers as L
+
+
+def _page_coords(block_tables, lengths, page_size: int):
+    """(write_page, write_off) for the token at position ``lengths``.
+
+    Freed slots carry an all-null block table row, so their write page
+    resolves to the allocator's trash page 0 — stale ``cur_tok`` rows
+    can never land in a live sequence's pages.
+    """
+    page_idx = (lengths // page_size).astype(jnp.int32)
+    write_page = jnp.take_along_axis(block_tables, page_idx[:, None],
+                                     axis=1)[:, 0]
+    write_off = (lengths % page_size).astype(jnp.int32)
+    return write_page, write_off
 
 
 # ------------------------------------------------------------- GQA ------
@@ -105,11 +120,17 @@ def project_kv(p, x_enc, cfg: ModelConfig, positions=None, theta=None):
 
 
 def decode_attn(p, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
-                kind: str = "global", theta=None, ring: bool = False):
-    """One-token decode.  x: (B, 1, d).  Returns (out (B,1,d), new_k, new_v,
-    write_pos (B,)): caller owns the cache update (sharded in serve/).
+                kind: str = "global", theta=None, ring: bool = False,
+                block_tables=None):
+    """One-token decode.  x: (B, 1, d).  Returns (out (B,1,d), new_k,
+    new_v) — the new token's K/V is written into the cache *inside* the
+    fused update+attend wrapper (sharded in sharding/kernel_sharding.py)
+    and the updated caches come back.
 
     ring=True: cache length == window, slots addressed mod window.
+    block_tables: (B, T) int32 — cache_k/cache_v are then head-major
+    paged pools (Hkv, P, ps, D) and the new token's K/V is scattered
+    into the slot's current page (paged serving; incompatible with ring).
     """
     b = x.shape[0]
     theta = theta if theta is not None else cfg.rope_theta
@@ -123,6 +144,18 @@ def decode_attn(p, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
     cos, sin = L.rope_cache(lengths, cfg.head_dim, theta)   # (B, hd/2)
     q = L.apply_rope(q, cos[:, None, :], sin[:, None, :])
     k = L.apply_rope(k, cos[:, None, :], sin[:, None, :])
+
+    if block_tables is not None:
+        assert not ring, "paged decode does not support ring caches"
+        ps = cache_k.shape[2]
+        write_page, write_off = _page_coords(block_tables, lengths, ps)
+        out, ck, cv = paged_decode_update_attend(
+            q, k, v, cache_k, cache_v, block_tables, write_page, write_off,
+            (lengths + 1).astype(jnp.int32),
+            window=cfg.window if kind == "local" else None,
+            softcap=cfg.attn_softcap, page_size=ps)
+        o = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(xd))[:, None, :]
+        return o, ck, cv
 
     s_cache = cache_k.shape[2]
     if ring:
@@ -201,10 +234,12 @@ def apply_mla(p, x, cfg: ModelConfig, positions=None,
     return y
 
 
-def decode_mla(p, x, cache_k, cache_v, lengths, cfg: ModelConfig):
+def decode_mla(p, x, cache_k, cache_v, lengths, cfg: ModelConfig,
+               block_tables=None):
     """MLA decode.  We cache the *materialized* per-head K/V (simple
     variant; latent-cache decode is a further memory optimization —
-    DESIGN.md notes it as future work)."""
+    DESIGN.md notes it as future work).  With ``block_tables`` the
+    caches are paged pools, as in ``decode_attn``."""
     m: MLAConfig = cfg.mla
     b = x.shape[0]
     h = cfg.num_heads
@@ -225,8 +260,16 @@ def decode_mla(p, x, cache_k, cache_v, lengths, cfg: ModelConfig):
         [k_nope, jnp.broadcast_to(k_rope, (b, h, m.qk_rope_head_dim))], -1)
 
     qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
-    out, ck, cv = decode_update_attend(
-        q_full, k_full, v, cache_k, cache_v, lengths.astype(jnp.int32),
-        (lengths + 1).astype(jnp.int32), scale=qk_dim ** -0.5)
+    if block_tables is not None:
+        ps = cache_k.shape[2]
+        write_page, write_off = _page_coords(block_tables, lengths, ps)
+        out, ck, cv = paged_decode_update_attend(
+            q_full, k_full, v, cache_k, cache_v, block_tables, write_page,
+            write_off, (lengths + 1).astype(jnp.int32),
+            scale=qk_dim ** -0.5, page_size=ps)
+    else:
+        out, ck, cv = decode_update_attend(
+            q_full, k_full, v, cache_k, cache_v, lengths.astype(jnp.int32),
+            (lengths + 1).astype(jnp.int32), scale=qk_dim ** -0.5)
     o = jnp.einsum("bhk,hkd->bd", out, p["wo_mla"].astype(xd))[:, None, :]
     return o, ck, cv

@@ -32,8 +32,10 @@ class Model:
                 extras: Optional[Dict[str, Any]] = None):
         return T.prefill(params, self.cfg, tokens, cache_len, extras)
 
-    def decode_step(self, params, caches, tokens, lengths):
-        return T.decode_step(params, self.cfg, caches, tokens, lengths)
+    def decode_step(self, params, caches, tokens, lengths,
+                    block_tables=None):
+        return T.decode_step(params, self.cfg, caches, tokens, lengths,
+                             block_tables=block_tables)
 
     def init_decode_caches(self, batch: int, cache_len: int, *,
                            enc_len: int = 0):

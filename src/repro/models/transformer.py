@@ -276,21 +276,35 @@ def apply_layer_prefill(p, x, cfg: ModelConfig, kind: str, is_moe: bool,
 
 
 def apply_layer_decode(p, x, cache, cfg: ModelConfig, kind: str,
-                       is_moe: bool, lengths):
-    """One-token layer step.  x: (B,1,d)."""
+                       is_moe: bool, lengths, block_tables=None):
+    """One-token layer step.  x: (B,1,d).
+
+    A cache carrying ``kp``/``vp`` holds paged pools (serve/paging.py);
+    the layer then routes through the paged update+attend kernel with
+    ``block_tables``.  Recurrent/ring/cross caches are never paged and
+    take their usual path.
+    """
     h = L.apply_norm(p["ln1"], x, cfg)
     new_cache = dict(cache)
     if kind in ("global", "local"):
-        ring = (kind == "local" and cfg.window is not None
+        paged = "kp" in cache
+        ck_in = cache["kp"] if paged else cache["k"]
+        cv_in = cache["vp"] if paged else cache["v"]
+        bt = block_tables if paged else None
+        ring = (not paged and kind == "local" and cfg.window is not None
                 and cache["k"].shape[2] == cfg.window)
         if cfg.mla:
-            y, ck, cv = A.decode_mla(p["attn"], h, cache["k"], cache["v"],
-                                     lengths, cfg)
+            y, ck, cv = A.decode_mla(p["attn"], h, ck_in, cv_in,
+                                     lengths, cfg, block_tables=bt)
         else:
-            y, ck, cv = A.decode_attn(p["attn"], h, cache["k"], cache["v"],
+            y, ck, cv = A.decode_attn(p["attn"], h, ck_in, cv_in,
                                       lengths, cfg, kind=kind, ring=ring,
-                                      theta=_theta(cfg, kind))
-        new_cache["k"], new_cache["v"] = ck, cv
+                                      theta=_theta(cfg, kind),
+                                      block_tables=bt)
+        if paged:
+            new_cache["kp"], new_cache["vp"] = ck, cv
+        else:
+            new_cache["k"], new_cache["v"] = ck, cv
     elif kind == "mamba":
         y, nc = S.decode_mamba(p["mamba"], h, cache, cfg)
         new_cache.update(nc)
@@ -382,13 +396,13 @@ def seg_apply_prefill(seg_p, x, cfg: ModelConfig, plan: SegmentPlan,
 
 
 def seg_apply_decode(seg_p, caches, x, cfg: ModelConfig, plan: SegmentPlan,
-                     lengths):
+                     lengths, block_tables=None):
     def body(x_, xs):
         lp, cs = xs
         new = []
         for i, (kind, is_moe) in enumerate(plan.block):
             x_, nc = apply_layer_decode(lp[i], x_, cs[i], cfg, kind, is_moe,
-                                        lengths)
+                                        lengths, block_tables=block_tables)
             new.append(nc)
         return x_, tuple(new)
 
@@ -607,13 +621,16 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int,
     return logits[:, 0], caches
 
 
-def decode_step(params, cfg: ModelConfig, caches, tokens, lengths):
+def decode_step(params, cfg: ModelConfig, caches, tokens, lengths,
+                block_tables=None):
     """One decode step.  tokens: (B,) int32; lengths: (B,) tokens already
-    in cache.  Returns (logits (B, V), new caches)."""
+    in cache.  Returns (logits (B, V), new caches).  ``block_tables``
+    routes paged caches (``kp``/``vp`` pools) through the paged kernel."""
     x = L.embed_tokens(params["embed"], tokens[:, None], cfg)
     new_caches = []
     for plan, seg_p, c in zip(plan_segments(cfg), params["segments"], caches):
-        x, nc = seg_apply_decode(seg_p, c, x, cfg, plan, lengths)
+        x, nc = seg_apply_decode(seg_p, c, x, cfg, plan, lengths,
+                                 block_tables=block_tables)
         new_caches.append(nc)
     logits = _logits(params, x, cfg)
     return logits[:, 0], new_caches

@@ -1,1 +1,2 @@
 from repro.serve.engine import Engine, ServeConfig, Request  # noqa: F401
+from repro.serve import paging  # noqa: F401

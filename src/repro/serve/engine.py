@@ -1,25 +1,46 @@
-"""Slot-based serving engine: batched prefill + continuous-batching
-decode over a fixed pool of KV-cache slots.
+"""Continuous-batching serving engine: batched prefill admission + a
+fully device-resident decode loop, over a paged or slot-dense KV cache.
 
-The cache pool is allocated once at engine start (shape = (slots, ...)
-per layer); each admitted request prefilled at batch-size-1 is written
-into its slot with ``dynamic_update_slice`` (tree-wide helper below).
-Every ``step()`` advances all active slots one token; finished slots
-free immediately and the next queued request is admitted — the standard
-continuous-batching loop, minus paging (slot granularity = whole cache
-rows; paged blocks are an orthogonal extension noted in DESIGN.md).
+Scheduler state (active mask, lengths, current tokens, emitted-token
+counts) lives **on device**: ``step()`` runs one jitted decode —
+model step, sampling, length/active/finish updates — and performs a
+single ``jax.device_get`` of the small (next_token, done) pair.  The
+host keeps numpy mirrors (updated from that one transfer) purely for
+admission control and page allocation; no per-slot syncs, no per-step
+host-built arrays (the bugs the slot engine had: see the regression
+tests in tests/test_serve.py).
 
-Sampling: greedy or temperature (deterministic PRNG per engine seed).
+Admission is batched: queued requests are grouped by prompt length and
+each group is prefilled in ONE compiled call (grouping by exact length
+keeps right-padding out of recurrent/ring caches, and makes the
+last-position logits correct for every row), then scattered into slots
+(dense) or freshly allocated pages (paged) in one more compiled call.
+
+Paged mode (``ServeConfig(paged=True)``) stores global-attention KV in
+fixed-size pages from a shared pool (serve/paging.py) and decodes
+through the paged flash-decode kernel; the page size defaults to the
+autotuner's per-target winner for ``paged_decode_attention``.
+
+Termination: a slot finishes when it has emitted ``max_new_tokens``,
+sampled ``eos_id``, or its cache is truly full — ``lengths ==
+cache_len`` *after* the final row is written, so the last cache row is
+usable (the slot engine freed one token early).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+import warnings
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.registry import Model
+from repro.serve import paging
+
+# Indirection for tests that count host syncs per step.
+_device_get = jax.device_get
 
 
 @dataclasses.dataclass
@@ -30,6 +51,10 @@ class ServeConfig:
     temperature: float = 0.0
     eos_id: Optional[int] = None
     seed: int = 0
+    paged: bool = False
+    page_size: Optional[int] = None    # None -> per-target tuning table
+    total_pages: Optional[int] = None  # None -> 1 + slots*pages_per_slot
+    on_overflow: str = "reject"        # "reject" | "truncate"
 
 
 @dataclasses.dataclass
@@ -38,14 +63,7 @@ class Request:
     tokens: List[int]
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-
-
-def _insert_slot(pool, one, slot: int, batch_axis: int = 1):
-    """Write a batch-1 cache tree into the pool at ``slot``."""
-    def upd(p, o):
-        return jax.lax.dynamic_update_slice_in_dim(p, o.astype(p.dtype),
-                                                   slot, axis=batch_axis)
-    return jax.tree_util.tree_map(upd, pool, one)
+    truncated: bool = False
 
 
 class Engine:
@@ -54,71 +72,275 @@ class Engine:
         self.params = params
         self.sc = sc
         self.cfg = model.cfg
-        self.caches = model.init_decode_caches(sc.slots, sc.cache_len)
-        self.lengths = jnp.zeros((sc.slots,), jnp.int32)
-        self.cur_tok = jnp.zeros((sc.slots,), jnp.int32)
-        self.active: List[Optional[Request]] = [None] * sc.slots
+        slots = sc.slots
+        if sc.on_overflow not in ("reject", "truncate"):
+            raise ValueError(f"on_overflow must be 'reject' or 'truncate', "
+                             f"got {sc.on_overflow!r}")
+
+        self.paged = sc.paged
+        if self.paged:
+            self.page_size = self._resolve_page_size()
+            self.pages_per_slot = paging.pages_per_slot(sc.cache_len,
+                                                        self.page_size)
+            total = sc.total_pages or (1 + slots * self.pages_per_slot)
+            self.allocator = paging.PageAllocator(total)
+            self.block_tables = np.full((slots, self.pages_per_slot),
+                                        paging.NULL_PAGE, np.int32)
+            self._bt_dev = jnp.asarray(self.block_tables)
+            self._bt_dirty = False
+            self.caches = paging.init_paged_caches(
+                model, slots, sc.cache_len, self.page_size, total)
+        else:
+            self.caches = model.init_decode_caches(slots, sc.cache_len)
+
+        # device-resident scheduler state
+        self.lengths = jnp.zeros((slots,), jnp.int32)
+        self.cur_tok = jnp.zeros((slots,), jnp.int32)
+        self.n_out = jnp.zeros((slots,), jnp.int32)
+        self.active_mask = jnp.zeros((slots,), jnp.bool_)
+        # host mirrors (admission control / page allocation only)
+        self._len_h = np.zeros((slots,), np.int64)
+        self._active_h = np.zeros((slots,), bool)
+
+        self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
         self._key = jax.random.PRNGKey(sc.seed)
+
         self._prefill = jax.jit(
             lambda p, t: model.prefill(p, t, sc.cache_len, {}))
-        self._decode = jax.jit(model.decode_step)
+        self._step_fn = jax.jit(self._build_step())
+        self._admit_fn = jax.jit(self._build_admit())
+
+    # -- jitted bodies ----------------------------------------------------
+    def _resolve_page_size(self) -> int:
+        if self.sc.page_size is not None:
+            ps = int(self.sc.page_size)
+        else:
+            from repro.core import tuning
+            ps = int(tuning.block_size("paged_decode_attention", "page_size"))
+        return max(1, min(ps, self.sc.cache_len))
+
+    def _sample(self, logits, key):
+        if self.sc.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.sc.temperature, axis=-1).astype(jnp.int32)
+
+    def _build_step(self):
+        model, cache_len = self.model, self.sc.cache_len
+
+        def step_fn(params, caches, cur_tok, lengths, active, n_out, key,
+                    eos_id, max_new, block_tables):
+            logits, new_caches = model.decode_step(
+                params, caches, cur_tok, lengths, block_tables=block_tables)
+            next_tok = self._sample(logits, key)
+            adv = active.astype(jnp.int32)
+            new_lengths = lengths + adv
+            new_n_out = n_out + adv
+            # finish: budget spent, EOS sampled, or no cache row left for
+            # the *next* token (the final row at cache_len-1 is usable).
+            done = active & ((new_n_out >= max_new)
+                             | (next_tok == eos_id)
+                             | (new_lengths + 1 > cache_len))
+            new_active = active & ~done
+            return (next_tok, new_lengths, new_active, new_n_out, done,
+                    new_caches)
+
+        return step_fn
+
+    def _build_admit(self):
+        def admit_fn(caches, lengths, cur_tok, active, n_out, cache1,
+                     first_tok, slot_idx, plens, admit_active, page_rows):
+            caches = paging.scatter_prefill(caches, cache1, slot_idx,
+                                            page_rows)
+            lengths = lengths.at[slot_idx].set(plens)
+            cur_tok = cur_tok.at[slot_idx].set(first_tok)
+            active = active.at[slot_idx].set(admit_active)
+            n_out = n_out.at[slot_idx].set(1)
+            return caches, lengths, cur_tok, active, n_out
+
+        return admit_fn
 
     # -- request lifecycle ------------------------------------------------
     def submit(self, req: Request):
+        """Queue a request; prompts that cannot leave room for a single
+        decoded token are rejected (or tail-truncated) *here*, before
+        they can clamp-corrupt a cache slot."""
+        limit = self.sc.cache_len - 1
+        if self.paged:
+            # an undersized pool (explicit total_pages) that can never
+            # hold the prompt would requeue forever — fail here instead
+            usable = self.allocator.total_pages - 1
+            fits = usable * self.page_size - 1
+            limit = min(limit, fits) if self.sc.on_overflow == "truncate" \
+                else limit
+            if (self.sc.on_overflow != "truncate"
+                    and paging.pages_per_slot(len(req.tokens) + 1,
+                                              self.page_size) > usable):
+                # +1: every admitted request writes at least one decoded
+                # token, so its first step needs that page too
+                raise ValueError(
+                    f"request {req.rid}: prompt of {len(req.tokens)} tokens "
+                    f"(+1 decode) needs more KV pages than the whole pool "
+                    f"holds ({usable} x {self.page_size}); raise total_pages")
+        if len(req.tokens) > limit:
+            # limit == 0 (cache_len=1, or a one-page pool) can never be
+            # truncated into: tokens[-0:] would keep the whole prompt
+            if self.sc.on_overflow == "truncate" and limit > 0:
+                warnings.warn(
+                    f"request {req.rid}: prompt of {len(req.tokens)} tokens "
+                    f"exceeds the cache capacity of {limit}; keeping the "
+                    f"last {limit}", stacklevel=2)
+                req.tokens = list(req.tokens[-limit:])
+                req.truncated = True
+            else:
+                raise ValueError(
+                    f"request {req.rid}: prompt of {len(req.tokens)} tokens "
+                    f"does not fit cache_len={self.sc.cache_len} (need <= "
+                    f"cache_len-1; set ServeConfig.on_overflow='truncate' "
+                    f"to clip instead)")
+        if not req.tokens:
+            raise ValueError(f"request {req.rid}: empty prompt")
         self.queue.append(req)
 
+    def _free_slots(self) -> List[int]:
+        return [s for s in range(self.sc.slots) if self.active[s] is None]
+
     def _admit(self):
-        for slot in range(self.sc.slots):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
-                logits, cache1 = self._prefill(self.params, toks)
-                tok = self._sample(logits)[0]
-                self.caches = jax.tree_util.tree_map(
-                    lambda pool, one: _insert_slot(pool, one, slot),
-                    self.caches, cache1)
-                self.lengths = self.lengths.at[slot].set(len(req.tokens))
-                self.cur_tok = self.cur_tok.at[slot].set(tok)
-                req.out.append(int(tok))
+        """Admit queued requests into free slots, one batched prefill +
+        one batched cache scatter per prompt-length group."""
+        while self._free_slots() and self.queue:
+            take = min(len(self._free_slots()), len(self.queue))
+            batch = [self.queue.pop(0) for _ in range(take)]
+            groups: Dict[int, List[Request]] = {}
+            for r in batch:
+                groups.setdefault(len(r.tokens), []).append(r)
+            admitted = 0
+            for plen, reqs in groups.items():
+                admitted += self._admit_group(reqs, plen)
+            # a request finishing *at* admission (EOS on the prefill
+            # sample, max_new=1) frees its slot immediately; loop so the
+            # queue can backfill it this same scheduling round.  Zero
+            # admissions means the page pool is out of capacity for
+            # everything queued — stop; frees will unblock it later.
+            if admitted == 0:
+                return
+
+    def _admit_group(self, reqs: List[Request], plen: int) -> int:
+        """Admit one same-prompt-length group; returns #admitted.
+        Requests the page pool cannot hold right now go back to the
+        queue head (admission is the capacity check — allocation below
+        can then never fail, so failure can't leak half a group)."""
+        if self.paged:
+            # +1: the first decode step writes at position plen, which
+            # may sit on the page after the prompt's last
+            need = paging.pages_per_slot(plen + 1, self.page_size)
+            fit = self.allocator.available // max(need, 1)
+            if fit < len(reqs):
+                for r in reversed(reqs[fit:]):
+                    self.queue.insert(0, r)
+                reqs = reqs[:fit]
+            if not reqs:
+                return 0
+        slots = self._free_slots()[:len(reqs)]
+
+        k = len(reqs)
+        toks = jnp.asarray([r.tokens for r in reqs], jnp.int32)
+        logits, cache1 = self._prefill(self.params, toks)
+        self._key, sub = jax.random.split(self._key)
+        first = self._sample(logits, sub)
+        first_h = np.asarray(_device_get(first))     # one sync per group
+
+        page_rows = None
+        if self.paged:
+            rows = np.full((k, self.pages_per_slot), paging.NULL_PAGE,
+                           np.int32)
+            n_pages = paging.pages_per_slot(plen, self.page_size)
+            for i, slot in enumerate(slots):
+                rows[i, :n_pages] = self.allocator.alloc_many(n_pages)
+                self.block_tables[slot] = rows[i]
+            page_rows = jnp.asarray(rows)
+            self._bt_dirty = True
+
+        admit_active = np.ones((k,), bool)
+        for i, (req, slot) in enumerate(zip(reqs, slots)):
+            req.out.append(int(first_h[i]))
+            hit_eos = (self.sc.eos_id is not None
+                       and first_h[i] == self.sc.eos_id)
+            if hit_eos or len(req.out) >= self.sc.max_new_tokens:
+                admit_active[i] = False
+
+        (self.caches, self.lengths, self.cur_tok, self.active_mask,
+         self.n_out) = self._admit_fn(
+            self.caches, self.lengths, self.cur_tok, self.active_mask,
+            self.n_out, cache1, jnp.asarray(first_h),
+            jnp.asarray(slots, jnp.int32),
+            jnp.full((k,), plen, jnp.int32), jnp.asarray(admit_active),
+            page_rows)
+
+        for i, (req, slot) in enumerate(zip(reqs, slots)):
+            if admit_active[i]:
                 self.active[slot] = req
-                self._maybe_finish(slot)
+                self._active_h[slot] = True
+                self._len_h[slot] = plen
+            else:
+                req.done = True            # finished at prefill
+                self._release(slot)
+        return k
 
-    def _sample(self, logits):
-        if self.sc.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._key, k = jax.random.split(self._key)
-        return jax.random.categorical(
-            k, logits / self.sc.temperature, axis=-1).astype(jnp.int32)
+    def _release(self, slot: int):
+        """Return a slot (and its pages) to the pool."""
+        self.active[slot] = None
+        self._active_h[slot] = False
+        self._len_h[slot] = 0
+        if self.paged:
+            self.allocator.free(self.block_tables[slot].tolist())
+            self.block_tables[slot] = paging.NULL_PAGE
+            self._bt_dirty = True
 
-    def _maybe_finish(self, slot: int):
-        req = self.active[slot]
-        if req is None:
-            return
-        hit_eos = (self.sc.eos_id is not None
-                   and req.out and req.out[-1] == self.sc.eos_id)
-        full = int(self.lengths[slot]) + 1 >= self.sc.cache_len
-        if len(req.out) >= self.sc.max_new_tokens or hit_eos or full:
-            req.done = True
-            self.active[slot] = None
-            self.lengths = self.lengths.at[slot].set(0)
+    def _ensure_pages(self):
+        """Allocate the page the next token of each active slot writes
+        into, when the slot is about to cross a page boundary.  An
+        oversubscribed pool (explicit total_pages) can run dry here
+        mid-decode; that fails fast with the allocator's actionable
+        error — preemption policy is an open item (ROADMAP)."""
+        for slot in np.nonzero(self._active_h)[0]:
+            j = int(self._len_h[slot]) // self.page_size
+            if self.block_tables[slot, j] == paging.NULL_PAGE:
+                self.block_tables[slot, j] = self.allocator.alloc()
+                self._bt_dirty = True
 
     # -- main loop ---------------------------------------------------------
     def step(self) -> bool:
         """One decode step for all active slots.  Returns busy-ness."""
         self._admit()
-        if not any(r is not None for r in self.active):
+        if not self._active_h.any():
             return False
-        logits, self.caches = self._decode(self.params, self.caches,
-                                           self.cur_tok, self.lengths)
-        next_tok = self._sample(logits)
-        self.lengths = self.lengths + jnp.asarray(
-            [1 if r is not None else 0 for r in self.active], jnp.int32)
+        if self.paged:
+            self._ensure_pages()
+            if self._bt_dirty:        # re-upload only when tables changed
+                self._bt_dev = jnp.asarray(self.block_tables)
+                self._bt_dirty = False
+            bt = self._bt_dev
+        else:
+            bt = None
+        self._key, sub = jax.random.split(self._key)
+        eos = jnp.int32(self.sc.eos_id if self.sc.eos_id is not None else -1)
+        max_new = jnp.int32(self.sc.max_new_tokens)
+        (next_tok, self.lengths, self.active_mask, self.n_out, done,
+         self.caches) = self._step_fn(
+            self.params, self.caches, self.cur_tok, self.lengths,
+            self.active_mask, self.n_out, sub, eos, max_new, bt)
         self.cur_tok = next_tok
-        for slot, req in enumerate(self.active):
-            if req is not None:
-                req.out.append(int(next_tok[slot]))
-                self._maybe_finish(slot)
+        nt, dn = _device_get((next_tok, done))       # THE one sync per step
+        nt, dn = np.asarray(nt), np.asarray(dn)
+        for slot in np.nonzero(self._active_h)[0]:
+            req = self.active[slot]
+            req.out.append(int(nt[slot]))
+            self._len_h[slot] += 1
+            if dn[slot]:
+                req.done = True
+                self._release(slot)
         return True
 
     def run_to_completion(self, requests: List[Request],

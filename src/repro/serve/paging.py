@@ -1,0 +1,157 @@
+"""Paged KV-cache subsystem: page pool, free-list allocator, block tables.
+
+The slot engine's cache was one contiguous ``cache_len`` row per slot;
+paging splits every global-attention KV cache into fixed-size pages
+drawn from a shared per-layer pool, with a per-slot *block table*
+naming the pages that hold its sequence.  The scheduler state that
+matters for allocation (which pages a slot owns) lives here on the
+host; the pools themselves are device arrays threaded through the
+jitted decode step, and the paged decode kernel gathers pages through
+the block table (kernels/decode_attention/paged.py).
+
+Page 0 is **reserved** as the null/trash page: unallocated block-table
+entries point at it, and a freed slot's whole row is reset to it — so
+the stale ``cur_tok`` a dead slot keeps feeding through the batched
+decode scatters its KV into trash instead of a live sequence (the paged
+fix for the slot engine's stale-slot bug).
+
+Only caches with a ``cache_len``-long sequence axis are paged (global
+attention and MLA; local ring buffers, recurrent ssm/xlstm states, and
+encoder cross-KV are fixed-size and stay slot-dense).  Paged cache
+dicts carry ``kp``/``vp`` pools of shape ``(reps, Hkv, P, ps, D)`` in
+place of ``k``/``v``; the transformer decode path routes on that key
+(models/transformer.py::apply_layer_decode).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+
+NULL_PAGE = 0
+
+
+class PageAllocator:
+    """Free-list allocator over ``total_pages`` pages (page 0 reserved).
+
+    Pure host-side bookkeeping — O(1) alloc/free, no device traffic.
+    LIFO reuse keeps recently-freed (still-cached-hot) pages in play.
+    """
+
+    def __init__(self, total_pages: int):
+        if total_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        self.total_pages = int(total_pages)
+        self._free: List[int] = list(range(total_pages - 1, 0, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                "KV page pool exhausted; raise ServeConfig.total_pages "
+                "(or lower slots/cache_len) — the default sizing "
+                "(1 + slots * pages_per_slot) never exhausts")
+        return self._free.pop()
+
+    def alloc_many(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV page pool exhausted: need {n} pages, "
+                f"{len(self._free)} free")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p != NULL_PAGE:
+                self._free.append(int(p))
+
+
+def pages_per_slot(cache_len: int, page_size: int) -> int:
+    return -(-cache_len // page_size)
+
+
+def _is_paged_leaf_dict(c, cache_len: int) -> bool:
+    return ("k" in c and hasattr(c["k"], "ndim") and c["k"].ndim == 5
+            and c["k"].shape[3] == cache_len)
+
+
+def init_paged_caches(model, slots: int, cache_len: int, page_size: int,
+                      total_pages: int):
+    """Build the paged decode-cache tree for ``model``.
+
+    Derived from the abstract dense tree (no dense allocation): each
+    pageable layer's ``k``/``v`` (reps, slots, H, S, D) becomes
+    ``kp``/``vp`` pools (reps, H, total_pages, page_size, D); every
+    other leaf keeps its dense slot-major shape.
+    """
+    abstract = model.abstract_decode_caches(slots, cache_len)
+    caches = []
+    for seg in abstract:
+        new_seg = []
+        for c in seg:
+            if _is_paged_leaf_dict(c, cache_len):
+                nc = {}
+                for name, leaf in c.items():
+                    if name in ("k", "v"):
+                        reps, _, h, _, d = leaf.shape
+                        nc["kp" if name == "k" else "vp"] = jnp.zeros(
+                            (reps, h, total_pages, page_size, d), leaf.dtype)
+                    else:
+                        nc[name] = jnp.zeros(leaf.shape, leaf.dtype)
+            else:
+                nc = {name: jnp.zeros(leaf.shape, leaf.dtype)
+                      for name, leaf in c.items()}
+            new_seg.append(nc)
+        caches.append(tuple(new_seg))
+    return caches
+
+
+def _scatter_pages(pool, one, page_rows):
+    """Write a prefilled dense cache into pool pages.
+
+    pool: (reps, H, P, ps, D); one: (reps, k, H, S, D) batch-k prefill
+    output; page_rows: (k, T) int32 destination pages (NULL_PAGE rows
+    beyond the prompt land in trash, masked by length at decode).
+    """
+    reps, k, h, s, d = one.shape
+    ps = pool.shape[3]
+    t = page_rows.shape[1]
+    pad = t * ps - s
+    if pad:
+        one = jnp.pad(one, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    one = one.reshape(reps, k, h, t, ps, d).transpose(0, 2, 1, 3, 4, 5)
+    return pool.at[:, :, page_rows].set(one.astype(pool.dtype))
+
+
+def _scatter_slots(pool, one, slot_idx):
+    """Write batch-k dense cache state into the slot axis (axis 1)."""
+    return pool.at[:, slot_idx].set(one.astype(pool.dtype))
+
+
+def scatter_prefill(caches, cache1, slot_idx, page_rows=None):
+    """Admit a prefilled group into the cache tree (paged or dense).
+
+    caches: engine cache tree (paged dicts carry kp/vp); cache1: the
+    dense tree from ``model.prefill`` at batch k; slot_idx: (k,) target
+    slots; page_rows: (k, T) destination pages (paged mode only).
+    One jitted call per admitted group — the batched replacement for
+    the per-request ``dynamic_update_slice`` loop.
+    """
+    out = []
+    for seg_c, seg_one in zip(caches, cache1):
+        new_seg = []
+        for c, one in zip(seg_c, seg_one):
+            nc = {}
+            for name, leaf in c.items():
+                if name == "kp":
+                    nc[name] = _scatter_pages(leaf, one["k"], page_rows)
+                elif name == "vp":
+                    nc[name] = _scatter_pages(leaf, one["v"], page_rows)
+                else:
+                    nc[name] = _scatter_slots(leaf, one[name], slot_idx)
+            new_seg.append(nc)
+        out.append(tuple(new_seg))
+    return out

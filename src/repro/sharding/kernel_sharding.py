@@ -40,7 +40,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map
 from repro.core.runtime import runtime
-from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                paged_decode_attention)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.mamba_scan.ops import mamba_scan
 from repro.kernels.mlstm_scan.ops import mlstm_scan
@@ -49,6 +50,7 @@ from repro.sharding import mesh_ctx
 
 __all__ = [
     "sharded_flash_attention", "sharded_decode_attention",
+    "sharded_paged_decode_update_attend",
     "sharded_mamba_scan", "sharded_mlstm_scan", "sharded_rmsnorm",
     "maybe_mesh", "shard_map",
 ]
@@ -237,6 +239,67 @@ def sharded_decode_update_attend(q, k_new, v_new, k_cache, v_cache,
         body, mesh=mesh, in_specs=(qs, ns_, ns_, cs, cs, P(dp), P(dp)),
         out_specs=(qs, cs, cs), check_vma=False)(
         q, k_new, v_new, k_cache, v_cache, write_pos, eff_len)
+
+def sharded_paged_decode_update_attend(q, k_new, v_new, k_pages, v_pages,
+                                       block_tables, write_page, write_off,
+                                       eff_len, *,
+                                       window: Optional[int] = None,
+                                       softcap: Optional[float] = None,
+                                       scale: Optional[float] = None,
+                                       page_size: Optional[int] = None,
+                                       block_kv: Optional[int] = None):
+    """Fused page write + paged decode attention.
+
+    q: (B,Hq,D); k_new/v_new: (B,Hkv,D) rope'd; pools: (Hkv,P,ps,D);
+    block_tables: (B,T) int32; write_page/write_off/eff_len: (B,).
+    Returns (out (B,Hq,Dv), new k_pages, new v_pages).
+
+    The same §Perf-B.1 rule as the dense path: the pool scatter happens
+    INSIDE the shard_map region so GSPMD never all-gathers the pool.
+    Pools are head-major, so head sharding keeps both the write and the
+    gather fully local per model shard; when heads don't divide, pools
+    replicate (page-sharded SP is an open item — DESIGN.md §10).
+    """
+    mesh = maybe_mesh()
+    b, hq, _ = q.shape
+    hkv = k_pages.shape[0]
+    kw = dict(window=window, softcap=softcap, scale=scale,
+              page_size=page_size, block_kv=block_kv)
+
+    def update(kp, vp, kn, vn, page, off):
+        # page 0 is the allocator's null page: freed slots park there, so
+        # their (masked-out) writes land in trash instead of live pages.
+        kn = jnp.swapaxes(kn, 0, 1).astype(kp.dtype)      # (Hkv, B, D)
+        vn = jnp.swapaxes(vn, 0, 1).astype(vp.dtype)
+        kp = kp.at[:, page, off].set(kn)
+        vp = vp.at[:, page, off].set(vn)
+        return kp, vp
+
+    def body(q_, kn, vn, kp, vp, bt, page, off, ln):
+        kp, vp = update(kp, vp, kn, vn, page, off)
+        return (paged_decode_attention(q_, kp, vp, bt, ln, **kw), kp, vp)
+
+    if not _use_wrappers(mesh):
+        return body(q, k_new, v_new, k_pages, v_pages, block_tables,
+                    write_page, write_off, eff_len)
+
+    # no batch sharding here: every shard must see every slot's write
+    # (the pool has no batch dim a dp shard could own a slice of).
+    dp = None
+    tp = _tp(mesh)
+    if hq % tp == 0 and hkv % tp == 0:
+        qs, ns_ = P(dp, "model", None), P(dp, "model", None)
+        ps_ = P("model", None, None, None)
+    else:
+        qs, ns_ = P(dp, None, None), P(dp, None, None)
+        ps_ = P(None, None, None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(qs, ns_, ns_, ps_, ps_, P(dp, None), P(dp), P(dp), P(dp)),
+        out_specs=(qs, ps_, ps_), check_vma=False)(
+        q, k_new, v_new, k_pages, v_pages, block_tables,
+        write_page, write_off, eff_len)
+
 
 def sharded_decode_attention(q, k_cache, v_cache, lengths, *,
                              window: Optional[int] = None,

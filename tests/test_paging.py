@@ -1,0 +1,212 @@
+"""Paged KV subsystem: allocator, paged kernel, repaging, pool writes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import context as ctx
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                paged_decode_attention,
+                                                paged_decode_attention_op)
+from repro.kernels.decode_attention.paged import repage
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                gather_pages)
+from repro.serve import paging
+from repro.sharding.kernel_sharding import sharded_paged_decode_update_attend
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+# ------------------------------------------------------------ allocator ----
+
+def test_allocator_alloc_free_reuse():
+    a = paging.PageAllocator(6)               # pages 1..5 usable
+    assert a.available == 5
+    got = a.alloc_many(3)
+    assert len(set(got)) == 3 and paging.NULL_PAGE not in got
+    a.free(got)
+    assert a.available == 5
+    # LIFO: the just-freed pages come back first
+    assert a.alloc() == got[-1]
+
+
+def test_allocator_never_hands_out_null_page():
+    a = paging.PageAllocator(4)
+    pages = a.alloc_many(3)
+    assert paging.NULL_PAGE not in pages
+    # freeing null pages is a no-op (freed slots' table rows contain them)
+    a.free([paging.NULL_PAGE, paging.NULL_PAGE])
+    assert a.available == 0
+
+
+def test_allocator_exhaustion_raises():
+    a = paging.PageAllocator(3)
+    a.alloc_many(2)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.alloc()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.alloc_many(1)
+
+
+# --------------------------------------------------------- paged kernel ----
+
+def _paged_fixture(b=2, hq=4, hkv=2, d=32, pages_per_slot=3, ps=32, seed=0):
+    n_pages = 1 + b * pages_per_slot
+    kpg = _rand((hkv, n_pages, ps, d), seed + 1)
+    vpg = _rand((hkv, n_pages, ps, d), seed + 2)
+    q = _rand((b, hq, d), seed)
+    perm = np.random.default_rng(seed).permutation(np.arange(1, n_pages))
+    bt = jnp.asarray(perm.reshape(b, pages_per_slot), jnp.int32)
+    lengths = jnp.array([ps * pages_per_slot - 5, ps + 3][:b], jnp.int32)
+    return q, kpg, vpg, bt, lengths
+
+
+def test_paged_matches_dense_on_gathered_cache():
+    """Paging must be semantically invisible: the paged kernel on a
+    scrambled pool == the dense kernel on the gathered dense cache."""
+    q, kpg, vpg, bt, lengths = _paged_fixture()
+    got = paged_decode_attention(q, kpg, vpg, bt, lengths,
+                                 page_size=32, block_kv=16)
+    k_dense = gather_pages(kpg, bt)
+    v_dense = gather_pages(vpg, bt)
+    want = decode_attention(q, k_dense, v_dense, lengths, block_kv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_generic_target_matches_kernel():
+    q, kpg, vpg, bt, lengths = _paged_fixture(seed=3)
+    with ctx.target("generic"):
+        want = paged_decode_attention(q, kpg, vpg, bt, lengths)
+    got = paged_decode_attention(q, kpg, vpg, bt, lengths,
+                                 page_size=16, block_kv=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_repage_preserves_gather():
+    """Logical re-paging (contiguous page split) must name the same
+    tokens in the same order."""
+    _, kpg, _, bt, _ = _paged_fixture(ps=32)
+    for ps_l in (8, 16, 32):
+        pool_l, bt_l = repage(kpg, bt, ps_l)
+        np.testing.assert_array_equal(np.asarray(gather_pages(pool_l, bt_l)),
+                                      np.asarray(gather_pages(kpg, bt)))
+    with pytest.raises(ValueError, match="divide"):
+        repage(kpg, bt, 24)
+
+
+def test_paged_window_and_softcap():
+    q, kpg, vpg, bt, lengths = _paged_fixture(seed=5)
+    got = paged_decode_attention(q, kpg, vpg, bt, lengths, window=20,
+                                 softcap=30.0, page_size=32, block_kv=32)
+    want = decode_attention_ref(q, gather_pages(kpg, bt),
+                                gather_pages(vpg, bt), lengths,
+                                window=20, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_non_dividing_block_kv_clamps_to_divisor():
+    """A block_kv that doesn't divide page_size (e.g. a table winner
+    tuned at a different page size) is clamped to the largest divisor,
+    never an error and never a page-spanning block."""
+    q, kpg, vpg, bt, lengths = _paged_fixture()
+    got = paged_decode_attention(q, kpg, vpg, bt, lengths,
+                                 page_size=32, block_kv=12)   # -> 8
+    want = paged_decode_attention(q, kpg, vpg, bt, lengths,
+                                  page_size=32, block_kv=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=0, rtol=0)
+
+
+def test_search_space_constraint_prunes_spanning_blocks():
+    """The declared constraint must reject block_kv > page_size (a KV
+    block cannot span non-contiguous pages), so the autotuner never
+    measures an illegal schedule."""
+    cfgs = paged_decode_attention_op.candidate_configs(
+        base={"page_size": 64, "block_kv": 64})
+    assert all(c["page_size"] % c["block_kv"] == 0 for c in cfgs)
+    assert {(c["page_size"], c["block_kv"]) for c in cfgs} >= \
+        {(64, 64), (32, 32), (16, 16), (64, 16)}
+
+
+def test_paged_op_autotunes():
+    """The registered search space is real: the autotuner can sweep it
+    with the stubbed clock and write a winner back."""
+    from repro.core import autotune as at
+    from repro.core import tuning
+    calls = []
+
+    def fake_measure(run, cfg):
+        calls.append(dict(cfg))
+        return 1.0 + len(calls) * 0.1       # first candidate wins
+
+    snap = tuning.table.snapshot()
+    try:
+        res = at.autotune_op(paged_decode_attention_op, arch="interpret",
+                             budget=3, measurer=fake_measure)
+        assert res.tuned_ms <= res.baseline_ms
+        assert len(calls) >= 2
+        assert res.written
+    finally:
+        tuning.table.restore(snap)
+
+
+# ------------------------------------------------------------ pool write ----
+
+def test_fused_page_write_then_attend():
+    """Writing the new token's KV into its page then attending must
+    equal attending over the dense cache with the token appended."""
+    b, hq, hkv, d, ps, t = 2, 4, 2, 32, 16, 3
+    q, kpg, vpg, bt, _ = _paged_fixture(b, hq, hkv, d, t, ps, seed=7)
+    lengths = jnp.array([ps + 3, 2 * ps - 1], jnp.int32)   # mid/edge of page
+    k_new = _rand((b, hkv, d), 11)
+    v_new = _rand((b, hkv, d), 12)
+    page_idx = lengths // ps
+    write_page = jnp.take_along_axis(bt, page_idx[:, None], axis=1)[:, 0]
+    out, kp2, vp2 = sharded_paged_decode_update_attend(
+        q, k_new, v_new, kpg, vpg, bt, write_page, lengths % ps,
+        lengths + 1, page_size=ps)
+
+    k_dense = gather_pages(kpg, bt)
+    v_dense = gather_pages(vpg, bt)
+    idx = jnp.arange(k_dense.shape[2])[None, :]
+    sel = (idx == lengths[:, None])[:, None, :, None]
+    k_dense = jnp.where(sel, k_new[:, :, None, :], k_dense)
+    v_dense = jnp.where(sel, v_new[:, :, None, :], v_dense)
+    want = decode_attention_ref(q, k_dense, v_dense, lengths + 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # and the pool rows really hold the new KV
+    got_row = kp2[:, write_page[0], int(lengths[0]) % ps]
+    np.testing.assert_allclose(np.asarray(got_row), np.asarray(k_new[0].T).T,
+                               atol=0, rtol=0)
+
+
+# ------------------------------------------------------- paged cache tree ----
+
+def test_init_paged_caches_pages_only_global_kv():
+    """Global-attention KV becomes pools; ring/recurrent/cross caches
+    keep their dense slot-major layout."""
+    from repro.configs.smoke import smoke_config
+    from repro.models.registry import build_model
+    cfg = smoke_config("gemma2-2b", num_layers=2)   # local+global pattern
+    model = build_model(cfg)
+    slots, cache_len, ps = 2, 32, 16
+    total = 1 + slots * paging.pages_per_slot(cache_len, ps)
+    caches = paging.init_paged_caches(model, slots, cache_len, ps, total)
+    names = set()
+    for seg in caches:
+        for c in seg:
+            names.update(c.keys())
+            for nm, leaf in c.items():
+                if nm in ("kp", "vp"):
+                    assert leaf.shape[2:4] == (total, ps)
+                else:
+                    assert leaf.shape[1] == slots    # slot-major
+    assert "kp" in names and "vp" in names
+    # gemma's local ring layers (window=16 < cache_len) stay dense
+    assert "k" in names and "v" in names
