@@ -134,15 +134,19 @@ def main(argv=None) -> Dict[str, Any]:
         else:
             out = bench_json_path()
     if out is not None:
-        # keep the serving section (benchmarks/serve_bench.py owns it) —
-        # a kernel-sweep regeneration must not drop the other half of
-        # the trajectory.
+        # Preserve every top-level section this sweep does not itself
+        # produce (serving, kv_quant, whatever future benchmarks add):
+        # the autotune CLI owns only the kernel rows, and regenerating
+        # them must never drop another benchmark's half of the
+        # trajectory.  (The PR 3 version special-cased "serving" and
+        # would have silently eaten any newer section.)
         if os.path.exists(out):
             try:
                 with open(out) as f:
                     prev = json.load(f)
-                if "serving" in prev:
-                    payload["serving"] = prev["serving"]
+                for section, value in prev.items():
+                    if section not in payload:
+                        payload[section] = value
             except (OSError, ValueError):
                 pass
         with open(out, "w") as f:

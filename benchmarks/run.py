@@ -34,32 +34,30 @@ def main() -> None:
     from benchmarks import parity
     parity.main()
 
-    print()
-    print("=" * 72)
-    print("## Autotune (from BENCH_autotune.json)")
-    print("=" * 72)
     from benchmarks.autotune import bench_json_path, format_rows
+    from benchmarks.serve_bench import (format_kv_quant_rows,
+                                        format_serving_rows)
     path = bench_json_path()
+    doc = None
     if os.path.exists(path):
         with open(path) as f:
-            for line in format_rows(json.load(f)):
+            doc = json.load(f)
+    for title, formatter, regen in (
+            ("Autotune", format_rows,
+             "python -m benchmarks.autotune --write-cache"),
+            ("Serving", format_serving_rows,
+             "python -m benchmarks.serve_bench --update-bench"),
+            ("KV quant", format_kv_quant_rows,
+             "python -m benchmarks.serve_bench --update-bench")):
+        print()
+        print("=" * 72)
+        print(f"## {title} (from BENCH_autotune.json)")
+        print("=" * 72)
+        if doc is not None:
+            for line in formatter(doc):
                 print(line)
-    else:
-        print("(no BENCH_autotune.json; run "
-              "python -m benchmarks.autotune --write-cache)")
-
-    print()
-    print("=" * 72)
-    print("## Serving (from BENCH_autotune.json)")
-    print("=" * 72)
-    from benchmarks.serve_bench import format_serving_rows
-    if os.path.exists(path):
-        with open(path) as f:
-            for line in format_serving_rows(json.load(f)):
-                print(line)
-    else:
-        print("(no BENCH_autotune.json; run "
-              "python -m benchmarks.serve_bench --update-bench)")
+        else:
+            print(f"(no BENCH_autotune.json; run {regen})")
 
     print()
     print("=" * 72)

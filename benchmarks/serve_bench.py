@@ -16,10 +16,20 @@ regime CI can check):
 
   python -m benchmarks.serve_bench                 # print table
   python -m benchmarks.serve_bench --update-bench  # + merge the rows
-      into BENCH_autotune.json under "serving" (the ROADMAP perf
-      trajectory; benchmarks/autotune.py preserves the section)
+      into BENCH_autotune.json under "serving" and "kv_quant" (the
+      ROADMAP perf trajectory; benchmarks/autotune.py preserves both)
   python -m benchmarks.serve_bench --smoke         # tiny paged-vs-slot
       parity gate for scripts/check.sh
+  python -m benchmarks.serve_bench --quant-smoke   # quantized-vs-bf16
+      parity-at-tolerance + capacity gate for scripts/check.sh
+
+The ``kv_quant`` section measures the dtype axis of the paged pool
+(repro.quant): per KV dtype, end-to-end decode tokens/sec and the max
+concurrent slots that fit a fixed pool-byte budget (the bf16 paged
+pool's footprint at the benchmark slot count), plus the measured
+decode error of the fused-dequant kernel against the bf16 paged
+kernel on identical underlying K/V — which must stay inside the
+subsystem's documented tolerance (``quant.DECODE_TOL``).
 """
 from __future__ import annotations
 
@@ -143,7 +153,7 @@ def _throughput(engine, cfg, n, plen) -> Dict[str, Any]:
 
 
 def build(paged: bool, *, arch="granite-8b", layers=2, slots=4,
-          cache_len=64, max_new=8, legacy=False):
+          cache_len=64, max_new=8, legacy=False, kv_dtype=None):
     from repro.configs.smoke import smoke_config
     from repro.models.registry import build_model
     from repro.serve import Engine, ServeConfig
@@ -151,10 +161,133 @@ def build(paged: bool, *, arch="granite-8b", layers=2, slots=4,
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     sc = ServeConfig(slots=slots, cache_len=cache_len,
-                     max_new_tokens=max_new, paged=paged)
+                     max_new_tokens=max_new, paged=paged,
+                     kv_dtype=kv_dtype)
     eng = (LegacySlotEngine(model, params, sc) if legacy
            else Engine(model, params, sc))
     return eng, cfg
+
+
+# ---------------------------------------------------------------------------
+# kv_quant: the dtype axis of the paged pool
+# ---------------------------------------------------------------------------
+
+def _paged_bytes_per_slot(engine) -> int:
+    from repro.serve import paging
+    return paging.paged_bytes_per_slot(
+        engine.caches, engine.allocator.total_pages, engine.pages_per_slot)
+
+
+def _decode_err_vs_bf16(dtype: str) -> float:
+    """Max |quantized - bf16| of paged decode attention on identical
+    underlying K/V (the documented-tolerance subject)."""
+    from repro.kernels.decode_attention.ops import (
+        _paged_example, paged_decode_attention, quant_paged_decode_attention)
+    from repro.quant import resolve_kv_spec
+    (q, kpg, vpg, bt, lengths), _ = _paged_example(jax.random.PRNGKey(7))
+    want = paged_decode_attention(q, kpg, vpg, bt, lengths)
+    spec = resolve_kv_spec(dtype, strict=True)
+    if not spec.quantized:
+        got = paged_decode_attention(q, kpg.astype(spec.storage),
+                                     vpg.astype(spec.storage), bt, lengths)
+    else:
+        kq, ks = spec.quantize_pages(kpg)
+        vq, vs = spec.quantize_pages(vpg)
+        got = quant_paged_decode_attention(q, kq, vq, ks, vs, bt, lengths)
+    return float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - want.astype(jnp.float32))))
+
+
+def _kv_dtypes_here() -> List[str]:
+    from repro.quant import kv_cache_dtypes
+    return [d for d in kv_cache_dtypes() if d != "bf16"]
+
+
+#: The fixed pool-byte budget concurrent-slot capacity is quoted at: a
+#: production-like 1 GiB of HBM for the paged pools, so the quoted
+#: ratio reflects the asymptotic bytes/slot and not the integer-
+#: division granularity a 4-slot smoke footprint would impose.
+POOL_BYTE_BUDGET = 1 << 30
+
+
+def kv_quant_payload(*, layers=2, slots=4, cache_len=64, max_new=8,
+                     prompts=12, prompt_len=16) -> Dict[str, Any]:
+    """Per-dtype rows: decode tok/s, bytes/slot, and max concurrent
+    slots at the fixed :data:`POOL_BYTE_BUDGET`."""
+    from repro.quant import DECODE_TOL
+    rows = []
+    budget = POOL_BYTE_BUDGET
+    for dtype in ["bf16"] + _kv_dtypes_here():
+        eng, cfg = build(True, layers=layers, slots=slots,
+                         cache_len=cache_len, max_new=max_new,
+                         kv_dtype=dtype)
+        bps = _paged_bytes_per_slot(eng)
+        r = _throughput(eng, cfg, prompts, prompt_len)
+        r.pop("sample")
+        r.update(kv_dtype=dtype, pool_bytes_per_slot=bps,
+                 slots_at_budget=budget // bps,
+                 decode_max_abs_err=round(_decode_err_vs_bf16(dtype), 5),
+                 tol=DECODE_TOL.get(dtype))
+        rows.append(r)
+        print(f"{dtype:<10} {r['tok_per_s']:>8.2f} tok/s  "
+              f"{bps:>7} B/slot  {r['slots_at_budget']:>3} slots@budget  "
+              f"err {r['decode_max_abs_err']:.5f}")
+    base = rows[0]
+    for r in rows:
+        r["capacity_vs_bf16"] = round(r["slots_at_budget"]
+                                      / base["slots_at_budget"], 3)
+        r["tok_per_s_vs_bf16"] = round(r["tok_per_s"] / base["tok_per_s"], 3)
+    return {
+        "bench": "kv_quant",
+        "generated_by": "python -m benchmarks.serve_bench --update-bench",
+        "arch": "interpret",
+        "config": {"slots": slots, "cache_len": cache_len,
+                   "prompts": prompts, "prompt_len": prompt_len,
+                   "max_new": max_new, "layers": layers,
+                   "model": "granite-8b smoke"},
+        "pool_byte_budget": budget,
+        "results": rows,
+    }
+
+
+def quant_smoke() -> None:
+    """check.sh gate: quantized paged serving vs the bf16 paged run.
+
+    Three asserts: (1) the fused-dequant kernel's output stays inside
+    the documented per-dtype tolerance of the bf16 paged kernel on
+    identical K/V; (2) an int8 engine run finishes the same request
+    stream in the same finish order with the same output lengths as
+    the bf16 run; (3) int8 holds >= 1.9x the concurrent slots of bf16
+    at a fixed pool-byte budget.
+    """
+    from repro.quant import DECODE_TOL
+    for dtype in _kv_dtypes_here():
+        err = _decode_err_vs_bf16(dtype)
+        assert err <= DECODE_TOL[dtype], \
+            f"{dtype} decode error {err} exceeds documented " \
+            f"tolerance {DECODE_TOL[dtype]}"
+
+    from repro.serve import run_recording_finish_order
+    orders, lens, bps = {}, {}, {}
+    for dtype in ("bf16", "int8"):
+        eng, cfg = build(True, layers=1, slots=2, cache_len=32, max_new=4,
+                         kv_dtype=dtype)
+        reqs = _requests(cfg, 4, 6)
+        orders[dtype] = run_recording_finish_order(eng, reqs)
+        assert all(r.done for r in reqs)
+        lens[dtype] = [len(r.out) for r in reqs]
+        bps[dtype] = _paged_bytes_per_slot(eng)
+    assert orders["int8"] == orders["bf16"], \
+        f"finish-order parity FAILED: {orders}"
+    assert lens["int8"] == lens["bf16"], f"output lengths diverged: {lens}"
+    ratio = (POOL_BYTE_BUDGET // bps["int8"]) \
+        / (POOL_BYTE_BUDGET // bps["bf16"])
+    assert ratio >= 1.9, \
+        f"int8 concurrent slots {ratio:.3f}x at the fixed " \
+        f"{POOL_BYTE_BUDGET}-byte pool budget (< 1.9x)"
+    print(f"quant-smoke OK: int8 finish order == bf16 on "
+          f"{len(orders['int8'])} requests; capacity {ratio:.2f}x; "
+          f"kernel err within tol for {_kv_dtypes_here()}")
 
 
 def smoke() -> None:
@@ -176,6 +309,9 @@ def main(argv=None) -> Dict[str, Any]:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="fast paged-vs-slot parity gate (no timing)")
+    ap.add_argument("--quant-smoke", action="store_true",
+                    help="quantized-vs-bf16 paged parity-at-tolerance "
+                         "+ capacity gate (no timing)")
     ap.add_argument("--prompts", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
@@ -183,11 +319,15 @@ def main(argv=None) -> Dict[str, Any]:
     ap.add_argument("--cache-len", type=int, default=64)
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--update-bench", action="store_true",
-                    help="merge rows into BENCH_autotune.json['serving']")
+                    help="merge rows into BENCH_autotune.json under "
+                         "'serving' and 'kv_quant'")
     args = ap.parse_args(argv)
 
     if args.smoke:
         smoke()
+        return {}
+    if args.quant_smoke:
+        quant_smoke()
         return {}
 
     rows = []
@@ -223,6 +363,13 @@ def main(argv=None) -> Dict[str, Any]:
                    "model": "granite-8b smoke"},
         "results": rows,
     }
+
+    print()
+    kv_quant = kv_quant_payload(
+        layers=args.layers, slots=args.slots, cache_len=args.cache_len,
+        max_new=args.max_new, prompts=args.prompts,
+        prompt_len=args.prompt_len)
+
     if args.update_bench:
         from benchmarks.autotune import bench_json_path
         path = bench_json_path()
@@ -231,11 +378,33 @@ def main(argv=None) -> Dict[str, Any]:
             with open(path) as f:
                 doc = json.load(f)
         doc["serving"] = payload
+        doc["kv_quant"] = kv_quant
         with open(path, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
             f.write("\n")
-        print(f"merged serving rows into {path}")
-    return payload
+        print(f"merged serving + kv_quant rows into {path}")
+    return {"serving": payload, "kv_quant": kv_quant}
+
+
+def format_kv_quant_rows(doc: Dict[str, Any]) -> List[str]:
+    """Render BENCH_autotune.json['kv_quant'] (shared with run.py)."""
+    kq = doc.get("kv_quant")
+    if not kq:
+        return ["(no kv_quant rows; run "
+                "python -m benchmarks.serve_bench --update-bench)"]
+    header = (f"{'kv_dtype':<10} {'tok/s':>9} {'B/slot':>8} "
+              f"{'slots@budget':>13} {'capacity':>9} {'max_err':>9} "
+              f"{'tol':>6}")
+    lines = [f"pool byte budget: {kq.get('pool_byte_budget')}",
+             header, "-" * len(header)]
+    for r in kq.get("results", ()):
+        tol = r.get("tol")
+        lines.append(
+            f"{r['kv_dtype']:<10} {r['tok_per_s']:>9.2f} "
+            f"{r['pool_bytes_per_slot']:>8} {r['slots_at_budget']:>13} "
+            f"{r['capacity_vs_bf16']:>8.2f}x {r['decode_max_abs_err']:>9.5f} "
+            f"{tol if tol is not None else '-':>6}")
+    return lines
 
 
 def format_serving_rows(doc: Dict[str, Any]) -> List[str]:

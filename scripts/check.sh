@@ -42,4 +42,11 @@ echo "== benchmarks/serve_bench.py --smoke (paged vs slot engine parity) =="
 # same greedy outputs over a queued request stream.
 python -m benchmarks.serve_bench --smoke
 
+echo "== benchmarks/serve_bench.py --quant-smoke (quantized vs bf16 paged) =="
+# Quantized paged serving gate: fused-dequant decode within the
+# documented per-dtype tolerance of the bf16 paged kernel, int8 engine
+# finish-order parity with the bf16 run, and >= 1.9x concurrent slots
+# at a fixed pool-byte budget.
+python -m benchmarks.serve_bench --quant-smoke
+
 echo "tier-1 OK"

@@ -37,15 +37,19 @@ def _smem_space(rt: DeviceRuntime):
 def flash_decode_step(q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
                       acc_ref, m_ref, l_ref, *, rt: DeviceRuntime,
                       scale: float, window: Optional[int],
-                      softcap: Optional[float], k_start, length, ik, nk):
+                      softcap: Optional[float], k_start, length, ik, nk,
+                      k_scale=None, v_scale=None):
     """One KV-block update of the online-softmax accumulation.
 
-    The shared body of the dense and paged decode kernels: the two
-    differ only in how KV blocks reach VMEM (contiguous BlockSpec walk
-    vs. block-table gather) — the flash math is target/layout common.
-    ``k_start`` is the global token position of this block's first row,
-    ``length`` the valid prefix, ``ik``/``nk`` this step's position on
-    the sequential KV grid axis (init on first, emit on last).
+    The shared body of the dense, paged, and quantized-paged decode
+    kernels: they differ only in how KV blocks reach VMEM (contiguous
+    BlockSpec walk vs. block-table gather) — the flash math is
+    target/layout common.  ``k_start`` is the global token position of
+    this block's first row, ``length`` the valid prefix, ``ik``/``nk``
+    this step's position on the sequential KV grid axis (init on
+    first, emit on last).  ``k_scale``/``v_scale`` are optional
+    per-block dequantization scalars (quantized pools store int8/fp8;
+    the dequant fuses here, in VMEM, after the block DMA).
     """
     @rt.when(ik == 0)
     def _init():
@@ -58,6 +62,10 @@ def flash_decode_step(q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale       # (G8, D)
         k = k_ref[0, 0].astype(jnp.float32)               # (bkv, D)
         v = v_ref[0, 0].astype(jnp.float32)
+        if k_scale is not None:
+            k = k * k_scale
+        if v_scale is not None:
+            v = v * v_scale
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (G8, bkv)
         if softcap is not None:

@@ -17,6 +17,7 @@ from repro.core.op import device_op
 from repro.kernels.decode_attention import ref as _ref
 from repro.kernels.decode_attention import decode_attention as _kern
 from repro.kernels.decode_attention import paged as _paged
+from repro.kernels.decode_attention import quant as _quant
 
 
 def _ref_impl(q, k_cache, v_cache, lengths, *, window, softcap, scale,
@@ -156,6 +157,83 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
     acc, m, l = paged_decode_attention_op(
         q, k_pages, v_pages, block_tables, lengths, window=window,
         softcap=softcap, scale=scale, page_size=page_size, block_kv=block_kv)
+    if return_residuals:
+        return acc, m, l
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l_safe[..., None]).astype(q.dtype)
+
+
+# ---------------------------------------------------- quantized paged ------
+
+def _quant_paged_ref_impl(q, k_pages, v_pages, k_scales, v_scales,
+                          block_tables, lengths, *, window, softcap, scale,
+                          page_size, block_kv):
+    del page_size, block_kv            # scheduling-only, as for the bf16 op
+    return _ref.quant_paged_decode_attention_ref(
+        q, k_pages, v_pages, k_scales, v_scales, block_tables, lengths,
+        window=window, softcap=softcap, scale=scale, return_residuals=True)
+
+
+def _quant_paged_kernel_impl(q, k_pages, v_pages, k_scales, v_scales,
+                             block_tables, lengths, *, window, softcap,
+                             scale, page_size, block_kv):
+    return _quant.quant_paged_decode_attention_fwd(
+        q, k_pages, v_pages, k_scales, v_scales, block_tables, lengths,
+        window=window, softcap=softcap, scale=scale, page_size=page_size,
+        block_kv=block_kv)
+
+
+def _quant_paged_example(key):
+    # Same paged layout as the bf16 example, but the pools are int8
+    # with per-page-per-head scales — quantized through the subsystem
+    # so the example exercises the real storage contract.  (int8 is
+    # the portable storage floor: the example must run on every arch,
+    # including generic, whose capability set has no fp8.)
+    from repro.quant import spec_for_storage
+    (q, kpg, vpg, bt, lengths), params = _paged_example(key)
+    s = spec_for_storage(jnp.int8)
+    kq, ks = s.quantize_pages(kpg)
+    vq, vs = s.quantize_pages(vpg)
+    return (q, kq, vq, ks, vs, bt, lengths), dict(params)
+
+
+quant_paged_decode_attention_op = device_op(
+    name="quant_paged_decode_attention",
+    ref=_quant_paged_ref_impl,
+    kernel=_quant_paged_kernel_impl,
+    tunables={"page_size": 64, "block_kv": 64},
+    # Storage dtype is a *capability* axis dispatched through
+    # quant/capability.py, not a tunable: the autotuner gates every
+    # candidate against one fixed oracle, and changing the dtype
+    # changes the semantics, not the schedule.  The kv_quant BENCH
+    # section measures the dtype axis instead.
+    search_space={"page_size": (16, 32, 64), "block_kv": (16, 32, 64)},
+    constraints=(lambda cfg: cfg["page_size"] % cfg["block_kv"] == 0,),
+    differentiable=False,
+    example=_quant_paged_example,
+)
+
+
+def quant_paged_decode_attention(q, k_pages, v_pages, k_scales, v_scales,
+                                 block_tables, lengths, *,
+                                 window: Optional[int] = None,
+                                 softcap: Optional[float] = None,
+                                 scale: Optional[float] = None,
+                                 page_size: Optional[int] = None,
+                                 block_kv: Optional[int] = None,
+                                 return_residuals: bool = False):
+    """Single-token GQA decode attention over a *quantized* paged pool.
+
+    q: (B, Hq, D); pools: (Hkv, P, ps, D) int8/fp8-e4m3; scale pools:
+    (Hkv, P) f32 per-page-per-head; block_tables: (B, T) int32;
+    lengths: (B,).  Semantics match ``paged_decode_attention`` over the
+    dequantized pools (dequant fuses into the kernel body after the
+    block-table DMA); tunables default to the per-target tuning table.
+    """
+    acc, m, l = quant_paged_decode_attention_op(
+        q, k_pages, v_pages, k_scales, v_scales, block_tables, lengths,
+        window=window, softcap=softcap, scale=scale, page_size=page_size,
+        block_kv=block_kv)
     if return_residuals:
         return acc, m, l
     l_safe = jnp.where(l == 0.0, 1.0, l)

@@ -26,6 +26,13 @@ contiguous split, free under XLA — so the autotuner can sweep page
 granularity against one physical example pool.  ``block_kv`` (tokens
 per grid step) must divide ``page_size``: a grid step's KV block can
 never span two non-contiguous pages.
+
+With ``k_scales``/``v_scales`` (per-page-per-head f32 scale pools
+``(Hkv, P)``, repro.quant) the same launch also serves the *quantized*
+pools: the scale block for a grid step rides the identical block-table
+index map as its KV block (a ``(1, 1)`` BlockSpec), and the dequant
+fuses into ``flash_decode_step`` as one scalar multiply after the DMA.
+``quant.py`` wraps this as the ``quant_paged_decode_attention`` op.
 """
 from __future__ import annotations
 
@@ -41,12 +48,20 @@ from repro.kernels.decode_attention.decode_attention import (
     LANES, SUBLANES, flash_decode_step)
 
 
-def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
-                         o_ref, m_out_ref, l_out_ref,
-                         acc_ref, m_ref, l_ref, *, rt: DeviceRuntime,
-                         scale: float, window: Optional[int],
-                         softcap: Optional[float], block_kv: int):
-    del bt_ref                      # consumed by the index maps
+def _paged_decode_kernel(*refs, rt: DeviceRuntime, scale: float,
+                         window: Optional[int], softcap: Optional[float],
+                         block_kv: int, quantized: bool):
+    # operand order: bt, len, q, k, v, [k_scales, v_scales,] then the
+    # three outputs and three scratch accumulators.
+    _, len_ref, q_ref, k_ref, v_ref = refs[:5]   # bt consumed by maps
+    if quantized:
+        ks_ref, vs_ref = refs[5:7]
+        k_scale, v_scale = ks_ref[0, 0], vs_ref[0, 0]
+        rest = refs[7:]
+    else:
+        k_scale = v_scale = None
+        rest = refs[5:]
+    o_ref, m_out_ref, l_out_ref, acc_ref, m_ref, l_ref = rest
     ib = rt.team_id(0)
     ik = rt.team_id(2)
     nk = rt.num_teams(2)
@@ -54,7 +69,8 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
         q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
         acc_ref, m_ref, l_ref, rt=rt, scale=scale, window=window,
         softcap=softcap, k_start=ik * block_kv,
-        length=len_ref[ib], ik=ik, nk=nk)
+        length=len_ref[ib], ik=ik, nk=nk,
+        k_scale=k_scale, v_scale=v_scale)
 
 
 def repage(pool, block_tables, page_size: int):
@@ -78,27 +94,47 @@ def repage(pool, block_tables, page_size: int):
     return pool, bt.reshape(block_tables.shape[0], -1)
 
 
+def repage_scales(scales, page_size: int, ps_phys: int):
+    """Per-page scales at a smaller logical page: every logical page
+    carved from a physical page shares its scale (identity when sizes
+    agree)."""
+    if page_size == ps_phys:
+        return scales
+    r = ps_phys // page_size
+    h, p = scales.shape
+    return jnp.repeat(scales, r, axis=1).reshape(h, p * r)
+
+
 def paged_decode_attention_fwd(q, k_pages, v_pages, block_tables, lengths, *,
                                window: Optional[int] = None,
                                softcap: Optional[float] = None,
                                scale: Optional[float] = None,
                                page_size: Optional[int] = None,
                                block_kv: int = 64,
+                               k_scales=None, v_scales=None,
                                rt: Optional[DeviceRuntime] = None):
     """q: (B, Hq, D); pools: (Hkv, P, ps, D); block_tables: (B, T);
     lengths: (B,) int32.
 
     Returns unnormalized (acc (B,Hq,Dv), m (B,Hq), l (B,Hq)) — the same
     residual contract as the dense decode kernel, so callers normalize
-    or LSE-combine identically.
+    or LSE-combine identically.  With ``k_scales``/``v_scales``
+    (per-page-per-head (Hkv, P) f32; both or neither) the pools are
+    quantized storage and the per-block dequant fuses into the flash
+    body (the quant_paged_decode_attention op).
     """
     from repro.core.runtime import runtime
     rt = rt or runtime()
+    quantized = k_scales is not None
+    assert (v_scales is None) == (k_scales is None)
     b, hq, d = q.shape
     hkv = k_pages.shape[0]
     ps_phys = k_pages.shape[2]
     dv = v_pages.shape[3]
     page_size = ps_phys if page_size is None else page_size
+    if quantized:
+        k_scales = repage_scales(k_scales, page_size, ps_phys)
+        v_scales = repage_scales(v_scales, page_size, ps_phys)
     k_pages, bt = repage(k_pages, block_tables, page_size)
     v_pages, _ = repage(v_pages, block_tables, page_size)
     n_pages = bt.shape[1]
@@ -123,15 +159,30 @@ def paged_decode_attention_fwd(q, k_pages, v_pages, block_tables, lengths, *,
 
     kern = functools.partial(
         _paged_decode_kernel, rt=rt, scale=scale, window=window,
-        softcap=softcap, block_kv=block_kv)
+        softcap=softcap, block_kv=block_kv, quantized=quantized)
 
     def kv_map(ib, ih, ik, bt_ref, len_ref):
         del len_ref
         return (ih, bt_ref[ib, ik // spp], ik % spp, 0)
 
+    def sc_map(ib, ih, ik, bt_ref, len_ref):
+        del len_ref
+        return (ih, bt_ref[ib, ik // spp])
+
     def q_map(ib, ih, ik, bt_ref, len_ref):
         del ik, bt_ref, len_ref
         return (ib, ih, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g8, d), q_map),
+        pl.BlockSpec((1, 1, block_kv, d), kv_map),
+        pl.BlockSpec((1, 1, block_kv, dv), kv_map),
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quantized:
+        # scale blocks ride the same block-table gather as the KV blocks
+        in_specs += [pl.BlockSpec((1, 1), sc_map), pl.BlockSpec((1, 1), sc_map)]
+        operands += [k_scales, v_scales]
 
     grid = (b, hkv, nk)
     acc, m, l = kernel_call(
@@ -143,11 +194,7 @@ def paged_decode_attention_fwd(q, k_pages, v_pages, block_tables, lengths, *,
         ),
         grid=grid,
         num_scalar_prefetch=2,
-        in_specs=[
-            pl.BlockSpec((1, 1, g8, d), q_map),
-            pl.BlockSpec((1, 1, block_kv, d), kv_map),
-            pl.BlockSpec((1, 1, block_kv, dv), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, 1, g8, dv), q_map),
             pl.BlockSpec((1, 1, g8, LANES), q_map),
@@ -159,9 +206,10 @@ def paged_decode_attention_fwd(q, k_pages, v_pages, block_tables, lengths, *,
             rt.alloc_shared((g8, LANES), jnp.float32),
         ],
         dimension_semantics=("parallel", "parallel", "arbitrary"),
-        name="portable_paged_decode_attention",
+        name=("portable_quant_paged_decode_attention" if quantized
+              else "portable_paged_decode_attention"),
         rt=rt,
-    )(bt, lengths, qg, k_pages, v_pages)
+    )(bt, lengths, *operands)
 
     acc = acc[:, :, :group].reshape(b, hq, dv)
     m = m[:, :, :group, 0].reshape(b, hq)

@@ -81,6 +81,26 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
         scale=scale, return_residuals=return_residuals)
 
 
+def quant_paged_decode_attention_ref(q, k_pages, v_pages, k_scales, v_scales,
+                                     block_tables, lengths, *,
+                                     window: Optional[int] = None,
+                                     softcap: Optional[float] = None,
+                                     scale: Optional[float] = None,
+                                     return_residuals: bool = False):
+    """Oracle for the quantized paged kernel: dequantize the pools
+    densely (per-page-per-head scales broadcast over the page block),
+    then the paged oracle.  Dequantization must be *arithmetically
+    identical* to the kernel's fused form — ``f32(q) * scale`` — so
+    kernel-vs-ref parity holds at the registry's float tolerances; the
+    looser quantized-vs-bf16 bound is a property of the *stored data*,
+    gated separately (quant-smoke, tests/test_quant.py)."""
+    k_dense = k_pages.astype(jnp.float32) * k_scales[:, :, None, None]
+    v_dense = v_pages.astype(jnp.float32) * v_scales[:, :, None, None]
+    return paged_decode_attention_ref(
+        q, k_dense, v_dense, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, return_residuals=return_residuals)
+
+
 def combine_partials(accs, ms, ls):
     """Merge flash-decode partials from KV shards (log-sum-exp combine).
 

@@ -28,7 +28,15 @@ def main():
                     help="paged KV cache + paged decode kernel")
     ap.add_argument("--page-size", type=int, default=None,
                     help="KV page size (default: autotuned winner)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["bf16", "int8", "fp8_e4m3"],
+                    help="paged KV pool dtype; int8/fp8 quantize with "
+                         "per-page-per-head scales and decode through "
+                         "the fused-dequant kernel (requires --paged; "
+                         "unsupported dtypes fall back per target)")
     args = ap.parse_args()
+    if args.kv_dtype and not args.paged:
+        ap.error("--kv-dtype requires --paged")
 
     from repro.configs import get_config
     from repro.configs.smoke import smoke_config
@@ -47,7 +55,8 @@ def main():
     sc = ServeConfig(slots=args.slots, cache_len=args.cache_len,
                      max_new_tokens=args.max_new,
                      temperature=args.temperature,
-                     paged=args.paged, page_size=args.page_size)
+                     paged=args.paged, page_size=args.page_size,
+                     kv_dtype=args.kv_dtype)
     engine = Engine(model, params, sc)
 
     import numpy as np
@@ -60,7 +69,10 @@ def main():
     dt = time.perf_counter() - t0
     new_tokens = sum(len(r.out) for r in reqs)
     print(json.dumps({
-        "arch": args.arch, "paged": args.paged, "requests": len(reqs),
+        "arch": args.arch, "paged": args.paged,
+        "kv_dtype": (engine.kv_spec.dtype if getattr(engine, "kv_spec", None)
+                     else None),
+        "requests": len(reqs),
         "all_done": all(r.done for r in reqs),
         "new_tokens": new_tokens, "wall_s": round(dt, 2),
         "tok_per_s": round(new_tokens / dt, 1),

@@ -20,6 +20,7 @@ from repro.sharding.kernel_sharding import (
     sharded_decode_attention as decode_attention,
     sharded_decode_update_attend as decode_update_attend,
     sharded_paged_decode_update_attend as paged_decode_update_attend,
+    sharded_quant_paged_decode_update_attend as quant_paged_decode_update_attend,
 )
 from repro.models import layers as L
 
@@ -121,7 +122,7 @@ def project_kv(p, x_enc, cfg: ModelConfig, positions=None, theta=None):
 
 def decode_attn(p, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
                 kind: str = "global", theta=None, ring: bool = False,
-                block_tables=None):
+                block_tables=None, cache_scales=None):
     """One-token decode.  x: (B, 1, d).  Returns (out (B,1,d), new_k,
     new_v) — the new token's K/V is written into the cache *inside* the
     fused update+attend wrapper (sharded in sharding/kernel_sharding.py)
@@ -131,6 +132,10 @@ def decode_attn(p, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
     block_tables: (B, T) int32 — cache_k/cache_v are then head-major
     paged pools (Hkv, P, ps, D) and the new token's K/V is scattered
     into the slot's current page (paged serving; incompatible with ring).
+    cache_scales: (ks, vs) per-page-per-head scale pools (Hkv, P) —
+    the pools are then quantized (repro.quant) and the step routes
+    through the re-quantizing write + fused-dequant kernel, returning
+    (out, new_k, new_v, new_ks, new_vs).
     """
     b = x.shape[0]
     theta = theta if theta is not None else cfg.rope_theta
@@ -149,10 +154,19 @@ def decode_attn(p, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
         assert not ring, "paged decode does not support ring caches"
         ps = cache_k.shape[2]
         write_page, write_off = _page_coords(block_tables, lengths, ps)
+        window = cfg.window if kind == "local" else None
+        if cache_scales is not None:
+            out, ck, cv, ks, vs = quant_paged_decode_update_attend(
+                q, k, v, cache_k, cache_v, cache_scales[0], cache_scales[1],
+                block_tables, write_page, write_off,
+                (lengths + 1).astype(jnp.int32),
+                window=window, softcap=cfg.attn_softcap, page_size=ps)
+            o = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(xd))[:, None, :]
+            return o, ck, cv, ks, vs
         out, ck, cv = paged_decode_update_attend(
             q, k, v, cache_k, cache_v, block_tables, write_page, write_off,
             (lengths + 1).astype(jnp.int32),
-            window=cfg.window if kind == "local" else None,
+            window=window,
             softcap=cfg.attn_softcap, page_size=ps)
         o = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(xd))[:, None, :]
         return o, ck, cv
@@ -235,11 +249,13 @@ def apply_mla(p, x, cfg: ModelConfig, positions=None,
 
 
 def decode_mla(p, x, cache_k, cache_v, lengths, cfg: ModelConfig,
-               block_tables=None):
+               block_tables=None, cache_scales=None):
     """MLA decode.  We cache the *materialized* per-head K/V (simple
     variant; latent-cache decode is a further memory optimization —
     DESIGN.md notes it as future work).  With ``block_tables`` the
-    caches are paged pools, as in ``decode_attn``."""
+    caches are paged pools, as in ``decode_attn``; with
+    ``cache_scales`` they are quantized paged pools and the 5-tuple
+    (out, k, v, ks, vs) comes back."""
     m: MLAConfig = cfg.mla
     b = x.shape[0]
     h = cfg.num_heads
@@ -263,6 +279,15 @@ def decode_mla(p, x, cache_k, cache_v, lengths, cfg: ModelConfig,
     if block_tables is not None:
         ps = cache_k.shape[2]
         write_page, write_off = _page_coords(block_tables, lengths, ps)
+        if cache_scales is not None:
+            out, ck, cv, ks, vs = quant_paged_decode_update_attend(
+                q_full, k_full, v, cache_k, cache_v,
+                cache_scales[0], cache_scales[1], block_tables, write_page,
+                write_off, (lengths + 1).astype(jnp.int32),
+                scale=qk_dim ** -0.5, page_size=ps)
+            o = jnp.einsum("bhk,hkd->bd", out,
+                           p["wo_mla"].astype(xd))[:, None, :]
+            return o, ck, cv, ks, vs
         out, ck, cv = paged_decode_update_attend(
             q_full, k_full, v, cache_k, cache_v, block_tables, write_page,
             write_off, (lengths + 1).astype(jnp.int32),

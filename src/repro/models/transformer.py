@@ -281,26 +281,36 @@ def apply_layer_decode(p, x, cache, cfg: ModelConfig, kind: str,
 
     A cache carrying ``kp``/``vp`` holds paged pools (serve/paging.py);
     the layer then routes through the paged update+attend kernel with
-    ``block_tables``.  Recurrent/ring/cross caches are never paged and
-    take their usual path.
+    ``block_tables``.  A cache that also carries ``ks``/``vs`` scale
+    pools holds *quantized* pools (repro.quant) and routes through the
+    re-quantizing write + fused-dequant kernel.  Recurrent/ring/cross
+    caches are never paged and take their usual path.
     """
     h = L.apply_norm(p["ln1"], x, cfg)
     new_cache = dict(cache)
     if kind in ("global", "local"):
         paged = "kp" in cache
+        quantized = "ks" in cache
         ck_in = cache["kp"] if paged else cache["k"]
         cv_in = cache["vp"] if paged else cache["v"]
+        scales = (cache["ks"], cache["vs"]) if quantized else None
         bt = block_tables if paged else None
         ring = (not paged and kind == "local" and cfg.window is not None
                 and cache["k"].shape[2] == cfg.window)
         if cfg.mla:
-            y, ck, cv = A.decode_mla(p["attn"], h, ck_in, cv_in,
-                                     lengths, cfg, block_tables=bt)
+            out = A.decode_mla(p["attn"], h, ck_in, cv_in,
+                               lengths, cfg, block_tables=bt,
+                               cache_scales=scales)
         else:
-            y, ck, cv = A.decode_attn(p["attn"], h, ck_in, cv_in,
-                                      lengths, cfg, kind=kind, ring=ring,
-                                      theta=_theta(cfg, kind),
-                                      block_tables=bt)
+            out = A.decode_attn(p["attn"], h, ck_in, cv_in,
+                                lengths, cfg, kind=kind, ring=ring,
+                                theta=_theta(cfg, kind),
+                                block_tables=bt, cache_scales=scales)
+        if quantized:
+            y, ck, cv, ks, vs = out
+            new_cache["ks"], new_cache["vs"] = ks, vs
+        else:
+            y, ck, cv = out
         if paged:
             new_cache["kp"], new_cache["vp"] = ck, cv
         else:

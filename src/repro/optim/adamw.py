@@ -11,12 +11,19 @@ the fp32-everything baseline.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-QBLOCK = 256
+# The blockwise int8 machinery that used to live inline here is now the
+# general quantization subsystem (repro.quant) — same law, any block
+# axes, int8 or fp8 storage; the flat-QBLOCK layout stays available
+# under its historical names for the optimizer/compression callers.
+from repro.quant.blockwise import QBLOCK  # noqa: F401  (re-export)
+from repro.quant.blockwise import dequantize_blockwise as dequantize_i8
+from repro.quant.blockwise import quantize_absmax
+from repro.quant.blockwise import quantize_blockwise as quantize_i8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,32 +34,6 @@ class AdamWConfig:
     weight_decay: float = 0.1
     quantize_moments: bool = False
     clip_norm: Optional[float] = 1.0
-
-
-# ----------------------------------------------------- int8 moment store --
-
-def _pad_len(n: int) -> int:
-    return -(-n // QBLOCK) * QBLOCK
-
-
-def quantize_i8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """f32 tensor -> (int8 blocks, f32 block scales).  Blockwise absmax."""
-    flat = x.reshape(-1)
-    n = flat.shape[0]
-    pad = _pad_len(n) - n
-    flat = jnp.pad(flat, (0, pad)).reshape(-1, QBLOCK)
-    amax = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
-    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
-    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
-    return q, scale[:, 0]
-
-
-def dequantize_i8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
-    flat = q.astype(jnp.float32) * scale[:, None]
-    n = 1
-    for s in shape:
-        n *= s
-    return flat.reshape(-1)[:n].reshape(shape)
 
 
 # ------------------------------------------------------------- adamw ------
@@ -92,9 +73,7 @@ def _write_moment(val, quantize: bool, second: bool = False):
     if quantize:
         if second:
             return val.astype(jnp.bfloat16)
-        amax = jnp.max(jnp.abs(val), axis=-1, keepdims=True)
-        s = jnp.where(amax == 0, 1.0, amax / 127.0)
-        q = jnp.clip(jnp.round(val / s), -127, 127).astype(jnp.int8)
+        q, s = quantize_absmax(val, dtype=jnp.int8, axis=-1, keepdims=True)
         return {"q": q, "s": s}
     return val
 

@@ -1,0 +1,27 @@
+"""Quantization subsystem: blockwise absmax primitives, the KV-cache
+quant spec, and arch-aware dtype capability dispatch.
+
+Layering (DESIGN.md §11):
+
+* ``blockwise``   — the quantize/dequantize law (int8 round+clip,
+                    fp8-e4m3 cast) over arbitrary block axes;
+                    generalizes the machinery ``optim/adamw.py`` and
+                    ``optim/compress.py`` now import from here.
+* ``capability``  — ``declare variant``-routed "which KV dtypes can
+                    this target hold?" query.
+* ``spec``        — :class:`KVQuantSpec` (storage dtype + qmax +
+                    documented decode tolerance) and the arch-aware
+                    ``resolve_kv_spec`` with clean fallback.
+
+Consumers: ``serve/paging.py`` (dtype-parametric pools + quantizing
+prefill scatter), ``sharding/kernel_sharding.py`` (re-quantizing page
+write), ``kernels/decode_attention`` (fused-dequant paged decode op).
+"""
+from repro.quant.blockwise import (FP8_E4M3_MAX, QBLOCK, QMAX_INT8,
+                                   absmax_scale, dequantize_absmax,
+                                   dequantize_blockwise, quantize_absmax,
+                                   quantize_blockwise)  # noqa: F401
+from repro.quant.capability import (FALLBACK, KV_DTYPES, kv_cache_dtypes,
+                                    supports_kv_dtype)  # noqa: F401
+from repro.quant.spec import (DECODE_TOL, KVQuantSpec, resolve_kv_spec,
+                              spec_for_storage)  # noqa: F401

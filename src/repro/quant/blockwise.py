@@ -1,0 +1,131 @@
+"""Blockwise absmax quantize/dequantize primitives.
+
+This generalizes the int8 machinery that used to live inline in
+``optim/adamw.py`` (Dettmers-style dynamic blockwise absmax): one
+quantization *law* — ``q = round_or_cast(x / scale)`` with
+``scale = absmax(block) / qmax`` — parameterized over
+
+* the **block**: any set of reduction axes (``axis=``), so the same
+  primitive serves the optimizer's flat ``(N/256, 256)`` blocks, the
+  optimizer's row-wise moments, and the KV cache's per-page-per-head
+  ``(page_size, head_dim)`` blocks;
+* the **storage dtype**: ``int8`` (round + clip to ±127) or
+  ``float8_e4m3`` (cast; the scale maps the block's absmax onto the
+  fp8 dynamic-range ceiling of 448).
+
+Error bounds (the contract the property tests assert):
+
+* int8:  ``|x - deq(q)| <= scale / 2``  per element — half a
+  quantization step, where ``scale = absmax / 127``.
+* fp8-e4m3: relative rounding error ``<= 2**-3`` of the element (3
+  mantissa bits, loose by 2x to cover the subnormal boundary) plus an
+  absolute ``scale * 2**-8`` floor inside the subnormal range.
+
+All-zero blocks quantize to zeros with scale 1 (never 0), so
+``dequantize`` is total and a zero-initialized pool round-trips to
+zeros.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QMAX_INT8", "FP8_E4M3_MAX", "QBLOCK",
+    "absmax_scale", "quantize_absmax", "dequantize_absmax",
+    "quantize_blockwise", "dequantize_blockwise",
+]
+
+QMAX_INT8 = 127.0
+#: jnp.finfo(float8_e4m3fn).max — the scale maps absmax onto this.
+FP8_E4M3_MAX = 448.0
+#: Flat block length of the optimizer's moment store (adamw heritage).
+QBLOCK = 256
+
+_Axes = Union[int, Sequence[int]]
+
+
+def _norm_axes(axis: _Axes) -> Tuple[int, ...]:
+    return (axis,) if isinstance(axis, int) else tuple(axis)
+
+
+def absmax_scale(x: jax.Array, axis: _Axes, qmax: float) -> jax.Array:
+    """Per-block scale ``absmax/qmax`` (keepdims; 1.0 for all-zero)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)),
+                   axis=_norm_axes(axis), keepdims=True)
+    return jnp.where(amax == 0, 1.0, amax / qmax)
+
+
+def quantize_absmax(x: jax.Array, *, dtype, axis: _Axes = -1,
+                    keepdims: bool = False
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize ``x`` blockwise over ``axis`` into storage ``dtype``.
+
+    Returns ``(q, scales)`` with ``scales`` squeezed over the reduced
+    axes (so a ``(H, P, ps, D)`` pool quantized over ``(-2, -1)`` gets
+    ``(H, P)`` per-page-per-head scales).  ``keepdims=True`` keeps the
+    reduced axes as 1s instead, so the scale broadcasts directly
+    against ``q`` — the layout the optimizer's row-wise moment store
+    persists (``optim/adamw.py``: sharded like the parameter itself).
+    """
+    dtype = jnp.dtype(dtype)
+    axes = _norm_axes(axis)
+    xf = x.astype(jnp.float32)
+    scale = absmax_scale(xf, axes, _qmax_for(dtype))
+    u = xf / scale
+    if dtype == jnp.int8:
+        q = jnp.clip(jnp.round(u), -QMAX_INT8, QMAX_INT8).astype(jnp.int8)
+    else:
+        q = u.astype(dtype)
+    if keepdims:
+        return q, scale
+    return q, jnp.squeeze(scale, axis=axes)
+
+
+def dequantize_absmax(q: jax.Array, scales: jax.Array,
+                      axis: _Axes = -1) -> jax.Array:
+    """Inverse of :func:`quantize_absmax` (up to the rounding error)."""
+    axes = sorted(a % q.ndim for a in _norm_axes(axis))
+    s = jnp.expand_dims(scales, axis=tuple(axes))
+    return q.astype(jnp.float32) * s
+
+
+def _qmax_for(dtype) -> float:
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.int8:
+        return QMAX_INT8
+    if dtype == jnp.dtype(jnp.float8_e4m3fn):
+        return FP8_E4M3_MAX
+    raise ValueError(f"unsupported quantization storage dtype {dtype}")
+
+
+# ------------------------------------------------- flat-block (adamw) ------
+
+def _pad_len(n: int) -> int:
+    return -(-n // QBLOCK) * QBLOCK
+
+
+def quantize_blockwise(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """f32 tensor -> (int8 ``(N/256, 256)`` blocks, f32 block scales).
+
+    The optimizer/gradient-compression layout: flatten, pad to a
+    multiple of :data:`QBLOCK`, absmax per block.  (Shard-local use
+    only — the flattening reshape is hostile to GSPMD on sharded
+    tensors; see the layout note in ``optim/adamw.py``.)
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = _pad_len(n) - n
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, QBLOCK)
+    q, scales = quantize_absmax(flat, dtype=jnp.int8, axis=-1)
+    return q, scales
+
+
+def dequantize_blockwise(q: jax.Array, scales: jax.Array, shape) -> jax.Array:
+    flat = dequantize_absmax(q, scales, axis=-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat.reshape(-1)[:n].reshape(shape)

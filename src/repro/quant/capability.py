@@ -1,0 +1,82 @@
+"""Arch-aware KV-cache dtype capability — a ``declare variant`` query.
+
+Dtype support is exactly the kind of capability that varies by target:
+int8 stores and loads work on every arch this runtime knows, but
+fp8-e4m3 needs ISA support (newer TPU generations; the CPU interpreter
+emulates it through XLA's software fp8).  Following the paper's
+pattern, the *query itself* is a base function with per-target
+variants, so asking "what KV dtypes can this target hold?" routes
+through the same OpenMP 5.1 selector scoring as every kernel variant —
+adding a target (or an ISA that grows fp8) is one ``declare_variant``,
+not an if-ladder in the serving engine.
+
+The returned tuple is ordered widest-to-narrowest; callers that need a
+fallback walk :data:`FALLBACK` (fp8 → int8 → bf16) until they hit a
+supported dtype (``spec.resolve_kv_spec``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import variant
+
+__all__ = ["KV_DTYPES", "FALLBACK", "kv_cache_dtypes", "supports_kv_dtype"]
+
+#: Every dtype the subsystem knows how to store, widest first.
+KV_DTYPES = ("bf16", "int8", "fp8_e4m3")
+
+#: Degradation chain when a target lacks the requested dtype.
+FALLBACK = {"fp8_e4m3": "int8", "int8": "bf16"}
+
+#: TPU generations whose ISA has native fp8-e4m3 (MXU fp8 matmuls).
+FP8_TPU_ISAS = ("v5e", "v5p", "v6e")
+
+_HOST_HAS_FP8 = hasattr(jnp, "float8_e4m3fn")
+
+
+@variant.declare_target(name="kv_cache_dtypes")
+def kv_cache_dtypes():
+    """Base (generic/pure-jnp): bf16 passthrough + int8 — the portable
+    floor every target can serve."""
+    return ("bf16", "int8")
+
+
+@variant.declare_variant(
+    kv_cache_dtypes,
+    match=variant.match(device=variant.arch("interpret")))
+def _kv_dtypes_interpret():
+    # The CPU interpreter runs kernels through XLA, which software-
+    # emulates fp8 — the "new target for free" story extends to dtypes.
+    if _HOST_HAS_FP8:
+        return ("bf16", "int8", "fp8_e4m3")
+    return ("bf16", "int8")
+
+
+@variant.declare_variant(
+    kv_cache_dtypes,
+    match=variant.match(device=variant.arch("tpu")))
+def _kv_dtypes_tpu():
+    # TPU baseline (unknown/older ISA): int8 everywhere, no fp8.
+    return ("bf16", "int8")
+
+
+def _fp8_isa_variant():
+    return ("bf16", "int8", "fp8_e4m3")
+
+
+for _isa in FP8_TPU_ISAS:
+    # One isa-specific variant per fp8-capable generation: the isa
+    # selector outscores the bare-arch TPU variant (isa > arch in the
+    # OpenMP 5.1 ordering), so a v5e context sees fp8 while an
+    # unrecognized TPU falls back to the int8-only arch variant.
+    variant.declare_variant(
+        kv_cache_dtypes,
+        match=variant.match(device=[variant.arch("tpu"),
+                                    variant.isa(_isa)]))(_fp8_isa_variant)
+
+
+def supports_kv_dtype(dtype: str, tc=None) -> bool:
+    """Does the (current or given) target context support ``dtype``?"""
+    from repro.core import context as ctx_mod
+    tc = tc or ctx_mod.current_context()
+    return dtype in kv_cache_dtypes.resolve(tc)()

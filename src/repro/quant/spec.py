@@ -1,0 +1,127 @@
+"""KVQuantSpec — how a paged KV pool is stored, scaled, and bounded.
+
+A spec names the storage dtype, the quantization ceiling (``qmax``),
+and the documented decode tolerance for one KV-cache dtype.  The scale
+layout is fixed by the subsystem: **per page per head** — one f32
+scale per ``(head, page)`` block of ``(page_size, head_dim)`` values,
+kept in a scale pool parallel to the KV pool (``serve/paging.py``).
+Page-granular scales keep the overhead to 4 bytes per page (vs 2-4
+bytes *per row* for per-token scales), which is what makes the int8
+pool a true >=1.9x capacity win at small head dims; the price is that
+the decode write path re-quantizes the tail page when a new row raises
+its absmax (``sharding/kernel_sharding.py`` documents the bound).
+
+``resolve_kv_spec`` is the arch-aware entry point: it asks the
+variant-dispatched capability query (``quant/capability.py``) whether
+the active target can hold the requested dtype and walks the fallback
+chain (fp8 → int8 → bf16) with a warning when it cannot — the serving
+engine never has to know which ISA it landed on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.quant import blockwise
+from repro.quant.capability import FALLBACK, KV_DTYPES, kv_cache_dtypes
+
+__all__ = ["KVQuantSpec", "resolve_kv_spec", "spec_for_storage",
+           "DECODE_TOL"]
+
+#: Documented absolute tolerance of quantized paged decode attention
+#: vs the bf16 reference, for unit-variance K/V (what the quant-smoke
+#: gate and tests/test_quant.py assert).  int8 per-page absmax keeps
+#: per-element error <= absmax/254 (~0.4% of the block ceiling); fp8
+#: e4m3 is relative (3 mantissa bits, ~6%) so the attention output
+#: bound is proportionally looser.
+DECODE_TOL = {"int8": 0.05, "fp8_e4m3": 0.25}
+
+
+@dataclasses.dataclass(frozen=True)
+class KVQuantSpec:
+    """Storage contract for one paged-KV dtype."""
+    dtype: str                      # "bf16" | "int8" | "fp8_e4m3"
+    storage: jnp.dtype              # pool element dtype
+    qmax: Optional[float]           # None = passthrough (no scales)
+
+    @property
+    def quantized(self) -> bool:
+        return self.qmax is not None
+
+    @property
+    def scale_dtype(self):
+        return jnp.float32
+
+    @property
+    def decode_tol(self) -> Optional[float]:
+        return DECODE_TOL.get(self.dtype)
+
+    def quantize_pages(self, x):
+        """Quantize ``(..., page_size, D)`` blocks -> (q, scales)."""
+        return blockwise.quantize_absmax(x, dtype=self.storage,
+                                         axis=(-2, -1))
+
+    def dequantize_pages(self, q, scales):
+        return blockwise.dequantize_absmax(q, scales, axis=(-2, -1))
+
+
+_SPECS = {
+    "bf16": KVQuantSpec("bf16", jnp.dtype(jnp.bfloat16), None),
+    "int8": KVQuantSpec("int8", jnp.dtype(jnp.int8), blockwise.QMAX_INT8),
+}
+if hasattr(jnp, "float8_e4m3fn"):
+    _SPECS["fp8_e4m3"] = KVQuantSpec(
+        "fp8_e4m3", jnp.dtype(jnp.float8_e4m3fn), blockwise.FP8_E4M3_MAX)
+
+
+def spec_for_storage(dtype) -> KVQuantSpec:
+    """The spec whose storage dtype is ``dtype`` (pool-dtype dispatch:
+    the sharded decode wrapper recovers qmax from the pool itself)."""
+    dtype = jnp.dtype(dtype)
+    for spec in _SPECS.values():
+        if spec.storage == dtype:
+            return spec
+    raise ValueError(f"no KV quant spec stores dtype {dtype}")
+
+
+def resolve_kv_spec(requested: Optional[str], tc=None, *,
+                    strict: bool = False) -> Optional[KVQuantSpec]:
+    """Map a requested KV dtype onto what the target supports.
+
+    ``None`` means "model dtype passthrough" (no spec — the paged pool
+    keeps the dense cache's dtype, the pre-quant behavior).  A named
+    dtype resolves against the variant-dispatched capability query;
+    unsupported dtypes degrade along :data:`FALLBACK` with a warning,
+    or raise when ``strict=True``.
+    """
+    if requested is None:
+        return None
+    name = requested.replace("-", "_").lower()
+    if name in ("bfloat16",):
+        name = "bf16"
+    if name == "fp8":
+        name = "fp8_e4m3"
+    if name not in KV_DTYPES:
+        raise ValueError(f"unknown kv dtype {requested!r}; "
+                         f"known: {KV_DTYPES}")
+    supported = kv_cache_dtypes.resolve(tc)()
+    asked = name
+    while name not in supported or name not in _SPECS:
+        if strict:
+            raise ValueError(
+                f"kv dtype {asked!r} is not supported on this target "
+                f"(supported: {supported})")
+        nxt = FALLBACK.get(name)
+        if nxt is None:
+            raise ValueError(
+                f"kv dtype {asked!r} has no supported fallback on this "
+                f"target (supported: {supported})")
+        name = nxt
+    if name != asked:
+        warnings.warn(
+            f"kv dtype {asked!r} unsupported on this target; "
+            f"falling back to {name!r}", stacklevel=2)
+    return _SPECS[name]

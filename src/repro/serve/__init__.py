@@ -1,2 +1,3 @@
-from repro.serve.engine import Engine, ServeConfig, Request  # noqa: F401
+from repro.serve.engine import (Engine, ServeConfig, Request,
+                                run_recording_finish_order)  # noqa: F401
 from repro.serve import paging  # noqa: F401

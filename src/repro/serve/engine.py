@@ -19,7 +19,10 @@ last-position logits correct for every row), then scattered into slots
 Paged mode (``ServeConfig(paged=True)``) stores global-attention KV in
 fixed-size pages from a shared pool (serve/paging.py) and decodes
 through the paged flash-decode kernel; the page size defaults to the
-autotuner's per-target winner for ``paged_decode_attention``.
+autotuner's per-target winner for ``paged_decode_attention``.  With
+``kv_dtype`` the pools quantize (int8 everywhere, fp8-e4m3 where the
+target's ISA supports it — repro.quant resolves with clean fallback)
+and decode runs the fused-dequant kernel; ``"bf16"`` is passthrough.
 
 Termination: a slot finishes when it has emitted ``max_new_tokens``,
 sampled ``eos_id``, or its cache is truly full — ``lengths ==
@@ -55,6 +58,10 @@ class ServeConfig:
     page_size: Optional[int] = None    # None -> per-target tuning table
     total_pages: Optional[int] = None  # None -> 1 + slots*pages_per_slot
     on_overflow: str = "reject"        # "reject" | "truncate"
+    # KV pool dtype (paged only): None = model-dtype passthrough;
+    # "bf16" | "int8" | "fp8_e4m3" resolve through the arch-aware
+    # capability query (repro.quant) with clean per-target fallback.
+    kv_dtype: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -78,7 +85,12 @@ class Engine:
                              f"got {sc.on_overflow!r}")
 
         self.paged = sc.paged
+        if sc.kv_dtype is not None and not sc.paged:
+            raise ValueError("kv_dtype requires paged=True (only paged "
+                             "pools are dtype-parametric)")
         if self.paged:
+            from repro.quant import resolve_kv_spec
+            self.kv_spec = resolve_kv_spec(sc.kv_dtype)
             self.page_size = self._resolve_page_size()
             self.pages_per_slot = paging.pages_per_slot(sc.cache_len,
                                                         self.page_size)
@@ -89,8 +101,10 @@ class Engine:
             self._bt_dev = jnp.asarray(self.block_tables)
             self._bt_dirty = False
             self.caches = paging.init_paged_caches(
-                model, slots, sc.cache_len, self.page_size, total)
+                model, slots, sc.cache_len, self.page_size, total,
+                kv_spec=self.kv_spec)
         else:
+            self.kv_spec = None
             self.caches = model.init_decode_caches(slots, sc.cache_len)
 
         # device-resident scheduler state
@@ -117,7 +131,10 @@ class Engine:
             ps = int(self.sc.page_size)
         else:
             from repro.core import tuning
-            ps = int(tuning.block_size("paged_decode_attention", "page_size"))
+            op = ("quant_paged_decode_attention"
+                  if self.kv_spec is not None and self.kv_spec.quantized
+                  else "paged_decode_attention")
+            ps = int(tuning.block_size(op, "page_size"))
         return max(1, min(ps, self.sc.cache_len))
 
     def _sample(self, logits, key):
@@ -294,7 +311,10 @@ class Engine:
         self._active_h[slot] = False
         self._len_h[slot] = 0
         if self.paged:
-            self.allocator.free(self.block_tables[slot].tolist())
+            # the allocator is strict (double-free / null-page freeing
+            # raise), so filter the table row's unallocated entries here
+            self.allocator.free([int(p) for p in self.block_tables[slot]
+                                 if p != paging.NULL_PAGE])
             self.block_tables[slot] = paging.NULL_PAGE
             self._bt_dirty = True
 
@@ -351,3 +371,28 @@ class Engine:
             if not self.step() and not self.queue:
                 break
         return requests
+
+
+def run_recording_finish_order(engine, requests: List[Request],
+                               max_steps: int = 10_000) -> List[int]:
+    """Run ``requests`` to completion, returning rids in finish order
+    (same-step ties break deterministically in ``requests`` order).
+
+    The scheduling-contract observer shared by the kv_quant benchmark
+    gate and examples/serve_continuous.py: quantization may perturb
+    logits within tolerance, so the cross-dtype invariant those assert
+    is *when* each request finishes, not which tokens it sampled.
+    """
+    for r in requests:
+        engine.submit(r)
+    order: List[int] = []
+    seen = set()
+    for _ in range(max_steps):
+        busy = engine.step()
+        for r in requests:
+            if r.done and r.rid not in seen:
+                seen.add(r.rid)
+                order.append(r.rid)
+        if not busy and not engine.queue:
+            break
+    return order

@@ -21,12 +21,25 @@ encoder cross-KV are fixed-size and stay slot-dense).  Paged cache
 dicts carry ``kp``/``vp`` pools of shape ``(reps, Hkv, P, ps, D)`` in
 place of ``k``/``v``; the transformer decode path routes on that key
 (models/transformer.py::apply_layer_decode).
+
+**Quantized pools** (repro.quant): with a :class:`~repro.quant.
+KVQuantSpec` the pools store int8/fp8-e4m3 and each paged dict grows
+parallel **scale pools** ``ks``/``vs`` of shape ``(reps, Hkv, P)`` —
+one f32 absmax scale per (head, page) block.  ``scatter_prefill``
+quantizes admitted prompts page-blockwise on the way in; the decode
+write path re-quantizes the tail page (sharding/kernel_sharding.py);
+and the fused-dequant kernel gathers scale blocks through the same
+block-table path as the KV blocks.  ``bf16`` specs are passthrough:
+the pool dtype changes, no scale pools appear, and the bf16 paged
+kernel path is used unchanged.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence, Set
 
 import jax.numpy as jnp
+
+from repro.quant import KVQuantSpec
 
 NULL_PAGE = 0
 
@@ -36,6 +49,9 @@ class PageAllocator:
 
     Pure host-side bookkeeping — O(1) alloc/free, no device traffic.
     LIFO reuse keeps recently-freed (still-cached-hot) pages in play.
+    ``free`` is strict: double-freeing a page, or freeing the reserved
+    null page, is a caller bug that would silently hand one physical
+    page to two live sequences — it raises instead.
     """
 
     def __init__(self, total_pages: int):
@@ -43,6 +59,7 @@ class PageAllocator:
             raise ValueError("need at least 2 pages (page 0 is reserved)")
         self.total_pages = int(total_pages)
         self._free: List[int] = list(range(total_pages - 1, 0, -1))
+        self._allocated: Set[int] = set()
 
     @property
     def available(self) -> int:
@@ -54,19 +71,41 @@ class PageAllocator:
                 "KV page pool exhausted; raise ServeConfig.total_pages "
                 "(or lower slots/cache_len) — the default sizing "
                 "(1 + slots * pages_per_slot) never exhausts")
-        return self._free.pop()
+        p = self._free.pop()
+        self._allocated.add(p)
+        return p
 
     def alloc_many(self, n: int) -> List[int]:
+        # Capacity is checked up front so a partial exhaustion can
+        # never leak half an allocation: either all n pages come back
+        # or the allocator state is exactly as before the call.
         if n > len(self._free):
             raise RuntimeError(
                 f"KV page pool exhausted: need {n} pages, "
                 f"{len(self._free)} free")
-        return [self._free.pop() for _ in range(n)]
+        return [self.alloc() for _ in range(n)]
 
     def free(self, pages: Sequence[int]) -> None:
+        # Validate the whole batch before mutating, so a rejected call
+        # leaves the allocator exactly as it was — including duplicates
+        # *within* the batch, which would otherwise each pass the
+        # allocated check and land on the free list twice.
+        pages = [int(p) for p in pages]
+        seen: Set[int] = set()
         for p in pages:
-            if p != NULL_PAGE:
-                self._free.append(int(p))
+            if p == NULL_PAGE:
+                raise ValueError(
+                    "cannot free the reserved null page 0 (filter "
+                    "NULL_PAGE entries out of the block-table row first)")
+            if p not in self._allocated or p in seen:
+                raise ValueError(
+                    f"double free of KV page {p} (not currently "
+                    f"allocated); a page freed twice would be handed to "
+                    f"two live sequences")
+            seen.add(p)
+        for p in pages:
+            self._allocated.discard(p)
+            self._free.append(p)
 
 
 def pages_per_slot(cache_len: int, page_size: int) -> int:
@@ -79,13 +118,18 @@ def _is_paged_leaf_dict(c, cache_len: int) -> bool:
 
 
 def init_paged_caches(model, slots: int, cache_len: int, page_size: int,
-                      total_pages: int):
+                      total_pages: int,
+                      kv_spec: Optional[KVQuantSpec] = None):
     """Build the paged decode-cache tree for ``model``.
 
     Derived from the abstract dense tree (no dense allocation): each
     pageable layer's ``k``/``v`` (reps, slots, H, S, D) becomes
     ``kp``/``vp`` pools (reps, H, total_pages, page_size, D); every
-    other leaf keeps its dense slot-major shape.
+    other leaf keeps its dense slot-major shape.  With a quantizing
+    ``kv_spec`` the pools take the spec's storage dtype and parallel
+    ``ks``/``vs`` scale pools (reps, H, total_pages) appear (ones-
+    initialized: a zero pool dequantizes to zeros under any scale, and
+    a unit scale keeps dequantization total before the first write).
     """
     abstract = model.abstract_decode_caches(slots, cache_len)
     caches = []
@@ -97,8 +141,12 @@ def init_paged_caches(model, slots: int, cache_len: int, page_size: int,
                 for name, leaf in c.items():
                     if name in ("k", "v"):
                         reps, _, h, _, d = leaf.shape
+                        dtype = kv_spec.storage if kv_spec else leaf.dtype
                         nc["kp" if name == "k" else "vp"] = jnp.zeros(
-                            (reps, h, total_pages, page_size, d), leaf.dtype)
+                            (reps, h, total_pages, page_size, d), dtype)
+                        if kv_spec is not None and kv_spec.quantized:
+                            nc["ks" if name == "k" else "vs"] = jnp.ones(
+                                (reps, h, total_pages), kv_spec.scale_dtype)
                     else:
                         nc[name] = jnp.zeros(leaf.shape, leaf.dtype)
             else:
@@ -109,6 +157,17 @@ def init_paged_caches(model, slots: int, cache_len: int, page_size: int,
     return caches
 
 
+def _paged_one(one, page_rows, ps: int):
+    """Reshape a batch-k prefill leaf (reps, k, H, S, D) into page
+    blocks (reps, H, k, T, ps, D) aligned with ``page_rows`` (k, T)."""
+    reps, k, h, s, d = one.shape
+    t = page_rows.shape[1]
+    pad = t * ps - s
+    if pad:
+        one = jnp.pad(one, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    return one.reshape(reps, k, h, t, ps, d).transpose(0, 2, 1, 3, 4, 5)
+
+
 def _scatter_pages(pool, one, page_rows):
     """Write a prefilled dense cache into pool pages.
 
@@ -116,14 +175,22 @@ def _scatter_pages(pool, one, page_rows):
     output; page_rows: (k, T) int32 destination pages (NULL_PAGE rows
     beyond the prompt land in trash, masked by length at decode).
     """
-    reps, k, h, s, d = one.shape
-    ps = pool.shape[3]
-    t = page_rows.shape[1]
-    pad = t * ps - s
-    if pad:
-        one = jnp.pad(one, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
-    one = one.reshape(reps, k, h, t, ps, d).transpose(0, 2, 1, 3, 4, 5)
-    return pool.at[:, :, page_rows].set(one.astype(pool.dtype))
+    blocks = _paged_one(one, page_rows, pool.shape[3])
+    return pool.at[:, :, page_rows].set(blocks.astype(pool.dtype))
+
+
+def _scatter_pages_quant(pool, scale_pool, one, page_rows):
+    """Quantizing page scatter: absmax per (head, page) block, int8/fp8
+    values into the KV pool, f32 scales into the parallel scale pool.
+    Rows past the prompt are zero padding, so they never inflate a
+    page's absmax."""
+    from repro.quant import spec_for_storage
+    spec = spec_for_storage(pool.dtype)
+    blocks = _paged_one(one, page_rows, pool.shape[3])
+    q, scales = spec.quantize_pages(blocks)       # (..., ps, D) blocks
+    return (pool.at[:, :, page_rows].set(q),
+            scale_pool.at[:, :, page_rows].set(
+                scales.astype(scale_pool.dtype)))
 
 
 def _scatter_slots(pool, one, slot_idx):
@@ -134,24 +201,54 @@ def _scatter_slots(pool, one, slot_idx):
 def scatter_prefill(caches, cache1, slot_idx, page_rows=None):
     """Admit a prefilled group into the cache tree (paged or dense).
 
-    caches: engine cache tree (paged dicts carry kp/vp); cache1: the
-    dense tree from ``model.prefill`` at batch k; slot_idx: (k,) target
-    slots; page_rows: (k, T) destination pages (paged mode only).
-    One jitted call per admitted group — the batched replacement for
-    the per-request ``dynamic_update_slice`` loop.
+    caches: engine cache tree (paged dicts carry kp/vp, plus ks/vs
+    scale pools when quantized); cache1: the dense tree from
+    ``model.prefill`` at batch k; slot_idx: (k,) target slots;
+    page_rows: (k, T) destination pages (paged mode only).  One jitted
+    call per admitted group — the batched replacement for the
+    per-request ``dynamic_update_slice`` loop.
     """
     out = []
     for seg_c, seg_one in zip(caches, cache1):
         new_seg = []
         for c, one in zip(seg_c, seg_one):
+            quantized = "ks" in c
             nc = {}
             for name, leaf in c.items():
                 if name == "kp":
-                    nc[name] = _scatter_pages(leaf, one["k"], page_rows)
+                    if quantized:
+                        nc["kp"], nc["ks"] = _scatter_pages_quant(
+                            leaf, c["ks"], one["k"], page_rows)
+                    else:
+                        nc[name] = _scatter_pages(leaf, one["k"], page_rows)
                 elif name == "vp":
-                    nc[name] = _scatter_pages(leaf, one["v"], page_rows)
+                    if quantized:
+                        nc["vp"], nc["vs"] = _scatter_pages_quant(
+                            leaf, c["vs"], one["v"], page_rows)
+                    else:
+                        nc[name] = _scatter_pages(leaf, one["v"], page_rows)
+                elif name in ("ks", "vs"):
+                    pass                     # written alongside kp/vp
                 else:
                     nc[name] = _scatter_slots(leaf, one[name], slot_idx)
             new_seg.append(nc)
         out.append(tuple(new_seg))
     return out
+
+
+def paged_bytes_per_slot(caches, total_pages: int, n_pages_per_slot: int
+                         ) -> int:
+    """HBM bytes of paged pool (KV + scales) one slot's pages consume.
+
+    The capacity denominator of the kv_quant benchmark: at a fixed
+    pool-byte budget, ``budget // paged_bytes_per_slot`` concurrent
+    slots fit.  Dense (slot-major) leaves are excluded — they are the
+    same for every KV dtype.
+    """
+    per_page = 0
+    for seg in caches:
+        for c in seg:
+            for name, leaf in c.items():
+                if name in ("kp", "vp", "ks", "vs"):
+                    per_page += leaf.nbytes // total_pages
+    return per_page * n_pages_per_slot

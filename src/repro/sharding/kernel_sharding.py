@@ -41,7 +41,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.compat import shard_map
 from repro.core.runtime import runtime
 from repro.kernels.decode_attention.ops import (decode_attention,
-                                                paged_decode_attention)
+                                                paged_decode_attention,
+                                                quant_paged_decode_attention)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.mamba_scan.ops import mamba_scan
 from repro.kernels.mlstm_scan.ops import mlstm_scan
@@ -51,6 +52,7 @@ from repro.sharding import mesh_ctx
 __all__ = [
     "sharded_flash_attention", "sharded_decode_attention",
     "sharded_paged_decode_update_attend",
+    "sharded_quant_paged_decode_update_attend",
     "sharded_mamba_scan", "sharded_mlstm_scan", "sharded_rmsnorm",
     "maybe_mesh", "shard_map",
 ]
@@ -299,6 +301,97 @@ def sharded_paged_decode_update_attend(q, k_new, v_new, k_pages, v_pages,
         out_specs=(qs, ps_, ps_), check_vma=False)(
         q, k_new, v_new, k_pages, v_pages, block_tables,
         write_page, write_off, eff_len)
+
+
+def sharded_quant_paged_decode_update_attend(q, k_new, v_new,
+                                             k_pages, v_pages,
+                                             k_scales, v_scales,
+                                             block_tables, write_page,
+                                             write_off, eff_len, *,
+                                             window: Optional[int] = None,
+                                             softcap: Optional[float] = None,
+                                             scale: Optional[float] = None,
+                                             page_size: Optional[int] = None,
+                                             block_kv: Optional[int] = None):
+    """Fused re-quantizing page write + quantized paged decode attention.
+
+    q: (B,Hq,D); k_new/v_new: (B,Hkv,D) rope'd; pools: (Hkv,P,ps,D)
+    int8/fp8; scale pools: (Hkv,P) f32 per-page-per-head;
+    block_tables: (B,T) int32; write_page/write_off/eff_len: (B,).
+    Returns (out (B,Hq,Dv), new k_pages, new v_pages, new k_scales,
+    new v_scales).
+
+    **Write semantics** — page-granular absmax scales mean a single-row
+    write must keep the whole page consistent: the write page is
+    gathered, dequantized under its current scale, the new row spliced
+    at ``write_off``, rows past the offset zeroed (they are either
+    unwritten or stale garbage from a previous tenant of a recycled
+    page), and the page re-quantized under the refreshed absmax.  When
+    the page's scale is unchanged the re-quantization is *exact*
+    (``round(q * s / s) == q``), so error accumulates only on the rare
+    steps where a new row raises the page absmax — bounded by half a
+    quantization step per scale change, which the documented
+    ``quant.DECODE_TOL`` covers.  Dead slots park on null page 0, so
+    their (duplicate-index) writes land in trash exactly as in the
+    bf16 paged path.
+
+    Sharding follows the §Perf-B.1 rule: the gather-requantize-scatter
+    happens INSIDE the shard_map region, with the scale pools sharded
+    head-major exactly like the KV pools, so GSPMD never all-gathers
+    either.  When heads don't divide, pools and scale pools replicate
+    together (page-sharded SP remains the open item — DESIGN.md §10).
+    """
+    from repro.quant import quantize_absmax
+    mesh = maybe_mesh()
+    b, hq, _ = q.shape
+    hkv = k_pages.shape[0]
+    ps = k_pages.shape[2]
+    kw = dict(window=window, softcap=softcap, scale=scale,
+              page_size=page_size, block_kv=block_kv)
+
+    def update(pool, scales, new_row, page, off):
+        new_row = jnp.swapaxes(new_row, 0, 1).astype(jnp.float32)  # (H,B,D)
+        pg = pool[:, page]                                  # (H,B,ps,D)
+        sc = scales[:, page]                                # (H,B)
+        pgf = pg.astype(jnp.float32) * sc[:, :, None, None]
+        rows = jnp.arange(ps)[None, None, :, None]
+        offb = off[None, :, None, None]
+        pgf = jnp.where(rows == offb, new_row[:, :, None, :],
+                        jnp.where(rows < offb, pgf, 0.0))
+        q_pg, sc_new = quantize_absmax(pgf, dtype=pool.dtype,
+                                       axis=(-2, -1))
+        return (pool.at[:, page].set(q_pg),
+                scales.at[:, page].set(sc_new.astype(scales.dtype)))
+
+    def body(q_, kn, vn, kp, vp, ks, vs, bt, page, off, ln):
+        kp, ks = update(kp, ks, kn, page, off)
+        vp, vs = update(vp, vs, vn, page, off)
+        out = quant_paged_decode_attention(q_, kp, vp, ks, vs, bt, ln, **kw)
+        return out, kp, vp, ks, vs
+
+    if not _use_wrappers(mesh):
+        return body(q, k_new, v_new, k_pages, v_pages, k_scales, v_scales,
+                    block_tables, write_page, write_off, eff_len)
+
+    # no batch sharding (same as the bf16 paged wrapper): every shard
+    # must see every slot's write — the pool has no batch dim.
+    dp = None
+    tp = _tp(mesh)
+    if hq % tp == 0 and hkv % tp == 0:
+        qs, ns_ = P(dp, "model", None), P(dp, "model", None)
+        ps_ = P("model", None, None, None)
+        ss_ = P("model", None)
+    else:
+        qs, ns_ = P(dp, None, None), P(dp, None, None)
+        ps_ = P(None, None, None, None)
+        ss_ = P(None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(qs, ns_, ns_, ps_, ps_, ss_, ss_, P(dp, None),
+                  P(dp), P(dp), P(dp)),
+        out_specs=(qs, ps_, ps_, ss_, ss_), check_vma=False)(
+        q, k_new, v_new, k_pages, v_pages, k_scales, v_scales,
+        block_tables, write_page, write_off, eff_len)
 
 
 def sharded_decode_attention(q, k_cache, v_cache, lengths, *,

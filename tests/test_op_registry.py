@@ -18,7 +18,8 @@ from repro.core.op import DeviceOp, op_registry
 from repro.kernels import registry as R
 
 EXPECTED_OPS = ("decode_attention", "flash_attention", "gmm", "mamba_scan",
-                "mlstm_scan", "paged_decode_attention", "rmsnorm")
+                "mlstm_scan", "paged_decode_attention",
+                "quant_paged_decode_attention", "rmsnorm")
 
 OPS = list(R.all_ops())
 

@@ -36,8 +36,10 @@ def test_allocator_never_hands_out_null_page():
     a = paging.PageAllocator(4)
     pages = a.alloc_many(3)
     assert paging.NULL_PAGE not in pages
-    # freeing null pages is a no-op (freed slots' table rows contain them)
-    a.free([paging.NULL_PAGE, paging.NULL_PAGE])
+    # freeing the reserved null page is a caller bug, not a no-op:
+    # the engine filters NULL_PAGE table entries before freeing
+    with pytest.raises(ValueError, match="null page"):
+        a.free([paging.NULL_PAGE])
     assert a.available == 0
 
 
@@ -48,6 +50,64 @@ def test_allocator_exhaustion_raises():
         a.alloc()
     with pytest.raises(RuntimeError, match="exhausted"):
         a.alloc_many(1)
+
+
+def test_allocator_rejects_double_free():
+    """A page freed twice would be handed to two live sequences — the
+    allocator must catch the caller bug, and must reject the whole
+    batch before mutating anything."""
+    a = paging.PageAllocator(6)
+    pages = a.alloc_many(3)
+    a.free(pages[:1])
+    with pytest.raises(ValueError, match="double free"):
+        a.free(pages[:1])
+    # a batch mixing one valid and one already-free page must not
+    # partially apply: the valid page stays allocated
+    with pytest.raises(ValueError, match="double free"):
+        a.free([pages[1], pages[0]])
+    assert a.available == 3                     # only pages[0] came back
+    a.free(pages[1:])                           # still freeable once
+    assert a.available == 5
+
+
+def test_allocator_rejects_duplicate_within_one_batch():
+    """free([p, p]) must fail atomically: a duplicate inside a single
+    batch would otherwise pass the allocated check twice and land the
+    page on the free list twice — the double-lease in one call."""
+    a = paging.PageAllocator(6)
+    p = a.alloc_many(3)[0]
+    before = a.available
+    with pytest.raises(ValueError, match="double free"):
+        a.free([p, p])
+    assert a.available == before                # nothing mutated
+    a.free([p])                                 # still freeable once
+    assert a.alloc() == p                       # and handed out once
+    with pytest.raises(RuntimeError):
+        a.alloc_many(3)                         # only 2 others remain free
+
+
+def test_allocator_never_allocated_free_rejected():
+    a = paging.PageAllocator(8)
+    a.alloc()
+    with pytest.raises(ValueError, match="double free"):
+        a.free([5])                             # in the free list, not out
+
+
+def test_alloc_many_partial_exhaustion_rolls_back():
+    """A failed alloc_many must leave the allocator exactly as it was:
+    no pages leak out of the free list mid-batch."""
+    a = paging.PageAllocator(5)                 # 4 usable pages
+    got = a.alloc_many(2)
+    before = a.available
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.alloc_many(3)                         # only 2 free
+    assert a.available == before
+    # the survivors are still allocatable and the earlier allocation
+    # is still tracked (freeing it back works once)
+    more = a.alloc_many(2)
+    assert len(set(got + more)) == 4
+    a.free(got + more)
+    assert a.available == 4
 
 
 # --------------------------------------------------------- paged kernel ----

@@ -1,0 +1,358 @@
+"""Quantized KV-cache subsystem: primitives, capability dispatch,
+fused-dequant paged decode, re-quantizing writes, engine integration."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import context as ctx
+from repro.kernels.decode_attention.ops import (
+    paged_decode_attention, quant_paged_decode_attention,
+    quant_paged_decode_attention_op)
+from repro.kernels.decode_attention.ref import gather_pages
+from repro.quant import (DECODE_TOL, KV_DTYPES, dequantize_absmax,
+                         kv_cache_dtypes, quantize_absmax, resolve_kv_spec,
+                         spec_for_storage)
+from repro.serve import paging
+from repro.sharding.kernel_sharding import (
+    sharded_paged_decode_update_attend,
+    sharded_quant_paged_decode_update_attend)
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+# guard fp8 the way the subsystem does (spec.py hasattr-gates it), so
+# a jax build without float8 still collects this file and runs int8
+QUANT_DTYPES = [jnp.int8] + ([jnp.float8_e4m3fn]
+                             if hasattr(jnp, "float8_e4m3fn") else [])
+
+
+# ----------------------------------------------------------- primitives ----
+
+@pytest.mark.parametrize("dtype", QUANT_DTYPES)
+def test_roundtrip_error_bound(dtype):
+    """|x - deq(quant(x))| <= half a step (int8) / fp8 relative bound,
+    per block — the documented contract of the absmax law."""
+    x = _rand((6, 4, 32), seed=3) * jnp.arange(1, 7)[:, None, None]
+    q, s = quantize_absmax(x, dtype=dtype, axis=(-2, -1))
+    assert q.dtype == jnp.dtype(dtype)
+    assert s.shape == (6,)
+    back = dequantize_absmax(q, s, axis=(-2, -1))
+    err = np.abs(np.asarray(x) - np.asarray(back))
+    if dtype == jnp.int8:
+        bound = np.asarray(s)[:, None, None] / 2 + 1e-7
+    else:
+        bound = np.abs(np.asarray(x)) * 2 ** -3 \
+            + np.asarray(s)[:, None, None] * 2 ** -8
+    assert (err <= bound).all(), float((err - bound).max())
+
+
+def test_roundtrip_zero_block_is_total():
+    q, s = quantize_absmax(jnp.zeros((2, 8)), dtype=jnp.int8, axis=-1)
+    np.testing.assert_array_equal(np.asarray(s), 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_absmax(q, s, axis=-1)), 0.0)
+
+
+def test_blockwise_flat_matches_adamw_heritage():
+    """The optimizer's flat-QBLOCK layout survives the move into the
+    subsystem (optim/adamw.py re-exports these)."""
+    from repro.optim import dequantize_i8, quantize_i8
+    x = _rand((7, 61), seed=5)
+    q, s = quantize_i8(x)
+    back = dequantize_i8(q, s, x.shape)
+    assert np.abs(np.asarray(x) - np.asarray(back)).max() \
+        <= float(s.max()) / 2 + 1e-7
+
+
+# ----------------------------------------------------------- capability ----
+
+def test_capability_per_target():
+    host_fp8 = hasattr(jnp, "float8_e4m3fn")
+    with ctx.target("generic"):
+        assert kv_cache_dtypes() == ("bf16", "int8")
+    with ctx.target("interpret"):
+        assert ("fp8_e4m3" in kv_cache_dtypes()) == host_fp8
+    with ctx.target("tpu"):
+        assert kv_cache_dtypes() == ("bf16", "int8")    # unknown isa
+    with ctx.target("tpu", isa="v5e"):
+        assert "fp8_e4m3" in kv_cache_dtypes()
+
+
+def test_resolve_falls_back_with_warning():
+    with ctx.target("generic"):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            spec = resolve_kv_spec("fp8_e4m3")
+        assert spec.dtype == "int8"
+        assert any("falling back" in str(x.message) for x in w)
+        with pytest.raises(ValueError, match="not supported"):
+            resolve_kv_spec("fp8_e4m3", strict=True)
+
+
+def test_resolve_passthrough_and_unknown():
+    assert resolve_kv_spec(None) is None
+    spec = resolve_kv_spec("bf16")
+    assert not spec.quantized and spec.storage == jnp.bfloat16
+    with pytest.raises(ValueError, match="unknown kv dtype"):
+        resolve_kv_spec("int4")
+    assert set(KV_DTYPES) == {"bf16", "int8", "fp8_e4m3"}
+
+
+# ------------------------------------------------------- fused dequant ----
+
+def _quant_fixture(dtype, b=2, hq=4, hkv=2, d=32, pages_per_slot=3, ps=32,
+                   seed=0):
+    n_pages = 1 + b * pages_per_slot
+    kpg = _rand((hkv, n_pages, ps, d), seed + 1)
+    vpg = _rand((hkv, n_pages, ps, d), seed + 2)
+    q = _rand((b, hq, d), seed)
+    perm = np.random.default_rng(seed).permutation(np.arange(1, n_pages))
+    bt = jnp.asarray(perm.reshape(b, pages_per_slot), jnp.int32)
+    lengths = jnp.array([ps * pages_per_slot - 5, ps + 3][:b], jnp.int32)
+    spec = spec_for_storage(dtype)
+    kq, ks = spec.quantize_pages(kpg)
+    vq, vs = spec.quantize_pages(vpg)
+    return q, (kpg, vpg), (kq, vq, ks, vs), bt, lengths
+
+
+@pytest.mark.parametrize("dtype", QUANT_DTYPES)
+def test_quant_paged_within_documented_tol_of_bf16(dtype):
+    """The acceptance bound: fused-dequant decode over quantized pools
+    stays inside quant.DECODE_TOL of the bf16 paged kernel on the same
+    underlying K/V."""
+    q, (kpg, vpg), (kq, vq, ks, vs), bt, lengths = _quant_fixture(dtype)
+    got = quant_paged_decode_attention(q, kq, vq, ks, vs, bt, lengths,
+                                       page_size=32, block_kv=16)
+    want = paged_decode_attention(q, kpg, vpg, bt, lengths,
+                                  page_size=32, block_kv=16)
+    err = float(jnp.max(jnp.abs(got - want)))
+    tol = DECODE_TOL[spec_for_storage(dtype).dtype]
+    assert err <= tol, (err, tol)
+
+
+def test_quant_kernel_matches_generic_exactly():
+    """Kernel vs pure-jnp ref on the *same quantized data* is a float
+    parity question, not a quantization-tolerance one."""
+    q, _, (kq, vq, ks, vs), bt, lengths = _quant_fixture(jnp.int8, seed=3)
+    with ctx.target("generic"):
+        want = quant_paged_decode_attention(q, kq, vq, ks, vs, bt, lengths)
+    got = quant_paged_decode_attention(q, kq, vq, ks, vs, bt, lengths,
+                                       page_size=16, block_kv=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_quant_repage_shares_physical_scale():
+    """Logical repaging must dequantize identically: every logical page
+    carved from a physical page inherits its scale."""
+    from repro.kernels.decode_attention.quant import repage_scales
+    q, _, (kq, vq, ks, vs), bt, lengths = _quant_fixture(jnp.int8, seed=5)
+    a = quant_paged_decode_attention(q, kq, vq, ks, vs, bt, lengths,
+                                     page_size=32, block_kv=32)
+    b = quant_paged_decode_attention(q, kq, vq, ks, vs, bt, lengths,
+                                     page_size=8, block_kv=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-5, rtol=2e-5)
+    ks8 = repage_scales(ks, 8, 32)
+    assert ks8.shape == (ks.shape[0], ks.shape[1] * 4)
+    np.testing.assert_array_equal(np.asarray(ks8[:, ::4]), np.asarray(ks))
+
+
+def test_quant_op_registered_and_autotunes():
+    """The op rides the standard registry machinery: parity example,
+    search space with the page/block constraint, tuner write-back."""
+    from repro.core import autotune as at
+    from repro.core import tuning
+    cfgs = quant_paged_decode_attention_op.candidate_configs(
+        base={"page_size": 64, "block_kv": 64})
+    assert all(c["page_size"] % c["block_kv"] == 0 for c in cfgs)
+    d = quant_paged_decode_attention_op.parity_diff(jax.random.PRNGKey(0))
+    assert d["within_tol"], d
+
+    calls = []
+
+    def fake_measure(run, cfg):
+        calls.append(dict(cfg))
+        return 1.0 + len(calls) * 0.1
+
+    snap = tuning.table.snapshot()
+    try:
+        res = at.autotune_op(quant_paged_decode_attention_op,
+                             arch="interpret", budget=3,
+                             measurer=fake_measure)
+        assert res.tuned_ms <= res.baseline_ms
+        assert res.written
+    finally:
+        tuning.table.restore(snap)
+
+
+# ------------------------------------------------- re-quantizing write ----
+
+@pytest.mark.parametrize("dtype", QUANT_DTYPES)
+def test_quant_write_then_attend_matches_bf16_path(dtype):
+    """The fused re-quantizing page write + attend must track the bf16
+    paged write + attend within the documented tolerance, and must
+    actually refresh the tail page's scale."""
+    b, hq, hkv, d, ps, t = 2, 4, 2, 32, 16, 3
+    q, (kpg, vpg), (kq, vq, ks, vs), bt, _ = _quant_fixture(
+        dtype, b, hq, hkv, d, t, ps, seed=7)
+    lengths = jnp.array([ps + 3, 2 * ps - 1], jnp.int32)
+    # an outlier row: the write must raise the page scale, not clip
+    k_new = _rand((b, hkv, d), 11) * 3.0
+    v_new = _rand((b, hkv, d), 12) * 3.0
+    page_idx = lengths // ps
+    write_page = jnp.take_along_axis(bt, page_idx[:, None], axis=1)[:, 0]
+
+    out, kq2, vq2, ks2, vs2 = sharded_quant_paged_decode_update_attend(
+        q, k_new, v_new, kq, vq, ks, vs, bt, write_page, lengths % ps,
+        lengths + 1, page_size=ps)
+    want, _, _ = sharded_paged_decode_update_attend(
+        q, k_new, v_new, kpg, vpg, bt, write_page, lengths % ps,
+        lengths + 1, page_size=ps)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    tol = DECODE_TOL[spec_for_storage(dtype).dtype]
+    assert err <= tol, (err, tol)
+    # the written row round-trips through the refreshed page scale
+    back = np.asarray(kq2[:, write_page[0], int(lengths[0]) % ps],
+                      np.float32) * np.asarray(ks2)[:, write_page[0]][:, None]
+    want_row = np.asarray(k_new[0], np.float32)
+    # row-level round-trip bound: half a step (int8) / relative (fp8) —
+    # the outlier row is 3x unit variance, so scale the documented tol
+    row_bound = np.abs(want_row) * 2 ** -3 + tol
+    assert (np.abs(back - want_row) <= row_bound).all()
+    # scale grew to cover the outlier row on slot 0's write page
+    assert (np.asarray(ks2)[:, write_page[0]]
+            >= np.asarray(ks)[:, write_page[0]] - 1e-7).all()
+
+
+def test_quant_write_zeroes_stale_tail_rows():
+    """Rows past the write offset are stale garbage from a recycled
+    page; the re-quantizing write must flush them to zero so they can
+    never inflate the page scale."""
+    hkv, ps, d = 2, 8, 16
+    pool = jnp.ones((hkv, 3, ps, d), jnp.float32) * 50.0   # stale garbage
+    spec = spec_for_storage(jnp.int8)
+    kq, ks = spec.quantize_pages(pool)
+    vq, vs = spec.quantize_pages(pool)
+    bt = jnp.asarray([[1, 2]], jnp.int32)
+    q = _rand((1, 4, d))
+    k_new = _rand((1, hkv, d), 1)
+    v_new = _rand((1, hkv, d), 2)
+    lengths = jnp.asarray([0], jnp.int32)       # first token of page 1
+    out, kq2, _, ks2, _ = sharded_quant_paged_decode_update_attend(
+        q, k_new, v_new, kq, vq, ks, vs, bt, jnp.asarray([1]),
+        lengths % ps, lengths + 1, page_size=ps)
+    pg = np.asarray(kq2)[:, 1]
+    assert (pg[:, 1:] == 0).all()               # stale rows flushed
+    # scale now reflects the new row alone, not the 50.0 garbage
+    assert np.asarray(ks2)[:, 1].max() <= float(jnp.abs(k_new).max()) / 127 \
+        + 1e-6
+
+
+# ---------------------------------------------------- paging integration ----
+
+def test_init_paged_caches_quantized_pools_and_scales():
+    from repro.configs.smoke import smoke_config
+    from repro.models.registry import build_model
+    cfg = smoke_config("gemma2-2b", num_layers=2)
+    model = build_model(cfg)
+    slots, cache_len, ps = 2, 32, 16
+    total = 1 + slots * paging.pages_per_slot(cache_len, ps)
+    spec = resolve_kv_spec("int8")
+    caches = paging.init_paged_caches(model, slots, cache_len, ps, total,
+                                      kv_spec=spec)
+    names = set()
+    for seg in caches:
+        for c in seg:
+            names.update(c.keys())
+            for nm, leaf in c.items():
+                if nm in ("kp", "vp"):
+                    assert leaf.dtype == jnp.int8
+                    assert leaf.shape[2:4] == (total, ps)
+                elif nm in ("ks", "vs"):
+                    assert leaf.dtype == jnp.float32
+                    assert leaf.shape[2] == total       # per page per head
+    assert {"kp", "vp", "ks", "vs"} <= names
+    # ring layers stay dense and unquantized
+    assert "k" in names and "v" in names
+
+
+def test_scatter_prefill_quantizes_pages():
+    """The quantizing admission scatter round-trips the prompt KV into
+    the pool within half a quantization step."""
+    from repro.quant import dequantize_absmax
+    reps, k, h, s, d, ps, t = 1, 2, 2, 24, 8, 16, 2
+    total = 1 + k * t
+    pool = jnp.zeros((reps, h, total, ps, d), jnp.int8)
+    sc = jnp.ones((reps, h, total), jnp.float32)
+    one = _rand((reps, k, h, s, d), 9)
+    page_rows = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    caches = [({"kp": pool, "ks": sc, "vp": pool, "vs": sc},)]
+    cache1 = [({"k": one, "v": one},)]
+    out = paging.scatter_prefill(caches, cache1, jnp.asarray([0, 1]),
+                                 page_rows)
+    (c,) = out[0]
+    deq = dequantize_absmax(c["kp"], c["ks"], axis=(-2, -1))
+    got = gather_pages(deq[0], page_rows)               # (k, h, t*ps, d)
+    want = np.asarray(one[0]).transpose(0, 1, 2, 3)     # (k, h, s, d)
+    step = np.asarray(c["ks"]).max() / 2 + 1e-6
+    assert np.abs(np.asarray(got)[:, :, :s] - want).max() <= step
+    # rows past the prompt are zero padding
+    assert np.abs(np.asarray(got)[:, :, s:]).max() <= step
+
+
+# ----------------------------------------------------------- engine ----
+
+def _engine(kv_dtype, slots=2, cache_len=32, max_new=4):
+    from repro.configs.smoke import smoke_config
+    from repro.models.registry import build_model
+    from repro.serve import Engine, ServeConfig
+    if "model" not in _ENG_STATE:
+        cfg = smoke_config("granite-8b", num_layers=2)
+        model = build_model(cfg)
+        _ENG_STATE["model"] = (model, model.init(jax.random.PRNGKey(0)), cfg)
+    model, params, cfg = _ENG_STATE["model"]
+    sc = ServeConfig(slots=slots, cache_len=cache_len,
+                     max_new_tokens=max_new, paged=True, kv_dtype=kv_dtype)
+    return Engine(model, params, sc), cfg
+
+
+_ENG_STATE = {}
+
+
+def test_engine_kv_dtype_requires_paged():
+    from repro.serve import Engine, ServeConfig
+    model, params, _ = _ENG_STATE.get("model") or (None, None, None)
+    if model is None:
+        _engine("bf16")                      # populate the cache
+        model, params, _ = _ENG_STATE["model"]
+    with pytest.raises(ValueError, match="requires paged"):
+        Engine(model, params, ServeConfig(paged=False, kv_dtype="int8"))
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+def test_engine_quantized_serves_stream(kv_dtype):
+    from repro.serve import Request
+    eng, cfg = _engine(kv_dtype)
+    assert eng.kv_spec.quantized
+    reqs = [Request(rid=i, tokens=[1 + i, 2, 3, 4, 5]) for i in range(4)]
+    eng.run_to_completion(reqs)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 4 for r in reqs)
+    assert eng.allocator.available == eng.allocator.total_pages - 1
+
+
+def test_engine_int8_pool_bytes_halve():
+    a, _ = _engine("bf16")
+    b, _ = _engine("int8")
+    ba = paging.paged_bytes_per_slot(a.caches, a.allocator.total_pages,
+                                     a.pages_per_slot)
+    bb = paging.paged_bytes_per_slot(b.caches, b.allocator.total_pages,
+                                     b.pages_per_slot)
+    assert ba / bb >= 1.9
