@@ -36,6 +36,7 @@ def main() -> None:
 
     from benchmarks.autotune import bench_json_path, format_rows
     from benchmarks.serve_bench import (format_kv_quant_rows,
+                                        format_oversub_rows,
                                         format_serving_rows)
     path = bench_json_path()
     doc = None
@@ -48,6 +49,8 @@ def main() -> None:
             ("Serving", format_serving_rows,
              "python -m benchmarks.serve_bench --update-bench"),
             ("KV quant", format_kv_quant_rows,
+             "python -m benchmarks.serve_bench --update-bench"),
+            ("Oversubscription", format_oversub_rows,
              "python -m benchmarks.serve_bench --update-bench")):
         print()
         print("=" * 72)

@@ -16,12 +16,15 @@ regime CI can check):
 
   python -m benchmarks.serve_bench                 # print table
   python -m benchmarks.serve_bench --update-bench  # + merge the rows
-      into BENCH_autotune.json under "serving" and "kv_quant" (the
-      ROADMAP perf trajectory; benchmarks/autotune.py preserves both)
+      into BENCH_autotune.json under "serving", "kv_quant" and
+      "oversub" (the ROADMAP perf trajectory; benchmarks/autotune.py
+      preserves every foreign section)
   python -m benchmarks.serve_bench --smoke         # tiny paged-vs-slot
       parity gate for scripts/check.sh
   python -m benchmarks.serve_bench --quant-smoke   # quantized-vs-bf16
       parity-at-tolerance + capacity gate for scripts/check.sh
+  python -m benchmarks.serve_bench --oversub-smoke # preempted-vs-
+      unpreempted greedy output parity gate for scripts/check.sh
 
 The ``kv_quant`` section measures the dtype axis of the paged pool
 (repro.quant): per KV dtype, end-to-end decode tokens/sec and the max
@@ -30,10 +33,24 @@ pool's footprint at the benchmark slot count), plus the measured
 decode error of the fused-dequant kernel against the bf16 paged
 kernel on identical underlying K/V — which must stay inside the
 subsystem's documented tolerance (``quant.DECODE_TOL``).
+
+The ``oversub`` section measures the preempt/requeue scheduler: at
+0.5x / 0.75x / 1.0x of the working-set page budget (quoted in BYTES,
+so an int8 pool converts the same budget into ~2x the pages — the
+quantization/capacity interaction), per preempt policy and KV dtype:
+completion rate, preemption count, and decode tokens/sec.  The
+``fail`` rows document the pre-PR-5 behavior (mid-decode allocator
+error under oversubscription).
+
+Smoke modes are CI gates and must never write outside a temp dir —
+only ``--update-bench`` writes at all, and every ``--*-smoke`` run is
+wrapped in ``_guard_no_repo_root_writes`` so a stray artifact fails
+the gate instead of silently dirtying the checkout.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import time
@@ -42,6 +59,43 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@contextlib.contextmanager
+def _guard_no_repo_root_writes():
+    """Fail if the wrapped block creates/modifies files at the repo
+    root or in the committed tuning-cache dir (the two places earlier
+    PRs' tooling writes by design: BENCH_autotune.json and
+    tuning_cache/*.json).  Smoke modes run under this guard."""
+    watch = [_REPO_ROOT,
+             os.path.join(_REPO_ROOT, "src", "repro", "core",
+                          "tuning_cache")]
+
+    def snap():
+        state = {}
+        for d in watch:
+            if not os.path.isdir(d):
+                continue
+            for name in sorted(os.listdir(d)):
+                p = os.path.join(d, name)
+                if os.path.isfile(p):
+                    st = os.stat(p)
+                    state[p] = (st.st_size, st.st_mtime_ns)
+        return state
+
+    before = snap()
+    yield
+    after = snap()
+    if after != before:
+        changed = sorted(set(before) ^ set(after)
+                         | {p for p in set(before) & set(after)
+                            if before[p] != after[p]})
+        raise AssertionError(
+            f"smoke mode wrote to the repo root: {changed} — route "
+            f"benchmark output through a temp dir (see check.sh "
+            f"tune-smoke) or behind --update-bench")
 
 
 # ---------------------------------------------------------------------------
@@ -153,7 +207,8 @@ def _throughput(engine, cfg, n, plen) -> Dict[str, Any]:
 
 
 def build(paged: bool, *, arch="granite-8b", layers=2, slots=4,
-          cache_len=64, max_new=8, legacy=False, kv_dtype=None):
+          cache_len=64, max_new=8, legacy=False, kv_dtype=None,
+          page_size=None, total_pages=None, preempt_policy="lru"):
     from repro.configs.smoke import smoke_config
     from repro.models.registry import build_model
     from repro.serve import Engine, ServeConfig
@@ -162,7 +217,9 @@ def build(paged: bool, *, arch="granite-8b", layers=2, slots=4,
     params = model.init(jax.random.PRNGKey(0))
     sc = ServeConfig(slots=slots, cache_len=cache_len,
                      max_new_tokens=max_new, paged=paged,
-                     kv_dtype=kv_dtype)
+                     kv_dtype=kv_dtype, page_size=page_size,
+                     total_pages=total_pages,
+                     preempt_policy=preempt_policy)
     eng = (LegacySlotEngine(model, params, sc) if legacy
            else Engine(model, params, sc))
     return eng, cfg
@@ -250,6 +307,160 @@ def kv_quant_payload(*, layers=2, slots=4, cache_len=64, max_new=8,
     }
 
 
+# ---------------------------------------------------------------------------
+# oversub: the preempt/requeue axis of the paged pool
+# ---------------------------------------------------------------------------
+
+#: Page-budget fractions the oversub bench sweeps (of the bf16
+#: working-set byte need).  1.0x is the engine's default never-
+#: oversubscribed sizing; 0.5x forces heavy preempt/requeue churn.
+OVERSUB_BUDGET_FRACS = (0.5, 0.75, 1.0)
+OVERSUB_POLICIES = ("fail", "lru", "shortest")
+
+
+def _oversub_harness(*, layers=1, slots=2, cache_len=32, max_new=24,
+                     page_size=8):
+    """One model shared by every oversub engine (builds dominate the
+    sweep otherwise); returns (cfg, make_engine, page_bytes, need)."""
+    from repro.configs.smoke import smoke_config
+    from repro.models.registry import build_model
+    from repro.serve import Engine, ServeConfig, paging
+    cfg = smoke_config("granite-8b", num_layers=layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    need_pages = slots * paging.pages_per_slot(cache_len, page_size)
+
+    def mk(kv_dtype=None, total_pages=None, policy="lru"):
+        sc = ServeConfig(slots=slots, cache_len=cache_len,
+                         max_new_tokens=max_new, paged=True,
+                         page_size=page_size, total_pages=total_pages,
+                         kv_dtype=kv_dtype, preempt_policy=policy)
+        return Engine(model, params, sc)
+
+    # bytes per pool page, per dtype, from probe engines at the default
+    # (never-oversubscribed) sizing.  The oversub budget is quoted in
+    # BYTES so a quantized pool converts the same budget into ~2x the
+    # pages — the capacity interaction this bench exists to show.
+    page_bytes = {}
+    for dtype in ("bf16", "int8"):
+        probe = mk(kv_dtype=dtype)
+        page_bytes[dtype] = paging.paged_bytes_per_slot(
+            probe.caches, probe.allocator.total_pages, 1)
+    return cfg, mk, page_bytes, need_pages
+
+
+def oversub_payload(*, layers=1, slots=2, cache_len=32, max_new=24,
+                    prompts=4, prompt_len=6, page_size=8) -> Dict[str, Any]:
+    """Per (dtype, budget, policy) rows: completion rate, preemption
+    count and decode tok/s on an oversubscribed page pool."""
+    cfg, mk, page_bytes, need_pages = _oversub_harness(
+        layers=layers, slots=slots, cache_len=cache_len, max_new=max_new,
+        page_size=page_size)
+    full_budget = need_pages * page_bytes["bf16"]
+
+    def attempt(eng, reqs):
+        t0 = time.perf_counter()
+        try:
+            eng.run_to_completion(reqs)
+            err = None
+        except RuntimeError as e:
+            err = str(e).splitlines()[0]
+        return time.perf_counter() - t0, err
+
+    rows = []
+    for dtype in ("bf16", "int8"):
+        for frac in OVERSUB_BUDGET_FRACS:
+            budget = int(frac * full_budget)
+            total = 1 + max(1, budget // page_bytes[dtype])
+            for policy in OVERSUB_POLICIES:
+                eng = mk(kv_dtype=dtype, total_pages=total, policy=policy)
+                reqs = _requests(cfg, prompts, prompt_len, seed=99)
+                dt, err = attempt(eng, reqs)          # warm (compile)
+                preempts = eng.preemptions
+                if err is None:                       # steady-state rerun
+                    p0 = eng.preemptions
+                    reqs = _requests(cfg, prompts, prompt_len)
+                    dt, err = attempt(eng, reqs)
+                    preempts = eng.preemptions - p0
+                done = sum(r.done for r in reqs)
+                toks = sum(len(r.out) for r in reqs)
+                # errored runs never get the steady-state rerun, so
+                # their wall time is dominated by jit compile — null
+                # the throughput instead of tabulating a measurement
+                # artifact next to warmed rows
+                row = {"kv_dtype": dtype, "policy": policy,
+                       "budget_frac": frac, "total_pages": total,
+                       "completed": done, "submitted": len(reqs),
+                       "completion_rate": round(done / len(reqs), 3),
+                       "preemptions": preempts,
+                       "peak_pages_in_use":
+                           eng.allocator.pressure()["peak_in_use"],
+                       "new_tokens": toks,
+                       "wall_s": None if err else round(dt, 3),
+                       "tok_per_s": None if err else round(toks / dt, 2)}
+                if err is not None:
+                    row["error"] = err
+                rows.append(row)
+                tps = "-" if err else f"{row['tok_per_s']:.2f}"
+                print(f"{dtype:<6} {frac:>5.2f}x {policy:<9} "
+                      f"{row['completion_rate']:>5.0%} done  "
+                      f"{preempts:>3} preempts  {tps:>8} tok/s"
+                      + (f"  [{err}]" if err else ""))
+    return {
+        "bench": "oversub",
+        "generated_by": "python -m benchmarks.serve_bench --update-bench",
+        "arch": "interpret",
+        "config": {"slots": slots, "cache_len": cache_len,
+                   "page_size": page_size, "prompts": prompts,
+                   "prompt_len": prompt_len, "max_new": max_new,
+                   "layers": layers, "model": "granite-8b smoke"},
+        "page_bytes": page_bytes,
+        "working_set_pages_bf16": need_pages,
+        "results": rows,
+    }
+
+
+def oversub_smoke() -> None:
+    """check.sh gate: preempted-vs-unpreempted greedy output parity.
+
+    With ``total_pages`` forced to 0.5x the working-set need, every
+    submitted request must complete under the ``lru`` and ``shortest``
+    policies with greedy outputs token-identical to the unconstrained
+    run, at least one real preemption must have happened (else the
+    gate is vacuous), and the pool must drain clean.  ``fail`` on the
+    same pool must still raise the allocator's actionable error.
+    """
+    cfg, mk, _, need_pages = _oversub_harness()
+    half = 1 + need_pages // 2
+
+    def run(eng):
+        reqs = _requests(cfg, 4, 6)
+        eng.run_to_completion(reqs)
+        assert all(r.done for r in reqs), "requests lost under preemption"
+        return [r.out for r in reqs]
+
+    want = run(mk())                        # unconstrained reference
+    for policy in ("lru", "shortest"):
+        eng = mk(total_pages=half, policy=policy)
+        got = run(eng)
+        st = eng.stats()
+        assert got == want, \
+            f"oversub-smoke parity FAILED ({policy}): {got} != {want}"
+        assert st["preemptions"] > 0, \
+            f"oversub-smoke vacuous: {policy} at 0.5x never preempted"
+        assert st["available"] == st["total_pages"] - 1, \
+            f"leaked pages: {st}"
+    try:
+        run(mk(total_pages=half, policy="fail"))
+    except RuntimeError as e:
+        assert "exhausted" in str(e), e
+    else:
+        raise AssertionError("fail policy did not raise on a 0.5x pool")
+    print(f"oversub-smoke OK: lru/shortest token-identical to the "
+          f"unconstrained run at 0.5x pages ({half - 1}/{need_pages}); "
+          f"fail still raises")
+
+
 def quant_smoke() -> None:
     """check.sh gate: quantized paged serving vs the bf16 paged run.
 
@@ -312,6 +523,9 @@ def main(argv=None) -> Dict[str, Any]:
     ap.add_argument("--quant-smoke", action="store_true",
                     help="quantized-vs-bf16 paged parity-at-tolerance "
                          "+ capacity gate (no timing)")
+    ap.add_argument("--oversub-smoke", action="store_true",
+                    help="preempted-vs-unpreempted greedy output parity "
+                         "gate on a 0.5x page pool (no timing)")
     ap.add_argument("--prompts", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
@@ -323,11 +537,16 @@ def main(argv=None) -> Dict[str, Any]:
                          "'serving' and 'kv_quant'")
     args = ap.parse_args(argv)
 
-    if args.smoke:
-        smoke()
-        return {}
-    if args.quant_smoke:
-        quant_smoke()
+    if args.smoke or args.quant_smoke or args.oversub_smoke:
+        # CI gates: never write anything (the guard raises on a stray
+        # repo-root/tuning-cache artifact instead of letting it land)
+        with _guard_no_repo_root_writes():
+            if args.smoke:
+                smoke()
+            if args.quant_smoke:
+                quant_smoke()
+            if args.oversub_smoke:
+                oversub_smoke()
         return {}
 
     rows = []
@@ -370,6 +589,9 @@ def main(argv=None) -> Dict[str, Any]:
         max_new=args.max_new, prompts=args.prompts,
         prompt_len=args.prompt_len)
 
+    print()
+    oversub = oversub_payload()
+
     if args.update_bench:
         from benchmarks.autotune import bench_json_path
         path = bench_json_path()
@@ -379,11 +601,12 @@ def main(argv=None) -> Dict[str, Any]:
                 doc = json.load(f)
         doc["serving"] = payload
         doc["kv_quant"] = kv_quant
+        doc["oversub"] = oversub
         with open(path, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
             f.write("\n")
-        print(f"merged serving + kv_quant rows into {path}")
-    return {"serving": payload, "kv_quant": kv_quant}
+        print(f"merged serving + kv_quant + oversub rows into {path}")
+    return {"serving": payload, "kv_quant": kv_quant, "oversub": oversub}
 
 
 def format_kv_quant_rows(doc: Dict[str, Any]) -> List[str]:
@@ -404,6 +627,28 @@ def format_kv_quant_rows(doc: Dict[str, Any]) -> List[str]:
             f"{r['pool_bytes_per_slot']:>8} {r['slots_at_budget']:>13} "
             f"{r['capacity_vs_bf16']:>8.2f}x {r['decode_max_abs_err']:>9.5f} "
             f"{tol if tol is not None else '-':>6}")
+    return lines
+
+
+def format_oversub_rows(doc: Dict[str, Any]) -> List[str]:
+    """Render BENCH_autotune.json['oversub'] (shared with run.py)."""
+    ov = doc.get("oversub")
+    if not ov:
+        return ["(no oversub rows; run "
+                "python -m benchmarks.serve_bench --update-bench)"]
+    header = (f"{'kv_dtype':<9} {'budget':>7} {'policy':<9} {'pages':>6} "
+              f"{'done':>6} {'preempts':>9} {'tok/s':>9}  note")
+    lines = [f"working set: {ov.get('working_set_pages_bf16')} bf16 pages "
+             f"(page bytes: {json.dumps(ov.get('page_bytes'))})",
+             header, "-" * len(header)]
+    for r in ov.get("results", ()):
+        tps = ("-" if r.get("tok_per_s") is None
+               else f"{r['tok_per_s']:.2f}")
+        lines.append(
+            f"{r['kv_dtype']:<9} {r['budget_frac']:>6.2f}x "
+            f"{r['policy']:<9} {r['total_pages']:>6} "
+            f"{r['completion_rate']:>5.0%} {r['preemptions']:>9} "
+            f"{tps:>9}  {r.get('error', '')}")
     return lines
 
 

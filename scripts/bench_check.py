@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Validate the committed BENCH_autotune.json perf trajectory.
+
+The trajectory is the standing machine-readable perf record ROADMAP
+asks every PR to move or preserve; each benchmark owns one top-level
+section and regenerates only its own.  This gate fails a PR that
+silently drops a section (e.g. a rewrite of one CLI that stops
+preserving the others) or strips the keys the renderers and trajectory
+diffs depend on.
+
+  python scripts/bench_check.py                 # check the repo's file
+  python scripts/bench_check.py path/to.json    # check another file
+
+Required sections and per-row keys:
+
+  ops       top-level "results" (benchmarks/autotune.py kernel rows)
+  serving   "serving".results   (benchmarks/serve_bench.py)
+  kv_quant  "kv_quant".results  (benchmarks/serve_bench.py)
+  oversub   "oversub".results   (benchmarks/serve_bench.py)
+
+Wired as the check.sh `bench-check` stage.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: section name -> (path to its row list in the doc, required row keys,
+#: the command that regenerates it).  "ops" is the autotune CLI's own
+#: payload, so its rows live at the document's top-level "results".
+SCHEMA: Dict[str, Any] = {
+    "ops": {
+        "rows": ("results",),
+        "row_keys": ("op", "arch", "baseline_ms", "tuned_ms", "speedup",
+                     "winning_config"),
+        "regen": "python -m benchmarks.autotune --write-cache",
+    },
+    "serving": {
+        "rows": ("serving", "results"),
+        "row_keys": ("engine", "new_tokens", "wall_s", "tok_per_s",
+                     "speedup_vs_legacy"),
+        "regen": "python -m benchmarks.serve_bench --update-bench",
+    },
+    "kv_quant": {
+        "rows": ("kv_quant", "results"),
+        "row_keys": ("kv_dtype", "tok_per_s", "pool_bytes_per_slot",
+                     "slots_at_budget", "decode_max_abs_err",
+                     "capacity_vs_bf16"),
+        "regen": "python -m benchmarks.serve_bench --update-bench",
+    },
+    "oversub": {
+        "rows": ("oversub", "results"),
+        "row_keys": ("kv_dtype", "policy", "budget_frac", "total_pages",
+                     "completion_rate", "preemptions", "tok_per_s"),
+        "regen": "python -m benchmarks.serve_bench --update-bench",
+    },
+}
+
+
+def _dig(doc: Dict[str, Any], path) -> Any:
+    cur: Any = doc
+    for key in path:
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return cur
+
+
+def check_doc(doc: Dict[str, Any]) -> List[str]:
+    """Return a list of problems (empty = valid)."""
+    problems: List[str] = []
+    for section, spec in SCHEMA.items():
+        rows = _dig(doc, spec["rows"])
+        where = ".".join(spec["rows"])
+        if rows is None:
+            problems.append(
+                f"missing section {section!r} (no {where!r}); "
+                f"regenerate with: {spec['regen']}")
+            continue
+        if not isinstance(rows, list) or not rows:
+            problems.append(
+                f"section {section!r}: {where!r} must be a non-empty "
+                f"list of rows; regenerate with: {spec['regen']}")
+            continue
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict):
+                problems.append(f"section {section!r} row {i}: not an "
+                                f"object")
+                continue
+            missing = [k for k in spec["row_keys"] if k not in row]
+            if missing:
+                problems.append(
+                    f"section {section!r} row {i} "
+                    f"({row.get('op') or row.get('engine') or row.get('kv_dtype')}): "
+                    f"missing keys {missing}")
+    return problems
+
+
+def main(argv: List[str]) -> int:
+    path = argv[1] if len(argv) > 1 else os.path.join(
+        REPO_ROOT, "BENCH_autotune.json")
+    if not os.path.exists(path):
+        print(f"bench-check FAILED: {path} does not exist "
+              f"(the committed perf trajectory is required)")
+        return 1
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except ValueError as e:
+        print(f"bench-check FAILED: {path} is not valid JSON: {e}")
+        return 1
+    problems = check_doc(doc)
+    if problems:
+        print(f"bench-check FAILED for {path}:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    counts = {s: len(_dig(doc, spec["rows"]))
+              for s, spec in SCHEMA.items()}
+    print(f"bench-check OK: {path} carries all required sections "
+          f"({', '.join(f'{s}: {n} rows' for s, n in counts.items())})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

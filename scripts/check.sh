@@ -1,52 +1,146 @@
 #!/usr/bin/env bash
-# Tier-1 entry point: collection-clean pytest + the registry parity smoke.
+# Tier-1 entry point, refactored into named stages so CI (and humans)
+# can rerun one gate without the full ~minutes pipeline.
 #
-#   ./scripts/check.sh          # full tier-1
-#   ./scripts/check.sh --fast   # skip the slow end-to-end suites
+#   ./scripts/check.sh                      # all stages
+#   ./scripts/check.sh --fast               # pytest skips the slow suites
+#   ./scripts/check.sh --stage pytest --stage oversub-smoke
+#   ./scripts/check.sh --list               # print stage names
+#
+# Every selected stage runs even if an earlier one fails; the summary
+# table at the end reports per-stage status + wall time and the script
+# exits non-zero if anything failed.  With CHECK_ARTIFACTS_DIR set,
+# the pytest stage writes junit XML there and tune-smoke copies its
+# throwaway BENCH_autotune.json there (CI uploads both).
 #
 # pyproject.toml sets pythonpath=["src", "."], so bare `python -m pytest`
-# works; PYTHONPATH is still exported for the benchmark module run and
+# works; PYTHONPATH is still exported for the benchmark module runs and
 # for older pytest versions.
-set -euo pipefail
+set -uo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+STAGES=(pytest parity tune-smoke serve-smoke quant-smoke oversub-smoke bench-check)
+
+# -- stage bodies (each runs in its own `set -e` subshell) -------------------
+
+stage_pytest() {
+    # --co surfaces collection errors (e.g. unguarded optional deps)
+    python -m pytest --co -q >/dev/null
+    local junit=()
+    if [[ -n "${CHECK_ARTIFACTS_DIR:-}" ]]; then
+        mkdir -p "$CHECK_ARTIFACTS_DIR"
+        junit=(--junitxml "$CHECK_ARTIFACTS_DIR/pytest-junit.xml")
+    fi
+    # ${junit[@]+...}: empty-array expansion trips set -u on bash < 4.4
+    # shellcheck disable=SC2086
+    python -m pytest -q ${FAST} ${junit[@]+"${junit[@]}"}
+}
+
+stage_parity() {
+    # device_op registry sweep
+    python -m benchmarks.parity --smoke
+}
+
+stage_tune_smoke() {
+    # Seconds, not minutes: one op, two candidates, interpret arch.
+    # Cache and trajectory land in a throwaway dir so CI never dirties
+    # the repo, but the full search->gate->measure->write-back path is
+    # exercised.
+    local tmp
+    tmp="$(mktemp -d)"
+    # expand now: the EXIT trap runs after the function's local scope
+    # is gone (this stage body runs in its own subshell)
+    # shellcheck disable=SC2064
+    trap "rm -rf '$tmp'" EXIT
+    python -m benchmarks.autotune --budget 2 --op rmsnorm --arch interpret \
+        --write-cache --cache-dir "$tmp/tuning_cache" \
+        --out "$tmp/BENCH_autotune.json"
+    test -s "$tmp/BENCH_autotune.json"
+    test -s "$tmp/tuning_cache/interpret.json"
+    if [[ -n "${CHECK_ARTIFACTS_DIR:-}" ]]; then
+        mkdir -p "$CHECK_ARTIFACTS_DIR"
+        cp "$tmp/BENCH_autotune.json" \
+           "$CHECK_ARTIFACTS_DIR/BENCH_autotune.tune-smoke.json"
+    fi
+}
+
+stage_serve_smoke() {
+    # paged vs slot engines must produce the same greedy outputs
+    python -m benchmarks.serve_bench --smoke
+}
+
+stage_quant_smoke() {
+    # fused-dequant decode within documented tolerance, int8 finish-order
+    # parity with bf16, and >= 1.9x concurrent slots at a byte budget
+    python -m benchmarks.serve_bench --quant-smoke
+}
+
+stage_oversub_smoke() {
+    # preempted-vs-unpreempted greedy output parity on a 0.5x page pool
+    python -m benchmarks.serve_bench --oversub-smoke
+}
+
+stage_bench_check() {
+    # the committed perf trajectory must carry every required section
+    python scripts/bench_check.py
+}
+
+# -- runner ------------------------------------------------------------------
+
 FAST=""
-if [[ "${1:-}" == "--fast" ]]; then
-    FAST="--ignore=tests/test_arch_smoke.py --ignore=tests/test_distributed.py --ignore=tests/test_trainer.py"
+SELECTED=()
+while [[ $# -gt 0 ]]; do
+    case "$1" in
+        --fast)
+            FAST="--ignore=tests/test_arch_smoke.py --ignore=tests/test_distributed.py --ignore=tests/test_trainer.py"
+            shift ;;
+        --stage)
+            [[ $# -ge 2 ]] || { echo "--stage needs a name" >&2; exit 2; }
+            SELECTED+=("$2"); shift 2 ;;
+        --list)
+            printf '%s\n' "${STAGES[@]}"; exit 0 ;;
+        *)
+            echo "unknown argument: $1 (try --list)" >&2; exit 2 ;;
+    esac
+done
+if [[ ${#SELECTED[@]} -eq 0 ]]; then
+    SELECTED=("${STAGES[@]}")
 fi
+for s in "${SELECTED[@]}"; do
+    case " ${STAGES[*]} " in
+        *" $s "*) ;;
+        *) echo "unknown stage: $s (known: ${STAGES[*]})" >&2; exit 2 ;;
+    esac
+done
 
-echo "== pytest (collection must be clean) =="
-# --co surfaces collection errors (e.g. unguarded optional deps) on their own
-python -m pytest --co -q >/dev/null
-python -m pytest -q ${FAST}
+RESULTS=()
+FAILED=0
+for s in "${SELECTED[@]}"; do
+    echo
+    echo "== stage: $s =="
+    t0=$SECONDS
+    ( set -e; "stage_${s//-/_}" )
+    rc=$?
+    dt=$((SECONDS - t0))
+    if [[ $rc -ne 0 ]]; then
+        FAILED=1
+        echo "== stage $s FAILED (rc=$rc) =="
+    fi
+    RESULTS+=("$s|$rc|$dt")
+done
 
-echo "== benchmarks/parity.py --smoke (device_op registry sweep) =="
-python -m benchmarks.parity --smoke
-
-echo "== benchmarks/autotune.py tune-smoke (search loop + cache write-back) =="
-# Seconds, not minutes: one op, two candidates, interpret arch.  Cache
-# and trajectory land in a throwaway dir so CI never dirties the repo,
-# but the full search->gate->measure->write-back path is exercised.
-TUNE_TMP="$(mktemp -d)"
-trap 'rm -rf "$TUNE_TMP"' EXIT
-python -m benchmarks.autotune --budget 2 --op rmsnorm --arch interpret \
-    --write-cache --cache-dir "$TUNE_TMP/tuning_cache" \
-    --out "$TUNE_TMP/BENCH_autotune.json"
-test -s "$TUNE_TMP/BENCH_autotune.json"
-test -s "$TUNE_TMP/tuning_cache/interpret.json"
-
-echo "== benchmarks/serve_bench.py --smoke (paged vs slot engine parity) =="
-# Tiny engine run on interpret: both cache layouts must produce the
-# same greedy outputs over a queued request stream.
-python -m benchmarks.serve_bench --smoke
-
-echo "== benchmarks/serve_bench.py --quant-smoke (quantized vs bf16 paged) =="
-# Quantized paged serving gate: fused-dequant decode within the
-# documented per-dtype tolerance of the bf16 paged kernel, int8 engine
-# finish-order parity with the bf16 run, and >= 1.9x concurrent slots
-# at a fixed pool-byte budget.
-python -m benchmarks.serve_bench --quant-smoke
-
+echo
+echo "== summary =="
+printf '%-15s %-6s %8s\n' stage status wall_s
+for r in "${RESULTS[@]}"; do
+    IFS='|' read -r name rc dt <<< "$r"
+    if [[ $rc -eq 0 ]]; then st=ok; else st="FAIL"; fi
+    printf '%-15s %-6s %8s\n' "$name" "$st" "$dt"
+done
+if [[ $FAILED -ne 0 ]]; then
+    echo "tier-1 FAILED"
+    exit 1
+fi
 echo "tier-1 OK"

@@ -15,6 +15,10 @@ import jax
 
 
 def main():
+    # the engine's tuple is the single source for policy choices (jax
+    # is already imported at module scope, so this costs nothing extra)
+    from repro.serve import PREEMPT_POLICIES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -34,9 +38,22 @@ def main():
                          "per-page-per-head scales and decode through "
                          "the fused-dequant kernel (requires --paged; "
                          "unsupported dtypes fall back per target)")
+    ap.add_argument("--total-pages", type=int, default=None,
+                    help="force the KV page pool size (default: "
+                         "1 + slots * pages_per_slot, which never "
+                         "oversubscribes); smaller values exercise the "
+                         "preempt/requeue scheduler")
+    ap.add_argument("--preempt-policy", default="lru",
+                    choices=list(PREEMPT_POLICIES),
+                    help="oversubscribed-pool policy: preempt the "
+                         "least-recently-admitted slot, the one with "
+                         "the fewest generated tokens, or fail fast "
+                         "with the allocator error")
     args = ap.parse_args()
     if args.kv_dtype and not args.paged:
         ap.error("--kv-dtype requires --paged")
+    if args.total_pages is not None and not args.paged:
+        ap.error("--total-pages requires --paged")
 
     from repro.configs import get_config
     from repro.configs.smoke import smoke_config
@@ -56,7 +73,9 @@ def main():
                      max_new_tokens=args.max_new,
                      temperature=args.temperature,
                      paged=args.paged, page_size=args.page_size,
-                     kv_dtype=args.kv_dtype)
+                     kv_dtype=args.kv_dtype,
+                     total_pages=args.total_pages,
+                     preempt_policy=args.preempt_policy)
     engine = Engine(model, params, sc)
 
     import numpy as np
@@ -76,6 +95,7 @@ def main():
         "all_done": all(r.done for r in reqs),
         "new_tokens": new_tokens, "wall_s": round(dt, 2),
         "tok_per_s": round(new_tokens / dt, 1),
+        "preemptions": engine.stats()["preemptions"],
         "sample_output": reqs[0].out,
     }, indent=1))
 

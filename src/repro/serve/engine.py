@@ -28,9 +28,29 @@ Termination: a slot finishes when it has emitted ``max_new_tokens``,
 sampled ``eos_id``, or its cache is truly full — ``lengths ==
 cache_len`` *after* the final row is written, so the last cache row is
 usable (the slot engine freed one token early).
+
+Oversubscription (paged mode): when an explicit ``total_pages`` makes
+the pool smaller than the working set, a slot crossing a page boundary
+mid-decode can find the pool dry.  ``ServeConfig.preempt_policy``
+decides what happens: ``"lru"`` (default) preempts the
+least-recently-admitted slot, ``"shortest"`` the one with the fewest
+generated tokens, and ``"fail"`` keeps the pre-preemption behavior of
+raising the allocator's actionable error.  A preempted slot is
+checkpointed as prompt + tokens generated so far onto a requeue deque,
+its pages are bulk-reclaimed through the strict allocator, and it is
+re-admitted later through the ordinary batched-prefill path with the
+generated tokens appended to the prompt — under greedy decoding the
+final outputs are token-identical to an un-preempted run (re-prefill
+recomputes exactly the KV the decode steps wrote, including the dense
+recurrent/ring leaves, which is why re-prefill was chosen over paging
+state out to host memory — DESIGN.md §12).  Requeued requests are
+re-admitted ahead of never-admitted ones (the starvation guard), and
+``lru`` never victimizes the slot it is allocating for, so the growing
+slot always makes progress.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import warnings
 from typing import Dict, List, Optional
@@ -62,6 +82,16 @@ class ServeConfig:
     # "bf16" | "int8" | "fp8_e4m3" resolve through the arch-aware
     # capability query (repro.quant) with clean per-target fallback.
     kv_dtype: Optional[str] = None
+    # Oversubscribed-pool policy (paged only): what to do when the page
+    # pool runs dry while a decoding slot needs its next page.
+    #   "lru"      preempt the least-recently-admitted slot (default)
+    #   "shortest" preempt the slot with the fewest generated tokens
+    #   "fail"     raise the allocator's actionable error (pre-PR-5)
+    preempt_policy: str = "lru"
+
+
+#: Valid ServeConfig.preempt_policy values (launch/serve.py choices).
+PREEMPT_POLICIES = ("lru", "shortest", "fail")
 
 
 @dataclasses.dataclass
@@ -71,6 +101,7 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     truncated: bool = False
+    preempts: int = 0       # times this request was preempted/requeued
 
 
 class Engine:
@@ -83,6 +114,9 @@ class Engine:
         if sc.on_overflow not in ("reject", "truncate"):
             raise ValueError(f"on_overflow must be 'reject' or 'truncate', "
                              f"got {sc.on_overflow!r}")
+        if sc.preempt_policy not in PREEMPT_POLICIES:
+            raise ValueError(f"preempt_policy must be one of "
+                             f"{PREEMPT_POLICIES}, got {sc.preempt_policy!r}")
 
         self.paged = sc.paged
         if sc.kv_dtype is not None and not sc.paged:
@@ -118,6 +152,14 @@ class Engine:
 
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
+        # preempt/requeue scheduler state: checkpointed (preempted)
+        # requests wait here and are re-admitted ahead of fresh queue
+        # entries (the starvation guard); _admit_seq[slot] is a
+        # monotonic admission stamp the "lru" victim policy reads.
+        self.requeue: collections.deque[Request] = collections.deque()
+        self.preemptions = 0
+        self._admit_seq = np.zeros((slots,), np.int64)
+        self._seq = 0
         self._key = jax.random.PRNGKey(sc.seed)
 
         self._prefill = jax.jit(
@@ -167,13 +209,17 @@ class Engine:
 
     def _build_admit(self):
         def admit_fn(caches, lengths, cur_tok, active, n_out, cache1,
-                     first_tok, slot_idx, plens, admit_active, page_rows):
+                     first_tok, slot_idx, plens, admit_active, n_out_vals,
+                     page_rows):
             caches = paging.scatter_prefill(caches, cache1, slot_idx,
                                             page_rows)
             lengths = lengths.at[slot_idx].set(plens)
             cur_tok = cur_tok.at[slot_idx].set(first_tok)
             active = active.at[slot_idx].set(admit_active)
-            n_out = n_out.at[slot_idx].set(1)
+            # fresh admissions enter with n_out=1 (the prefill sample);
+            # re-admitted preempted requests resume their real count so
+            # the jitted max_new check stays in lockstep with req.out
+            n_out = n_out.at[slot_idx].set(n_out_vals)
             return caches, lengths, cur_tok, active, n_out
 
         return admit_fn
@@ -224,14 +270,24 @@ class Engine:
         return [s for s in range(self.sc.slots) if self.active[s] is None]
 
     def _admit(self):
-        """Admit queued requests into free slots, one batched prefill +
-        one batched cache scatter per prompt-length group."""
-        while self._free_slots() and self.queue:
-            take = min(len(self._free_slots()), len(self.queue))
-            batch = [self.queue.pop(0) for _ in range(take)]
+        """Admit waiting requests into free slots, one batched prefill +
+        one batched cache scatter per prompt-length group.  Preempted
+        requests on the requeue deque are taken ahead of never-admitted
+        queue entries (the starvation guard: a checkpoint is never stuck
+        behind fresh traffic)."""
+        while self._free_slots() and (self.requeue or self.queue):
+            free = len(self._free_slots())
+            batch: List[Request] = []
+            while self.requeue and len(batch) < free:
+                batch.append(self.requeue.popleft())
+            while self.queue and len(batch) < free:
+                batch.append(self.queue.pop(0))
             groups: Dict[int, List[Request]] = {}
             for r in batch:
-                groups.setdefault(len(r.tokens), []).append(r)
+                # effective prompt: original tokens plus everything
+                # already generated (empty for fresh requests, the
+                # checkpoint for requeued ones)
+                groups.setdefault(len(r.tokens) + len(r.out), []).append(r)
             admitted = 0
             for plen, reqs in groups.items():
                 admitted += self._admit_group(reqs, plen)
@@ -243,26 +299,39 @@ class Engine:
             if admitted == 0:
                 return
 
+    def _requeue_front(self, reqs: List[Request]) -> None:
+        """Push un-admittable requests back where they came from,
+        preserving order: preempted checkpoints to the requeue deque,
+        fresh requests to the queue head."""
+        for r in reversed(reqs):
+            if r.preempts:
+                self.requeue.appendleft(r)
+            else:
+                self.queue.insert(0, r)
+
     def _admit_group(self, reqs: List[Request], plen: int) -> int:
-        """Admit one same-prompt-length group; returns #admitted.
-        Requests the page pool cannot hold right now go back to the
-        queue head (admission is the capacity check — allocation below
-        can then never fail, so failure can't leak half a group)."""
+        """Admit one same-effective-prompt-length group; returns
+        #admitted.  Requests the page pool cannot hold right now go
+        back to their deque head (admission is the capacity check —
+        allocation below can then never fail, so failure can't leak
+        half a group)."""
         if self.paged:
             # +1: the first decode step writes at position plen, which
-            # may sit on the page after the prompt's last
-            need = paging.pages_per_slot(plen + 1, self.page_size)
+            # may sit on the page after the prompt's last.  A requeued
+            # checkpoint at plen == cache_len finishes at admission and
+            # never decodes, so its need is capped at the cache.
+            need = paging.pages_per_slot(min(plen + 1, self.sc.cache_len),
+                                         self.page_size)
             fit = self.allocator.available // max(need, 1)
             if fit < len(reqs):
-                for r in reversed(reqs[fit:]):
-                    self.queue.insert(0, r)
+                self._requeue_front(reqs[fit:])
                 reqs = reqs[:fit]
             if not reqs:
                 return 0
         slots = self._free_slots()[:len(reqs)]
 
         k = len(reqs)
-        toks = jnp.asarray([r.tokens for r in reqs], jnp.int32)
+        toks = jnp.asarray([r.tokens + r.out for r in reqs], jnp.int32)
         logits, cache1 = self._prefill(self.params, toks)
         self._key, sub = jax.random.split(self._key)
         first = self._sample(logits, sub)
@@ -284,8 +353,13 @@ class Engine:
             req.out.append(int(first_h[i]))
             hit_eos = (self.sc.eos_id is not None
                        and first_h[i] == self.sc.eos_id)
-            if hit_eos or len(req.out) >= self.sc.max_new_tokens:
+            # plen + 1 > cache_len: a requeued checkpoint whose cache is
+            # full after re-prefill — its re-prefill sample IS the final
+            # token the un-preempted run would have emitted
+            if (hit_eos or len(req.out) >= self.sc.max_new_tokens
+                    or plen + 1 > self.sc.cache_len):
                 admit_active[i] = False
+        n_out_vals = np.asarray([len(r.out) for r in reqs], np.int32)
 
         (self.caches, self.lengths, self.cur_tok, self.active_mask,
          self.n_out) = self._admit_fn(
@@ -293,9 +367,11 @@ class Engine:
             self.n_out, cache1, jnp.asarray(first_h),
             jnp.asarray(slots, jnp.int32),
             jnp.full((k,), plen, jnp.int32), jnp.asarray(admit_active),
-            page_rows)
+            jnp.asarray(n_out_vals), page_rows)
 
         for i, (req, slot) in enumerate(zip(reqs, slots)):
+            self._seq += 1
+            self._admit_seq[slot] = self._seq
             if admit_active[i]:
                 self.active[slot] = req
                 self._active_h[slot] = True
@@ -311,24 +387,91 @@ class Engine:
         self._active_h[slot] = False
         self._len_h[slot] = 0
         if self.paged:
-            # the allocator is strict (double-free / null-page freeing
-            # raise), so filter the table row's unallocated entries here
-            self.allocator.free([int(p) for p in self.block_tables[slot]
-                                 if p != paging.NULL_PAGE])
+            # reclaim filters the row's NULL_PAGE entries; the allocator
+            # itself stays strict (double-free / null-page freeing raise)
+            self.allocator.reclaim(self.block_tables[slot])
             self.block_tables[slot] = paging.NULL_PAGE
             self._bt_dirty = True
+
+    # -- preempt/requeue scheduler ----------------------------------------
+    def _select_victim(self, needy: int) -> Optional[int]:
+        """Pick the slot to preempt so ``needy`` can take a page.
+
+        Never the needy slot itself: preempting the slot that is asking
+        for a page cannot help it (its checkpoint needs at least the
+        pages it already holds), and excluding it guarantees the grower
+        makes progress, which bounds the preempt/re-admit churn.
+        Returns None when no other slot is active.
+        """
+        cands = [int(s) for s in np.nonzero(self._active_h)[0]
+                 if int(s) != needy]
+        if not cands:
+            return None
+        if self.sc.preempt_policy == "lru":
+            # least-recent admit; a just-re-admitted checkpoint carries
+            # the newest stamp, so lru never thrashes it
+            return min(cands, key=lambda s: self._admit_seq[s])
+        # "shortest": fewest generated tokens = least work thrown away;
+        # admission stamp breaks ties deterministically (oldest first)
+        return min(cands, key=lambda s: (len(self.active[s].out),
+                                         self._admit_seq[s]))
+
+    def _preempt(self, slot: int) -> None:
+        """Checkpoint ``slot`` onto the requeue deque and reclaim its
+        pages.  The checkpoint is pure host state (prompt + tokens
+        generated so far, already in ``req.out``); the device rows are
+        parked exactly like a released slot's — active mask off, block
+        table reset to the null page so the stale ``cur_tok`` keeps
+        scattering its KV into trash until the slot is reused."""
+        req = self.active[slot]
+        eff = len(req.tokens) + len(req.out)
+        usable = self.allocator.total_pages - 1
+        if paging.pages_per_slot(min(eff + 1, self.sc.cache_len),
+                                 self.page_size) > usable:
+            # the checkpoint could never be re-admitted: requeueing it
+            # would spin forever, so surface the sizing problem now
+            raise RuntimeError(
+                f"request {req.rid}: checkpoint of {eff} tokens needs "
+                f"more KV pages than the whole pool holds ({usable} x "
+                f"{self.page_size}); raise ServeConfig.total_pages")
+        req.preempts += 1
+        self.preemptions += 1
+        self.requeue.append(req)
+        # park the device rows: the jitted step must stop advancing this
+        # slot *before* the next decode, not at its end like finish does
+        self.active_mask = self.active_mask.at[slot].set(False)
+        self._release(slot)
 
     def _ensure_pages(self):
         """Allocate the page the next token of each active slot writes
         into, when the slot is about to cross a page boundary.  An
         oversubscribed pool (explicit total_pages) can run dry here
-        mid-decode; that fails fast with the allocator's actionable
-        error — preemption policy is an open item (ROADMAP)."""
+        mid-decode: with ``preempt_policy="fail"`` that raises the
+        allocator's actionable error; under ``"lru"``/``"shortest"`` a
+        victim slot is checkpointed onto the requeue deque (freeing its
+        pages) until the needy slot can allocate."""
         for slot in np.nonzero(self._active_h)[0]:
+            slot = int(slot)
+            if not self._active_h[slot]:       # preempted earlier in loop
+                continue
             j = int(self._len_h[slot]) // self.page_size
-            if self.block_tables[slot, j] == paging.NULL_PAGE:
-                self.block_tables[slot, j] = self.allocator.alloc()
-                self._bt_dirty = True
+            if self.block_tables[slot, j] != paging.NULL_PAGE:
+                continue
+            if self.sc.preempt_policy != "fail":
+                while self.allocator.available == 0:
+                    victim = self._select_victim(slot)
+                    if victim is None:
+                        # sole active sequence holding every usable page:
+                        # nothing to preempt, and it cannot continue
+                        raise RuntimeError(
+                            f"KV page pool exhausted: slot {slot} is the "
+                            f"only active sequence and already holds all "
+                            f"{self.allocator.total_pages - 1} usable "
+                            f"pages; raise ServeConfig.total_pages (or "
+                            f"lower cache_len)")
+                    self._preempt(victim)
+            self.block_tables[slot, j] = self.allocator.alloc()
+            self._bt_dirty = True
 
     # -- main loop ---------------------------------------------------------
     def step(self) -> bool:
@@ -368,9 +511,18 @@ class Engine:
         for r in requests:
             self.submit(r)
         for _ in range(max_steps):
-            if not self.step() and not self.queue:
+            if not self.step() and not self.queue and not self.requeue:
                 break
         return requests
+
+    def stats(self) -> Dict[str, int]:
+        """Scheduler + allocator pressure counters (host-side only)."""
+        d = {"preemptions": self.preemptions,
+             "requeued_waiting": len(self.requeue),
+             "queued_waiting": len(self.queue)}
+        if self.paged:
+            d.update(self.allocator.pressure())
+        return d
 
 
 def run_recording_finish_order(engine, requests: List[Request],
@@ -393,6 +545,7 @@ def run_recording_finish_order(engine, requests: List[Request],
             if r.done and r.rid not in seen:
                 seen.add(r.rid)
                 order.append(r.rid)
-        if not busy and not engine.queue:
+        if not busy and not engine.queue and not getattr(engine, "requeue",
+                                                         ()):
             break
     return order

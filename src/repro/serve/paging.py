@@ -60,10 +60,28 @@ class PageAllocator:
         self.total_pages = int(total_pages)
         self._free: List[int] = list(range(total_pages - 1, 0, -1))
         self._allocated: Set[int] = set()
+        # pressure stats: the scheduler's preempt/requeue decisions and
+        # the oversub benchmark both read these (pure counters, no cost)
+        self.alloc_count = 0
+        self.free_count = 0
+        self.peak_in_use = 0
 
     @property
     def available(self) -> int:
         return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._allocated)
+
+    def pressure(self) -> dict:
+        """Allocator pressure snapshot (all host-side counters)."""
+        return {"total_pages": self.total_pages,
+                "available": self.available,
+                "in_use": self.in_use,
+                "peak_in_use": self.peak_in_use,
+                "allocs": self.alloc_count,
+                "frees": self.free_count}
 
     def alloc(self) -> int:
         if not self._free:
@@ -73,6 +91,8 @@ class PageAllocator:
                 "(1 + slots * pages_per_slot) never exhausts")
         p = self._free.pop()
         self._allocated.add(p)
+        self.alloc_count += 1
+        self.peak_in_use = max(self.peak_in_use, len(self._allocated))
         return p
 
     def alloc_many(self, n: int) -> List[int]:
@@ -106,6 +126,22 @@ class PageAllocator:
         for p in pages:
             self._allocated.discard(p)
             self._free.append(p)
+        self.free_count += len(pages)
+
+    def reclaim(self, table_row: Sequence[int]) -> int:
+        """Bulk-free every real page named by a block-table row.
+
+        NULL_PAGE entries (unallocated tail, freshly reset rows) are
+        filtered here — that is the *only* leniency; the underlying
+        ``free`` stays strict, so a double-reclaim of the same row
+        still raises instead of double-leasing pages.  Returns the
+        number of pages returned to the pool (the engine's preempt
+        accounting wants it).
+        """
+        real = [int(p) for p in table_row if int(p) != NULL_PAGE]
+        if real:
+            self.free(real)
+        return len(real)
 
 
 def pages_per_slot(cache_len: int, page_size: int) -> int:

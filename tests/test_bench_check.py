@@ -1,0 +1,118 @@
+"""CI hygiene gates: the BENCH_autotune.json schema validator
+(scripts/bench_check.py) and the no-repo-root-writes guard the
+serve_bench smoke modes run under."""
+import copy
+import json
+import os
+
+import pytest
+
+from scripts.bench_check import SCHEMA, check_doc, main as bench_check_main
+
+
+def _valid_doc():
+    return {
+        "bench": "autotune",
+        "results": [{"op": "rmsnorm", "arch": "interpret",
+                     "baseline_ms": 1.0, "tuned_ms": 0.8, "speedup": 1.25,
+                     "winning_config": {"block_rows": 256}}],
+        "serving": {"results": [{"engine": "paged", "new_tokens": 96,
+                                 "wall_s": 0.05, "tok_per_s": 1900.0,
+                                 "speedup_vs_legacy": 1.8}]},
+        "kv_quant": {"results": [{"kv_dtype": "int8", "tok_per_s": 1700.0,
+                                  "pool_bytes_per_slot": 8224,
+                                  "slots_at_budget": 130561,
+                                  "decode_max_abs_err": 0.005,
+                                  "capacity_vs_bf16": 1.99}]},
+        "oversub": {"results": [{"kv_dtype": "bf16", "policy": "lru",
+                                 "budget_frac": 0.5, "total_pages": 5,
+                                 "completion_rate": 1.0, "preemptions": 3,
+                                 "tok_per_s": 980.0}]},
+    }
+
+
+def test_valid_doc_passes():
+    assert check_doc(_valid_doc()) == []
+
+
+@pytest.mark.parametrize("section", sorted(SCHEMA))
+def test_missing_section_is_named(section):
+    """Dropping any one section (what a benchmark rewrite that stops
+    preserving foreign sections would do) fails, naming the section
+    and its regeneration command."""
+    doc = _valid_doc()
+    top = SCHEMA[section]["rows"][0]
+    del doc[top]
+    problems = check_doc(doc)
+    assert problems, section
+    assert any(repr(section) in p and "regenerate" in p for p in problems)
+
+
+def test_empty_rows_rejected():
+    doc = _valid_doc()
+    doc["oversub"]["results"] = []
+    assert any("non-empty" in p for p in check_doc(doc))
+
+
+def test_missing_row_key_rejected():
+    doc = _valid_doc()
+    del doc["oversub"]["results"][0]["preemptions"]
+    problems = check_doc(doc)
+    assert any("preemptions" in p and "'oversub'" in p for p in problems)
+
+
+def test_extra_sections_and_keys_tolerated():
+    """The gate checks floors, not exact shape — future benchmarks add
+    sections and rows grow keys without breaking it."""
+    doc = _valid_doc()
+    doc["future_bench"] = {"results": []}
+    doc["oversub"]["results"][0]["new_key"] = 1
+    assert check_doc(doc) == []
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(_valid_doc()))
+    assert bench_check_main(["bench_check", str(good)]) == 0
+    bad = copy.deepcopy(_valid_doc())
+    del bad["oversub"]
+    badf = tmp_path / "bad.json"
+    badf.write_text(json.dumps(bad))
+    assert bench_check_main(["bench_check", str(badf)]) == 1
+    assert bench_check_main(["bench_check", str(tmp_path / "absent.json")]) == 1
+    notjson = tmp_path / "notjson.json"
+    notjson.write_text("{")
+    assert bench_check_main(["bench_check", str(notjson)]) == 1
+    capsys.readouterr()
+
+
+def test_committed_trajectory_is_valid():
+    """The repo's own committed perf trajectory must satisfy the gate
+    (this is the in-process twin of the check.sh bench-check stage)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "BENCH_autotune.json")) as f:
+        assert check_doc(json.load(f)) == []
+
+
+# ------------------------------------------------- smoke no-write guard ----
+
+def test_smoke_guard_catches_repo_root_write():
+    """Regression for the smoke-modes-must-not-write audit: a stray
+    file landing at the repo root inside a smoke run must fail the
+    gate, not silently dirty the checkout."""
+    from benchmarks.serve_bench import _REPO_ROOT, _guard_no_repo_root_writes
+    marker = os.path.join(_REPO_ROOT, "_test_stray_write.tmp")
+    try:
+        with pytest.raises(AssertionError, match="repo root"):
+            with _guard_no_repo_root_writes():
+                with open(marker, "w") as f:
+                    f.write("stray")
+    finally:
+        if os.path.exists(marker):
+            os.remove(marker)
+
+
+def test_smoke_guard_allows_temp_dir_writes(tmp_path):
+    from benchmarks.serve_bench import _guard_no_repo_root_writes
+    with _guard_no_repo_root_writes():
+        (tmp_path / "fine.json").write_text("{}")

@@ -110,6 +110,36 @@ def test_alloc_many_partial_exhaustion_rolls_back():
     assert a.available == 4
 
 
+def test_allocator_pressure_stats():
+    """The preempt scheduler and oversub bench read these counters."""
+    a = paging.PageAllocator(6)
+    got = a.alloc_many(3)
+    assert a.pressure() == {"total_pages": 6, "available": 2, "in_use": 3,
+                            "peak_in_use": 3, "allocs": 3, "frees": 0}
+    a.free(got[:2])
+    st = a.pressure()
+    assert st["in_use"] == 1 and st["frees"] == 2
+    assert st["peak_in_use"] == 3                 # high-water mark sticks
+    a.alloc_many(2)
+    assert a.pressure()["peak_in_use"] == 3
+    a.alloc()
+    assert a.pressure()["peak_in_use"] == 4
+
+
+def test_allocator_reclaim_filters_null_strict_otherwise():
+    """reclaim() frees a whole block-table row, filtering only the
+    NULL_PAGE placeholders; the underlying free stays strict, so
+    reclaiming the same row twice still raises."""
+    a = paging.PageAllocator(8)
+    pages = a.alloc_many(3)
+    row = np.array(pages + [paging.NULL_PAGE] * 3, np.int32)
+    assert a.reclaim(row) == 3
+    assert a.available == 7
+    with pytest.raises(ValueError, match="double free"):
+        a.reclaim(row)
+    assert a.reclaim([paging.NULL_PAGE] * 4) == 0   # all-null row is a no-op
+
+
 # --------------------------------------------------------- paged kernel ----
 
 def _paged_fixture(b=2, hq=4, hkv=2, d=32, pages_per_slot=3, ps=32, seed=0):

@@ -253,6 +253,179 @@ def test_paged_pool_exhaustion_requeues_instead_of_losing_requests():
         engine.submit(Request(rid=9, tokens=[1] * 14))
 
 
+def _oversub_engine(policy="lru", total_pages=5, **kw):
+    """2 slots x 4 pages of 8 tokens needed, pool holds 4 usable: decode
+    past length 8 crosses page boundaries and runs the pool dry."""
+    return _engine(slots=2, cache_len=32, max_new=24, paged=True,
+                   page_size=8, total_pages=total_pages,
+                   preempt_policy=policy, **kw)
+
+
+def _oversub_requests(n=4):
+    return [Request(rid=i, tokens=[1 + i] * 6) for i in range(n)]
+
+
+def test_fail_policy_raises_actionable_error_mid_decode():
+    """Regression: preempt_policy="fail" preserves the pre-scheduler
+    behavior — the allocator running dry mid-decode raises its
+    actionable message instead of preempting."""
+    engine, *_ = _oversub_engine(policy="fail")
+    with pytest.raises(RuntimeError, match="exhausted"):
+        engine.run_to_completion(_oversub_requests(2))
+    assert engine.preemptions == 0
+
+
+def test_victim_selection_per_policy():
+    """lru picks the least-recently-admitted slot, shortest the one
+    with the fewest generated tokens (admit stamp breaks ties); the
+    needy slot itself is never a victim."""
+    engine, *_ = _engine(slots=3, cache_len=32, max_new=4, paged=True,
+                         page_size=8)
+    for s, (seq, n_gen) in enumerate([(5, 1), (2, 7), (9, 3)]):
+        engine.active[s] = Request(rid=s, tokens=[1], out=[0] * n_gen)
+        engine._active_h[s] = True
+        engine._admit_seq[s] = seq
+
+    engine.sc.preempt_policy = "lru"
+    assert engine._select_victim(0) == 1        # oldest admit stamp
+    assert engine._select_victim(1) == 0        # never the needy slot
+    engine.sc.preempt_policy = "shortest"
+    assert engine._select_victim(1) == 0        # fewest generated
+    assert engine._select_victim(0) == 2
+    # sole active sequence -> no victim
+    engine._active_h[:] = False
+    engine._active_h[0] = True
+    assert engine._select_victim(0) is None
+
+
+def test_preempted_requests_resume_token_identical():
+    """The acceptance gate at test scale: a 0.5x page pool must yield
+    greedy outputs token-identical to the unconstrained run under both
+    preempting policies, with real preemptions and no leaked pages."""
+    ref_engine, *_ = _engine(slots=2, cache_len=32, max_new=24,
+                             paged=True, page_size=8)
+    ref = _oversub_requests()
+    ref_engine.run_to_completion(ref)
+    assert ref_engine.preemptions == 0
+    want = [r.out for r in ref]
+
+    for policy in ("lru", "shortest"):
+        engine, *_ = _oversub_engine(policy=policy)
+        reqs = _oversub_requests()
+        engine.run_to_completion(reqs)
+        assert all(r.done for r in reqs)
+        assert [r.out for r in reqs] == want, policy
+        assert engine.preemptions > 0, f"{policy} never preempted"
+        assert sum(r.preempts for r in reqs) == engine.preemptions
+        st = engine.stats()
+        assert st["available"] == st["total_pages"] - 1   # no leaks
+        assert not engine.requeue and not engine.queue
+
+
+def test_starvation_guard_requeued_admitted_before_fresh():
+    """A preempted checkpoint must be re-admitted ahead of fresh queue
+    entries, and under sustained pressure every request (preempted or
+    not) eventually completes."""
+    engine, *_ = _engine(slots=1, cache_len=32, max_new=4, paged=True,
+                         page_size=8)
+    resumed = Request(rid=0, tokens=[3, 1, 4], preempts=1)
+    resumed.out = [7]                       # checkpoint: one generated
+    fresh = Request(rid=1, tokens=[2, 2, 2])
+    engine.queue.append(fresh)
+    engine.requeue.append(resumed)
+    engine._admit()
+    assert engine.active[0] is resumed      # checkpoint won the slot
+    assert fresh in engine.queue
+
+    # sustained pressure: more requests than slots on a 0.5x pool
+    engine, *_ = _oversub_engine(policy="shortest")
+    reqs = _oversub_requests(6)
+    engine.run_to_completion(reqs)
+    assert all(r.done for r in reqs)
+    assert engine.preemptions > 0
+    assert not engine.requeue
+
+
+def test_preempt_and_readmit_under_int8_pool():
+    """Preemption must compose with the quantized scatter-prefill
+    re-admission path: int8 pools at 0.5x pages complete every request
+    with the full token budget and drain the pool clean.  (Token-level
+    parity is a bf16 contract only — requantization error differs
+    between incremental decode writes and whole-page re-prefill.)"""
+    engine, *_ = _oversub_engine(policy="lru", kv_dtype="int8")
+    reqs = _oversub_requests()
+    engine.run_to_completion(reqs)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 24 for r in reqs)
+    assert engine.preemptions > 0
+    st = engine.stats()
+    assert st["available"] == st["total_pages"] - 1
+
+
+def test_preemption_survives_ring_cache_model():
+    """Preempt/re-admit must survive mixed cache modes: gemma2's local
+    ring layers stay slot-dense and wrap past the window mid-decode,
+    and re-prefill must rebuild that ring state (scatter_prefill
+    overwrites the whole dense slot row) — outputs token-identical to
+    the unconstrained paged run."""
+    cfg = smoke_config("gemma2-2b", num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run(**kw):
+        engine = Engine(model, params, ServeConfig(
+            slots=2, cache_len=32, max_new_tokens=24, paged=True,
+            page_size=8, **kw))
+        reqs = [Request(rid=i, tokens=[1 + i] * 6) for i in range(3)]
+        engine.run_to_completion(reqs)
+        assert all(r.done for r in reqs)
+        return engine, [r.out for r in reqs]
+
+    _, want = run()
+    engine, got = run(total_pages=5, preempt_policy="lru")
+    assert got == want, "ring-cache model diverged under preemption"
+    assert engine.preemptions > 0
+
+
+def test_checkpoint_readmitted_at_full_cache_emits_final_token():
+    """A checkpoint preempted with one cache row left re-prefills to a
+    completely full cache: it must finish at admission, and its
+    re-prefill sample must be exactly the final token the un-preempted
+    run emits (the cache-full edge of the resume path)."""
+    cache_len, plen = 12, 4
+    ref_engine, *_ = _engine(slots=1, cache_len=cache_len, max_new=100,
+                             paged=True, page_size=4)
+    ref = Request(rid=0, tokens=list(range(1, plen + 1)))
+    ref_engine.run_to_completion([ref])
+    assert len(ref.out) == cache_len - plen + 1      # every row written
+
+    engine, *_ = _engine(slots=1, cache_len=cache_len, max_new=100,
+                         paged=True, page_size=4)
+    resumed = Request(rid=1, tokens=list(range(1, plen + 1)), preempts=1)
+    resumed.out = list(ref.out[:-1])    # checkpoint: eff_plen == cache_len
+    engine.requeue.append(resumed)
+    engine.run_to_completion([])
+    assert resumed.done
+    assert resumed.out == ref.out
+    st = engine.stats()
+    assert st["available"] == st["total_pages"] - 1
+
+
+def test_sole_active_sequence_overflowing_pool_raises():
+    """When the only active sequence already holds every usable page,
+    there is nothing to preempt and requeueing it would spin forever —
+    the engine must surface the sizing problem."""
+    engine, *_ = _engine(slots=1, cache_len=32, max_new=24, paged=True,
+                         page_size=8, total_pages=3)
+    with pytest.raises(RuntimeError, match="only active"):
+        engine.run_to_completion([Request(rid=0, tokens=[2] * 6)])
+
+
+def test_preempt_policy_validated():
+    with pytest.raises(ValueError, match="preempt_policy"):
+        _engine(paged=True, preempt_policy="round-robin")
+
+
 def test_paged_long_decode_crosses_page_boundaries():
     """A request decoding across several page boundaries (on-demand
     page allocation mid-stream) must match the dense engine exactly."""
