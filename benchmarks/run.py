@@ -37,7 +37,8 @@ def main() -> None:
     from benchmarks.autotune import bench_json_path, format_rows
     from benchmarks.serve_bench import (format_kv_quant_rows,
                                         format_oversub_rows,
-                                        format_serving_rows)
+                                        format_serving_rows,
+                                        format_spec_rows)
     path = bench_json_path()
     doc = None
     if os.path.exists(path):
@@ -51,7 +52,10 @@ def main() -> None:
             ("KV quant", format_kv_quant_rows,
              "python -m benchmarks.serve_bench --update-bench"),
             ("Oversubscription", format_oversub_rows,
-             "python -m benchmarks.serve_bench --update-bench")):
+             "python -m benchmarks.serve_bench --update-bench"),
+            ("Speculative decode", format_spec_rows,
+             "python -m benchmarks.serve_bench --update-bench "
+             "--section spec")):
         print()
         print("=" * 72)
         print(f"## {title} (from BENCH_autotune.json)")

@@ -16,15 +16,18 @@ regime CI can check):
 
   python -m benchmarks.serve_bench                 # print table
   python -m benchmarks.serve_bench --update-bench  # + merge the rows
-      into BENCH_autotune.json under "serving", "kv_quant" and
-      "oversub" (the ROADMAP perf trajectory; benchmarks/autotune.py
-      preserves every foreign section)
+      into BENCH_autotune.json under "serving", "kv_quant", "oversub"
+      and "spec" (the ROADMAP perf trajectory; benchmarks/autotune.py
+      preserves every foreign section); --section <name> (repeatable)
+      refreshes only the named section(s), preserving the rest
   python -m benchmarks.serve_bench --smoke         # tiny paged-vs-slot
       parity gate for scripts/check.sh
   python -m benchmarks.serve_bench --quant-smoke   # quantized-vs-bf16
       parity-at-tolerance + capacity gate for scripts/check.sh
   python -m benchmarks.serve_bench --oversub-smoke # preempted-vs-
       unpreempted greedy output parity gate for scripts/check.sh
+  python -m benchmarks.serve_bench --spec-smoke    # speculative-vs-
+      plain greedy parity + rollback accounting gate for check.sh
 
 The ``kv_quant`` section measures the dtype axis of the paged pool
 (repro.quant): per KV dtype, end-to-end decode tokens/sec and the max
@@ -41,6 +44,12 @@ quantization/capacity interaction), per preempt policy and KV dtype:
 completion rate, preemption count, and decode tokens/sec.  The
 ``fail`` rows document the pre-PR-5 behavior (mid-decode allocator
 error under oversubscription).
+
+The ``spec`` section measures self-speculative decoding (ServeConfig
+``spec_mode="ngram"``): accepted tokens per verify step and decode
+tok/s per concurrent request vs the plain paged engine, on a
+repeat-heavy workload (speculation's target regime) and a uniform-
+random one (reported honestly alongside).
 
 Smoke modes are CI gates and must never write outside a temp dir —
 only ``--update-bench`` writes at all, and every ``--*-smoke`` run is
@@ -190,12 +199,25 @@ def _requests(cfg, n, plen, seed=0):
             for i in range(n)]
 
 
-def _throughput(engine, cfg, n, plen) -> Dict[str, Any]:
+def _repeat_requests(cfg, n, plen, seed=0, motif=4):
+    """Repeat-heavy prompts: a short random motif tiled to ``plen`` —
+    the regime prompt-lookup speculation exists for (greedy decode
+    continues the repetition, so n-gram drafts verify)."""
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        m = rng.integers(0, cfg.vocab_size, size=motif).tolist()
+        out.append(Request(rid=i, tokens=(m * (plen // motif + 1))[:plen]))
+    return out
+
+
+def _throughput(engine, cfg, n, plen, make=_requests) -> Dict[str, Any]:
     # warm the jit caches with an identically-shaped stream, then
     # measure on the SAME engine: steady-state serving throughput at a
     # stable request-shape distribution, not compile time.
-    engine.run_to_completion(_requests(cfg, n, plen, seed=99))
-    reqs = _requests(cfg, n, plen)
+    engine.run_to_completion(make(cfg, n, plen, seed=99))
+    reqs = make(cfg, n, plen)
     t0 = time.perf_counter()
     engine.run_to_completion(reqs)
     dt = time.perf_counter() - t0
@@ -208,7 +230,8 @@ def _throughput(engine, cfg, n, plen) -> Dict[str, Any]:
 
 def build(paged: bool, *, arch="granite-8b", layers=2, slots=4,
           cache_len=64, max_new=8, legacy=False, kv_dtype=None,
-          page_size=None, total_pages=None, preempt_policy="lru"):
+          page_size=None, total_pages=None, preempt_policy="lru",
+          spec_mode="off", spec_k=4):
     from repro.configs.smoke import smoke_config
     from repro.models.registry import build_model
     from repro.serve import Engine, ServeConfig
@@ -219,7 +242,8 @@ def build(paged: bool, *, arch="granite-8b", layers=2, slots=4,
                      max_new_tokens=max_new, paged=paged,
                      kv_dtype=kv_dtype, page_size=page_size,
                      total_pages=total_pages,
-                     preempt_policy=preempt_policy)
+                     preempt_policy=preempt_policy,
+                     spec_mode=spec_mode, spec_k=spec_k)
     eng = (LegacySlotEngine(model, params, sc) if legacy
            else Engine(model, params, sc))
     return eng, cfg
@@ -420,6 +444,99 @@ def oversub_payload(*, layers=1, slots=2, cache_len=32, max_new=24,
     }
 
 
+# ---------------------------------------------------------------------------
+# spec: self-speculative decoding vs the plain paged step
+# ---------------------------------------------------------------------------
+
+SPEC_WORKLOADS = ("repeat", "uniform")
+SPEC_KS = (2, 4)
+
+
+def spec_payload(*, layers=2, slots=2, cache_len=64, max_new=32,
+                 prompt_len=16) -> Dict[str, Any]:
+    """Per (workload, mode) rows: accepted tokens per verify step and
+    decode tok/s per concurrent request, speedup vs the plain paged
+    engine on the same stream.  The repeat-heavy workload is the regime
+    speculation targets; the uniform-random one is reported honestly
+    alongside (its acceptance comes only from greedy decode's
+    fixed-point attractors)."""
+    makes = {"repeat": _repeat_requests, "uniform": _requests}
+    rows = []
+    for workload in SPEC_WORKLOADS:
+        make = makes[workload]
+        base_tps = None
+        for mode, k in [("paged", None)] + [("spec", k) for k in SPEC_KS]:
+            eng, cfg = build(True, layers=layers, slots=slots,
+                             cache_len=cache_len, max_new=max_new,
+                             spec_mode="off" if k is None else "ngram",
+                             spec_k=k or 4)
+            s0, e0 = eng.spec_steps, eng.spec_emitted
+            r = _throughput(eng, cfg, slots, prompt_len, make=make)
+            r.pop("sample")
+            steps = eng.spec_steps - s0
+            acc = (round((eng.spec_emitted - e0) / steps, 3)
+                   if steps else None)
+            r.update(workload=workload, mode=mode, spec_k=k,
+                     accepted_tokens_per_step=acc,
+                     tok_per_s_per_req=round(r["tok_per_s"] / slots, 2))
+            if mode == "paged":
+                base_tps = r["tok_per_s"]
+            r["speedup_vs_paged"] = round(r["tok_per_s"] / base_tps, 3)
+            rows.append(r)
+            acc_s = "-" if acc is None else f"{acc:.2f}"
+            print(f"{workload:<8} {mode:<6} k={k or '-':<3} "
+                  f"{r['tok_per_s']:>8.2f} tok/s  {acc_s:>6} acc/step  "
+                  f"{r['speedup_vs_paged']:>5.2f}x")
+    return {
+        "bench": "spec",
+        "generated_by": "python -m benchmarks.serve_bench --update-bench "
+                        "--section spec",
+        "arch": "interpret",
+        "config": {"slots": slots, "cache_len": cache_len,
+                   "prompt_len": prompt_len, "max_new": max_new,
+                   "layers": layers, "model": "granite-8b smoke"},
+        "results": rows,
+    }
+
+
+def spec_smoke() -> None:
+    """check.sh gate: self-speculative decoding greedy-parity.
+
+    For spec_k in {2, 4}, the spec engine's outputs must be
+    token-identical to the plain paged greedy run on the same mixed-
+    length stream, at least one real draft rejection must have happened
+    (else the rollback path is vacuous), accepted tokens per verify
+    step must exceed 1.0, and the page pool must drain clean (the
+    rollback's strict-accounting invariant).
+    """
+    def run(**kw):
+        eng, cfg = build(True, layers=1, slots=2, cache_len=32,
+                         max_new=12, **kw)
+        reqs = [r for r in _requests(cfg, 4, 6)]
+        eng.run_to_completion(reqs)
+        assert all(r.done for r in reqs), "requests lost under speculation"
+        return eng, [r.out for r in reqs]
+
+    _, want = run()
+    for k in (2, 4):
+        eng, got = run(spec_mode="ngram", spec_k=k)
+        st = eng.stats()
+        assert got == want, \
+            f"spec-smoke parity FAILED (k={k}): {got} != {want}"
+        assert st["spec_rejections"] > 0, \
+            f"spec-smoke vacuous: k={k} never rejected a draft " \
+            f"(rollback untested): {st}"
+        acc = st["spec_emitted"] / max(st["spec_steps"], 1)
+        assert acc > 1.0, \
+            f"spec-smoke: k={k} accepted {acc:.2f} tokens/step (<= 1.0, " \
+            f"speculation is pure overhead)"
+        assert st["available"] == st["total_pages"] - 1, \
+            f"leaked pages after rollback: {st}"
+    print(f"spec-smoke OK: k=2,4 token-identical to plain paged greedy "
+          f"on {len(want)} requests; rejections exercised; pool drains "
+          f"clean")
+
+
 def oversub_smoke() -> None:
     """check.sh gate: preempted-vs-unpreempted greedy output parity.
 
@@ -516,39 +633,8 @@ def smoke() -> None:
           f"({sum(len(o) for o in outs[True])} tokens)")
 
 
-def main(argv=None) -> Dict[str, Any]:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--smoke", action="store_true",
-                    help="fast paged-vs-slot parity gate (no timing)")
-    ap.add_argument("--quant-smoke", action="store_true",
-                    help="quantized-vs-bf16 paged parity-at-tolerance "
-                         "+ capacity gate (no timing)")
-    ap.add_argument("--oversub-smoke", action="store_true",
-                    help="preempted-vs-unpreempted greedy output parity "
-                         "gate on a 0.5x page pool (no timing)")
-    ap.add_argument("--prompts", type=int, default=12)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--cache-len", type=int, default=64)
-    ap.add_argument("--layers", type=int, default=2)
-    ap.add_argument("--update-bench", action="store_true",
-                    help="merge rows into BENCH_autotune.json under "
-                         "'serving' and 'kv_quant'")
-    args = ap.parse_args(argv)
-
-    if args.smoke or args.quant_smoke or args.oversub_smoke:
-        # CI gates: never write anything (the guard raises on a stray
-        # repo-root/tuning-cache artifact instead of letting it land)
-        with _guard_no_repo_root_writes():
-            if args.smoke:
-                smoke()
-            if args.quant_smoke:
-                quant_smoke()
-            if args.oversub_smoke:
-                oversub_smoke()
-        return {}
-
+def serving_payload(args) -> Dict[str, Any]:
+    """Legacy-slot vs slot vs paged engine rows (the PR 3 section)."""
     rows = []
     for name, paged, legacy in (("legacy_slot", False, True),
                                 ("slot", False, False),
@@ -572,7 +658,7 @@ def main(argv=None) -> Dict[str, Any]:
           f"{rows[-1]['speedup_vs_legacy']:.2f}x "
           f"(slot: {rows[1]['speedup_vs_legacy']:.2f}x)")
 
-    payload = {
+    return {
         "bench": "serve",
         "generated_by": "python -m benchmarks.serve_bench --update-bench",
         "arch": "interpret",
@@ -583,14 +669,71 @@ def main(argv=None) -> Dict[str, Any]:
         "results": rows,
     }
 
-    print()
-    kv_quant = kv_quant_payload(
-        layers=args.layers, slots=args.slots, cache_len=args.cache_len,
-        max_new=args.max_new, prompts=args.prompts,
-        prompt_len=args.prompt_len)
 
-    print()
-    oversub = oversub_payload()
+#: BENCH_autotune.json sections this benchmark owns, in compute order.
+SECTIONS = ("serving", "kv_quant", "oversub", "spec")
+
+
+def main(argv=None) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast paged-vs-slot parity gate (no timing)")
+    ap.add_argument("--quant-smoke", action="store_true",
+                    help="quantized-vs-bf16 paged parity-at-tolerance "
+                         "+ capacity gate (no timing)")
+    ap.add_argument("--oversub-smoke", action="store_true",
+                    help="preempted-vs-unpreempted greedy output parity "
+                         "gate on a 0.5x page pool (no timing)")
+    ap.add_argument("--spec-smoke", action="store_true",
+                    help="speculative-vs-plain greedy output parity + "
+                         "rollback accounting gate (no timing)")
+    ap.add_argument("--prompts", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--section", action="append", choices=list(SECTIONS),
+                    help="compute (and with --update-bench, refresh) only "
+                         "the named BENCH section(s); other sections in "
+                         "BENCH_autotune.json are preserved untouched. "
+                         "Repeatable; default: all of them")
+    ap.add_argument("--update-bench", action="store_true",
+                    help="merge the computed section rows into "
+                         "BENCH_autotune.json (foreign sections and "
+                         "un-named sections preserved)")
+    args = ap.parse_args(argv)
+
+    if args.smoke or args.quant_smoke or args.oversub_smoke \
+            or args.spec_smoke:
+        # CI gates: never write anything (the guard raises on a stray
+        # repo-root/tuning-cache artifact instead of letting it land)
+        with _guard_no_repo_root_writes():
+            if args.smoke:
+                smoke()
+            if args.quant_smoke:
+                quant_smoke()
+            if args.oversub_smoke:
+                oversub_smoke()
+            if args.spec_smoke:
+                spec_smoke()
+        return {}
+
+    producers = {
+        "serving": lambda: serving_payload(args),
+        "kv_quant": lambda: kv_quant_payload(
+            layers=args.layers, slots=args.slots, cache_len=args.cache_len,
+            max_new=args.max_new, prompts=args.prompts,
+            prompt_len=args.prompt_len),
+        "oversub": oversub_payload,
+        "spec": spec_payload,
+    }
+    names = [s for s in SECTIONS if s in (args.section or SECTIONS)]
+    computed: Dict[str, Any] = {}
+    for i, name in enumerate(names):
+        if i:
+            print()
+        computed[name] = producers[name]()
 
     if args.update_bench:
         from benchmarks.autotune import bench_json_path
@@ -599,14 +742,12 @@ def main(argv=None) -> Dict[str, Any]:
         if os.path.exists(path):
             with open(path) as f:
                 doc = json.load(f)
-        doc["serving"] = payload
-        doc["kv_quant"] = kv_quant
-        doc["oversub"] = oversub
+        doc.update(computed)
         with open(path, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
             f.write("\n")
-        print(f"merged serving + kv_quant + oversub rows into {path}")
-    return {"serving": payload, "kv_quant": kv_quant, "oversub": oversub}
+        print(f"merged {' + '.join(names)} rows into {path}")
+    return computed
 
 
 def format_kv_quant_rows(doc: Dict[str, Any]) -> List[str]:
@@ -649,6 +790,27 @@ def format_oversub_rows(doc: Dict[str, Any]) -> List[str]:
             f"{r['policy']:<9} {r['total_pages']:>6} "
             f"{r['completion_rate']:>5.0%} {r['preemptions']:>9} "
             f"{tps:>9}  {r.get('error', '')}")
+    return lines
+
+
+def format_spec_rows(doc: Dict[str, Any]) -> List[str]:
+    """Render BENCH_autotune.json['spec'] (shared with run.py)."""
+    sp = doc.get("spec")
+    if not sp:
+        return ["(no spec rows; run python -m benchmarks.serve_bench "
+                "--update-bench --section spec)"]
+    header = (f"{'workload':<9} {'mode':<6} {'k':>3} {'tok/s':>9} "
+              f"{'tok/s/req':>10} {'acc/step':>9} {'vs paged':>9}")
+    lines = [f"config: {json.dumps(sp.get('config', {}), sort_keys=True)}",
+             header, "-" * len(header)]
+    for r in sp.get("results", ()):
+        acc = r.get("accepted_tokens_per_step")
+        lines.append(
+            f"{r['workload']:<9} {r['mode']:<6} "
+            f"{r['spec_k'] if r['spec_k'] is not None else '-':>3} "
+            f"{r['tok_per_s']:>9.2f} {r['tok_per_s_per_req']:>10.2f} "
+            f"{'-' if acc is None else format(acc, '.2f'):>9} "
+            f"{r['speedup_vs_paged']:>8.2f}x")
     return lines
 
 

@@ -8,7 +8,12 @@ quantized serving finishes the same stream in the same order on half
 the pool bytes.  A fourth run forces **oversubscription** (3 usable
 pages vs a 12-page working set, 0.25x): the preempt/requeue scheduler
 checkpoints victims and re-prefills them, and the outputs stay
-token-identical to the unconstrained paged run.
+token-identical to the unconstrained paged run.  A fifth run turns on
+**self-speculative decoding** (``spec_mode="ngram"``): the engine
+drafts 4 tokens per step from each sequence's own history, verifies
+them in one batched paged-decode call, rolls rejected tokens back by
+truncating the block-table suffix — and still emits exactly the plain
+paged run's tokens in the same finish order.
 
 Run:  PYTHONPATH=src python examples/serve_continuous.py
 """
@@ -52,7 +57,11 @@ def main():
              # 3 usable pages vs a 12-page working set (2 slots x 6
              # pages of 8): decode pressure forces preempt/requeue
              ("oversub", dict(paged=True, page_size=8, total_pages=4,
-                              preempt_policy="lru")))
+                              preempt_policy="lru")),
+             # n-gram self-drafting: accepted drafts batch several
+             # tokens into one verification step, rejections roll the
+             # block table back — outputs must not change
+             ("spec", dict(paged=True, spec_mode="ngram", spec_k=4)))
     for label, kw in modes:
         engine = Engine(model, params, ServeConfig(
             slots=2, cache_len=48, max_new_tokens=6, **kw))
@@ -75,6 +84,11 @@ def main():
             print(f"(pool of {st['total_pages'] - 1} usable pages vs a "
                   f"12-page working set: {st['preemptions']} preemptions, "
                   f"peak {st['peak_in_use']} pages in use)")
+        if label == "spec":
+            st = engine.stats()
+            acc = st["spec_emitted"] / max(st["spec_steps"], 1)
+            print(f"(k=4 drafts/step: {acc:.2f} accepted tokens/step, "
+                  f"{st['spec_rejections']} rollbacks)")
         print(f"{label:<7}: {toks} tokens in {dt:.1f}s ({toks / dt:.1f} "
               f"tok/s, 2 slots, {len(reqs)} requests)")
 
@@ -94,6 +108,14 @@ def main():
     assert results["oversub"] == results["paged"], \
         "oversubscribed outputs diverged from the unconstrained run"
     print("oversub (0.25x pages, preempt/requeue) == paged outputs: OK")
+    # Speculation is a pure batching transform under greedy decoding:
+    # every accepted draft equals the token the argmax chain would have
+    # produced, so outputs and finish order match the plain paged run.
+    assert results["spec"] == results["paged"], \
+        "speculative outputs diverged from the plain paged run"
+    assert orders["spec"] == orders["paged"], \
+        f"spec finish order diverged: {orders}"
+    print("spec (ngram k=4, block-table rollback) == paged outputs: OK")
 
 
 if __name__ == "__main__":

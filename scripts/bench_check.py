@@ -17,6 +17,7 @@ Required sections and per-row keys:
   serving   "serving".results   (benchmarks/serve_bench.py)
   kv_quant  "kv_quant".results  (benchmarks/serve_bench.py)
   oversub   "oversub".results   (benchmarks/serve_bench.py)
+  spec      "spec".results      (benchmarks/serve_bench.py)
 
 Wired as the check.sh `bench-check` stage.
 """
@@ -57,6 +58,14 @@ SCHEMA: Dict[str, Any] = {
         "row_keys": ("kv_dtype", "policy", "budget_frac", "total_pages",
                      "completion_rate", "preemptions", "tok_per_s"),
         "regen": "python -m benchmarks.serve_bench --update-bench",
+    },
+    "spec": {
+        "rows": ("spec", "results"),
+        "row_keys": ("workload", "mode", "spec_k", "tok_per_s",
+                     "tok_per_s_per_req", "accepted_tokens_per_step",
+                     "speedup_vs_paged"),
+        "regen": "python -m benchmarks.serve_bench --update-bench "
+                 "--section spec",
     },
 }
 

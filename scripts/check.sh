@@ -21,7 +21,7 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-STAGES=(pytest parity tune-smoke serve-smoke quant-smoke oversub-smoke bench-check)
+STAGES=(pytest parity tune-smoke serve-smoke quant-smoke oversub-smoke spec-smoke bench-check)
 
 # -- stage bodies (each runs in its own `set -e` subshell) -------------------
 
@@ -80,6 +80,12 @@ stage_quant_smoke() {
 stage_oversub_smoke() {
     # preempted-vs-unpreempted greedy output parity on a 0.5x page pool
     python -m benchmarks.serve_bench --oversub-smoke
+}
+
+stage_spec_smoke() {
+    # self-speculative decode (k=2,4) token-identical to plain paged
+    # greedy, with at least one real draft rejection exercised
+    python -m benchmarks.serve_bench --spec-smoke
 }
 
 stage_bench_check() {

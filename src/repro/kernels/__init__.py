@@ -18,6 +18,8 @@ auto-generated parity sweeps.
 from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
 from repro.kernels.decode_attention.ops import paged_decode_attention  # noqa: F401
 from repro.kernels.decode_attention.ops import quant_paged_decode_attention  # noqa: F401
+from repro.kernels.decode_attention.ops import spec_paged_decode_attention  # noqa: F401
+from repro.kernels.decode_attention.ops import quant_spec_paged_decode_attention  # noqa: F401
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
 from repro.kernels.gmm.ops import gmm  # noqa: F401
 from repro.kernels.mamba_scan.ops import mamba_scan  # noqa: F401

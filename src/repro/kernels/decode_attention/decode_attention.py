@@ -38,18 +38,22 @@ def flash_decode_step(q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
                       acc_ref, m_ref, l_ref, *, rt: DeviceRuntime,
                       scale: float, window: Optional[int],
                       softcap: Optional[float], k_start, length, ik, nk,
-                      k_scale=None, v_scale=None):
+                      k_scale=None, v_scale=None, row_length=None):
     """One KV-block update of the online-softmax accumulation.
 
-    The shared body of the dense, paged, and quantized-paged decode
-    kernels: they differ only in how KV blocks reach VMEM (contiguous
-    BlockSpec walk vs. block-table gather) — the flash math is
-    target/layout common.  ``k_start`` is the global token position of
-    this block's first row, ``length`` the valid prefix, ``ik``/``nk``
-    this step's position on the sequential KV grid axis (init on
-    first, emit on last).  ``k_scale``/``v_scale`` are optional
-    per-block dequantization scalars (quantized pools store int8/fp8;
-    the dequant fuses here, in VMEM, after the block DMA).
+    The shared body of the dense, paged, quantized-paged, and
+    speculative decode kernels: they differ only in how KV blocks reach
+    VMEM (contiguous BlockSpec walk vs. block-table gather) — the flash
+    math is target/layout common.  ``k_start`` is the global token
+    position of this block's first row, ``length`` the valid prefix,
+    ``ik``/``nk`` this step's position on the sequential KV grid axis
+    (init on first, emit on last).  ``k_scale``/``v_scale`` are
+    optional per-block dequantization scalars (quantized pools store
+    int8/fp8; the dequant fuses here, in VMEM, after the block DMA).
+    ``row_length`` is an optional (G8, 1) per-query-row valid prefix:
+    the speculative verify kernel stacks k+1 query positions into the
+    group dim, each with its own causal horizon, while the scalar
+    ``length`` (the maximum over rows) still gates whole-block skips.
     """
     @rt.when(ik == 0)
     def _init():
@@ -71,9 +75,12 @@ def flash_decode_step(q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
         k_pos = k_start + rt.iota(s.shape, 1)
-        mask = k_pos < length
+        # per-row horizon when given ((G8,1) broadcasts against (G8,bkv));
+        # scalar length otherwise — the single-query kernels' fast path
+        horizon = length if row_length is None else row_length
+        mask = k_pos < horizon
         if window is not None:
-            mask = jnp.logical_and(mask, (length - 1 - k_pos) < window)
+            mask = jnp.logical_and(mask, (horizon - 1 - k_pos) < window)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[:, :1]

@@ -18,6 +18,7 @@ from repro.kernels.decode_attention import ref as _ref
 from repro.kernels.decode_attention import decode_attention as _kern
 from repro.kernels.decode_attention import paged as _paged
 from repro.kernels.decode_attention import quant as _quant
+from repro.kernels.decode_attention import spec as _spec
 
 
 def _ref_impl(q, k_cache, v_cache, lengths, *, window, softcap, scale,
@@ -157,6 +158,138 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
     acc, m, l = paged_decode_attention_op(
         q, k_pages, v_pages, block_tables, lengths, window=window,
         softcap=softcap, scale=scale, page_size=page_size, block_kv=block_kv)
+    if return_residuals:
+        return acc, m, l
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l_safe[..., None]).astype(q.dtype)
+
+
+# -------------------------------------------------- speculative paged ------
+
+def _spec_paged_ref_impl(q, k_pages, v_pages, block_tables, lengths, *,
+                         window, softcap, scale, page_size, block_kv):
+    del page_size, block_kv            # scheduling-only, as for the paged op
+    return _ref.spec_paged_decode_attention_ref(
+        q, k_pages, v_pages, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, return_residuals=True)
+
+
+def _spec_paged_kernel_impl(q, k_pages, v_pages, block_tables, lengths, *,
+                            window, softcap, scale, page_size, block_kv):
+    return _spec.spec_paged_decode_attention_fwd(
+        q, k_pages, v_pages, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, page_size=page_size, block_kv=block_kv)
+
+
+def _spec_paged_example(key):
+    # Same scrambled-page pool as the single-query paged example, with
+    # a K1=3 speculation window per slot: the verify must mask each
+    # window position to its own causal horizon, including the window
+    # rows the engine wrote just before the call (here: whatever the
+    # random pool holds at positions lengths..lengths+2 — the kernel
+    # and oracle must read identical data either way).
+    (q1, kpg, vpg, bt, lengths), params = _paged_example(key)
+    b, hq, d = q1.shape
+    k1 = 3
+    q = jax.random.normal(jax.random.fold_in(key, 7), (b, k1, hq, d),
+                          jnp.float32)
+    return (q, kpg, vpg, bt, lengths), dict(params)
+
+
+spec_paged_decode_attention_op = device_op(
+    name="spec_paged_decode_attention",
+    ref=_spec_paged_ref_impl,
+    kernel=_spec_paged_kernel_impl,
+    tunables={"page_size": 64, "block_kv": 64},
+    search_space={"page_size": (16, 32, 64), "block_kv": (16, 32, 64)},
+    constraints=(lambda cfg: cfg["page_size"] % cfg["block_kv"] == 0,),
+    differentiable=False,
+    example=_spec_paged_example,
+)
+
+
+def spec_paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                                window: Optional[int] = None,
+                                softcap: Optional[float] = None,
+                                scale: Optional[float] = None,
+                                page_size: Optional[int] = None,
+                                block_kv: Optional[int] = None,
+                                return_residuals: bool = False):
+    """Speculative (multi-query) GQA decode attention over a paged pool.
+
+    q: (B, K1, Hq, D) — the committed token plus k drafts per slot;
+    pools: (Hkv, P, ps, D); block_tables: (B, T) int32; lengths: (B,)
+    PRE-speculation valid prefix.  Position i attends causally to
+    ``lengths + 1 + i`` tokens; all K1 positions are verified in one
+    paged-decode call (kernels/decode_attention/spec.py).  Returns
+    (B, K1, Hq, Dv) normalized, or the (acc, m, l) residuals.
+    """
+    acc, m, l = spec_paged_decode_attention_op(
+        q, k_pages, v_pages, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, page_size=page_size, block_kv=block_kv)
+    if return_residuals:
+        return acc, m, l
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l_safe[..., None]).astype(q.dtype)
+
+
+def _quant_spec_paged_ref_impl(q, k_pages, v_pages, k_scales, v_scales,
+                               block_tables, lengths, *, window, softcap,
+                               scale, page_size, block_kv):
+    del page_size, block_kv
+    return _ref.quant_spec_paged_decode_attention_ref(
+        q, k_pages, v_pages, k_scales, v_scales, block_tables, lengths,
+        window=window, softcap=softcap, scale=scale, return_residuals=True)
+
+
+def _quant_spec_paged_kernel_impl(q, k_pages, v_pages, k_scales, v_scales,
+                                  block_tables, lengths, *, window, softcap,
+                                  scale, page_size, block_kv):
+    return _spec.spec_paged_decode_attention_fwd(
+        q, k_pages, v_pages, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, page_size=page_size, block_kv=block_kv,
+        k_scales=k_scales, v_scales=v_scales)
+
+
+def _quant_spec_paged_example(key):
+    from repro.quant import spec_for_storage
+    (q, kpg, vpg, bt, lengths), params = _spec_paged_example(key)
+    s = spec_for_storage(jnp.int8)
+    kq, ks = s.quantize_pages(kpg)
+    vq, vs = s.quantize_pages(vpg)
+    return (q, kq, vq, ks, vs, bt, lengths), dict(params)
+
+
+quant_spec_paged_decode_attention_op = device_op(
+    name="quant_spec_paged_decode_attention",
+    ref=_quant_spec_paged_ref_impl,
+    kernel=_quant_spec_paged_kernel_impl,
+    tunables={"page_size": 64, "block_kv": 64},
+    # dtype stays a capability axis, not a tunable — same reasoning as
+    # quant_paged_decode_attention below.
+    search_space={"page_size": (16, 32, 64), "block_kv": (16, 32, 64)},
+    constraints=(lambda cfg: cfg["page_size"] % cfg["block_kv"] == 0,),
+    differentiable=False,
+    example=_quant_spec_paged_example,
+)
+
+
+def quant_spec_paged_decode_attention(q, k_pages, v_pages, k_scales,
+                                      v_scales, block_tables, lengths, *,
+                                      window: Optional[int] = None,
+                                      softcap: Optional[float] = None,
+                                      scale: Optional[float] = None,
+                                      page_size: Optional[int] = None,
+                                      block_kv: Optional[int] = None,
+                                      return_residuals: bool = False):
+    """Speculative multi-query decode over a *quantized* paged pool —
+    ``spec_paged_decode_attention`` semantics over the dequantized
+    pools, with the per-block dequant fused into the kernel body (the
+    PR 4 fused-dequant path, unchanged)."""
+    acc, m, l = quant_spec_paged_decode_attention_op(
+        q, k_pages, v_pages, k_scales, v_scales, block_tables, lengths,
+        window=window, softcap=softcap, scale=scale, page_size=page_size,
+        block_kv=block_kv)
     if return_residuals:
         return acc, m, l
     l_safe = jnp.where(l == 0.0, 1.0, l)

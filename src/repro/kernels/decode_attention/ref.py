@@ -101,6 +101,72 @@ def quant_paged_decode_attention_ref(q, k_pages, v_pages, k_scales, v_scales,
         softcap=softcap, scale=scale, return_residuals=return_residuals)
 
 
+def spec_paged_decode_attention_ref(q, k_pages, v_pages, block_tables,
+                                    lengths, *,
+                                    window: Optional[int] = None,
+                                    softcap: Optional[float] = None,
+                                    scale: Optional[float] = None,
+                                    return_residuals: bool = False):
+    """Oracle for the speculative (multi-query) paged kernel.
+
+    q: (B, K1, Hq, D) — the K1 = k+1 speculation-window positions per
+    slot; lengths: (B,) the PRE-speculation valid prefix.  Query
+    position i sits at token position ``lengths + i`` and attends
+    causally to ``lengths + 1 + i`` tokens (the window's KV rows are
+    already written when the verify runs).  Everything else is the
+    page-gathered dense computation, per position.
+    """
+    b, k1, hq, d = q.shape
+    hkv = k_pages.shape[0]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    k_dense = gather_pages(k_pages, block_tables)       # (B, Hkv, S, D)
+    v_dense = gather_pages(v_pages, block_tables)
+    s = k_dense.shape[2]
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k_dense.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v_dense.astype(jnp.float32), group, axis=1)
+
+    scores = jnp.einsum("bihd,bhkd->bihk", qf, kf)      # (B, K1, Hq, S)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    k_pos = jnp.arange(s)[None, None, None, :]
+    row_len = (lengths[:, None] + 1 + jnp.arange(k1)[None, :])
+    mask = k_pos < row_len[:, :, None, None]
+    if window is not None:
+        q_pos = (row_len - 1)[:, :, None, None]
+        mask &= (q_pos - k_pos) < window
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(m > NEG_INF / 2, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum("bihk,bhkd->bihd", p, vf)
+    if return_residuals:
+        return acc, m[..., 0], l[..., 0]
+    out = acc / jnp.where(l == 0.0, 1.0, l)
+    return out.astype(q.dtype)
+
+
+def quant_spec_paged_decode_attention_ref(q, k_pages, v_pages, k_scales,
+                                          v_scales, block_tables, lengths, *,
+                                          window: Optional[int] = None,
+                                          softcap: Optional[float] = None,
+                                          scale: Optional[float] = None,
+                                          return_residuals: bool = False):
+    """Quantized-pool oracle for the speculative paged kernel: dense
+    dequant (arithmetically identical to the kernel's fused
+    ``f32(q) * scale``), then the spec oracle — the same layering as
+    ``quant_paged_decode_attention_ref``."""
+    k_dense = k_pages.astype(jnp.float32) * k_scales[:, :, None, None]
+    v_dense = v_pages.astype(jnp.float32) * v_scales[:, :, None, None]
+    return spec_paged_decode_attention_ref(
+        q, k_dense, v_dense, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, return_residuals=return_residuals)
+
+
 def combine_partials(accs, ms, ls):
     """Merge flash-decode partials from KV shards (log-sum-exp combine).
 

@@ -17,7 +17,7 @@ import jax
 def main():
     # the engine's tuple is the single source for policy choices (jax
     # is already imported at module scope, so this costs nothing extra)
-    from repro.serve import PREEMPT_POLICIES
+    from repro.serve import PREEMPT_POLICIES, SPEC_MODES
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -49,11 +49,24 @@ def main():
                          "least-recently-admitted slot, the one with "
                          "the fewest generated tokens, or fail fast "
                          "with the allocator error")
+    ap.add_argument("--spec-mode", default="off",
+                    choices=list(SPEC_MODES),
+                    help="self-speculative decoding: 'ngram' drafts "
+                         "--spec-k tokens per step from the sequence's "
+                         "own history (prompt lookup, no draft model), "
+                         "verifies them in one batched paged-decode "
+                         "call, and rolls rejected tokens back by "
+                         "truncating the block-table suffix (requires "
+                         "--paged and greedy --temperature 0)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per speculative step (>= 1)")
     args = ap.parse_args()
     if args.kv_dtype and not args.paged:
         ap.error("--kv-dtype requires --paged")
     if args.total_pages is not None and not args.paged:
         ap.error("--total-pages requires --paged")
+    if args.spec_mode != "off" and not args.paged:
+        ap.error("--spec-mode requires --paged")
 
     from repro.configs import get_config
     from repro.configs.smoke import smoke_config
@@ -75,7 +88,8 @@ def main():
                      paged=args.paged, page_size=args.page_size,
                      kv_dtype=args.kv_dtype,
                      total_pages=args.total_pages,
-                     preempt_policy=args.preempt_policy)
+                     preempt_policy=args.preempt_policy,
+                     spec_mode=args.spec_mode, spec_k=args.spec_k)
     engine = Engine(model, params, sc)
 
     import numpy as np
@@ -96,6 +110,10 @@ def main():
         "new_tokens": new_tokens, "wall_s": round(dt, 2),
         "tok_per_s": round(new_tokens / dt, 1),
         "preemptions": engine.stats()["preemptions"],
+        **({"accepted_tokens_per_step":
+            round(engine.spec_emitted / max(engine.spec_steps, 1), 2),
+            "spec_rejections": engine.spec_rejections}
+           if engine.spec else {}),
         "sample_output": reqs[0].out,
     }, indent=1))
 

@@ -21,6 +21,9 @@ from repro.sharding.kernel_sharding import (
     sharded_decode_update_attend as decode_update_attend,
     sharded_paged_decode_update_attend as paged_decode_update_attend,
     sharded_quant_paged_decode_update_attend as quant_paged_decode_update_attend,
+    sharded_spec_paged_decode_update_attend as spec_paged_decode_update_attend,
+    sharded_quant_spec_paged_decode_update_attend as
+    quant_spec_paged_decode_update_attend,
 )
 from repro.models import layers as L
 
@@ -36,6 +39,24 @@ def _page_coords(block_tables, lengths, page_size: int):
     write_page = jnp.take_along_axis(block_tables, page_idx[:, None],
                                      axis=1)[:, 0]
     write_off = (lengths % page_size).astype(jnp.int32)
+    return write_page, write_off
+
+
+def _spec_page_coords(block_tables, lengths, k1: int, page_size: int):
+    """(write_page, write_off), both (B, K1), for the speculative window
+    at positions ``lengths .. lengths + k1 - 1``.
+
+    Positions past the block table's addressable range (the engine caps
+    speculation at ``cache_len`` but the table covers exactly
+    ``pages_per_slot`` pages) redirect to the allocator's trash page 0,
+    same as freed slots in ``_page_coords``.
+    """
+    t = block_tables.shape[1]
+    pos = lengths[:, None] + jnp.arange(k1, dtype=jnp.int32)[None, :]
+    page_idx = jnp.minimum(pos // page_size, t - 1).astype(jnp.int32)
+    gathered = jnp.take_along_axis(block_tables, page_idx, axis=1)
+    write_page = jnp.where(pos < t * page_size, gathered, 0)
+    write_off = (pos % page_size).astype(jnp.int32)
     return write_page, write_off
 
 
@@ -190,6 +211,53 @@ def decode_attn(p, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
     return o, ck, cv
 
 
+def spec_decode_attn(p, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
+                     kind: str = "global", theta=None, block_tables=None,
+                     cache_scales=None):
+    """Speculative k-token decode.  x: (B, K1, d) — the slot's current
+    token followed by K1-1 drafted tokens.  All K1 positions' K/V are
+    written into the paged cache inside the fused wrapper, and each
+    query row qi attends to ``lengths + 1 + qi`` keys (its own causal
+    horizon), so one call verifies the whole window.
+
+    Paged caches only; ``lengths`` is the PRE-speculation committed
+    prefix.  Returns (out (B,K1,d), new_k, new_v) or the 5-tuple with
+    scale pools when ``cache_scales`` is given.
+    """
+    assert block_tables is not None, "spec decode requires paged caches"
+    assert kind == "global", "spec decode supports global attention only"
+    b, k1, _ = x.shape
+    theta = theta if theta is not None else cfg.rope_theta
+    xd = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(xd))    # (B,H,K1,hd)
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(xd))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(xd))
+    if cfg.use_qk_norm:
+        q = L.apply_norm(p["q_norm"], q, cfg)
+        k = L.apply_norm(p["k_norm"], k, cfg)
+    pos = lengths[:, None] + jnp.arange(k1, dtype=jnp.int32)[None, :]
+    cos, sin = L.rope_cache(pos, cfg.head_dim, theta)         # (B,K1,hd/2)
+    q = L.apply_rope(q, cos[:, None], sin[:, None])
+    k = L.apply_rope(k, cos[:, None], sin[:, None])
+
+    ps = cache_k.shape[2]
+    write_page, write_off = _spec_page_coords(block_tables, lengths, k1, ps)
+    q_t = jnp.swapaxes(q, 1, 2)                               # (B,K1,H,hd)
+    base = lengths.astype(jnp.int32)
+    if cache_scales is not None:
+        out, ck, cv, ks, vs = quant_spec_paged_decode_update_attend(
+            q_t, k, v, cache_k, cache_v, cache_scales[0], cache_scales[1],
+            block_tables, write_page, write_off, base,
+            softcap=cfg.attn_softcap, page_size=ps)
+        o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(xd))
+        return o, ck, cv, ks, vs
+    out, ck, cv = spec_paged_decode_update_attend(
+        q_t, k, v, cache_k, cache_v, block_tables, write_page, write_off,
+        base, softcap=cfg.attn_softcap, page_size=ps)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(xd))
+    return o, ck, cv
+
+
 # ------------------------------------------------------------- MLA ------
 
 def init_mla(key, cfg: ModelConfig):
@@ -297,4 +365,49 @@ def decode_mla(p, x, cache_k, cache_v, lengths, cfg: ModelConfig,
             q_full, k_full, v, cache_k, cache_v, lengths.astype(jnp.int32),
             (lengths + 1).astype(jnp.int32), scale=qk_dim ** -0.5)
     o = jnp.einsum("bhk,hkd->bd", out, p["wo_mla"].astype(xd))[:, None, :]
+    return o, ck, cv
+
+
+def spec_decode_mla(p, x, cache_k, cache_v, lengths, cfg: ModelConfig,
+                    block_tables=None, cache_scales=None):
+    """MLA speculative k-token decode; see ``spec_decode_attn`` for the
+    window/horizon contract.  Paged caches only."""
+    assert block_tables is not None, "spec decode requires paged caches"
+    m: MLAConfig = cfg.mla
+    b, k1, _ = x.shape
+    h = cfg.num_heads
+    xd = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq_mla"].astype(xd))
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    pos = lengths[:, None] + jnp.arange(k1, dtype=jnp.int32)[None, :]
+    cos, sin = L.rope_cache(pos, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = L.apply_rope(q_rope, cos[:, None], sin[:, None])
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)       # (B,H,K1,qk)
+
+    kv_a = x @ p["wkv_a"].astype(xd)                          # (B,K1,lora+r)
+    c_kv, k_rope = kv_a[..., :m.kv_lora_rank], kv_a[..., m.kv_lora_rank:]
+    k_rope = L.apply_rope(k_rope[:, None], cos[:, None], sin[:, None])
+    kv = jnp.einsum("bsl,lhk->bhsk", c_kv, p["wkv_b"].astype(xd))
+    k_nope = kv[..., :m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim:]
+    k_full = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(k_rope, (b, h, k1, m.qk_rope_head_dim))], -1)
+
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ps = cache_k.shape[2]
+    write_page, write_off = _spec_page_coords(block_tables, lengths, k1, ps)
+    q_t = jnp.swapaxes(q_full, 1, 2)                          # (B,K1,H,qk)
+    base = lengths.astype(jnp.int32)
+    if cache_scales is not None:
+        out, ck, cv, ks, vs = quant_spec_paged_decode_update_attend(
+            q_t, k_full, v, cache_k, cache_v,
+            cache_scales[0], cache_scales[1], block_tables, write_page,
+            write_off, base, scale=qk_dim ** -0.5, page_size=ps)
+        o = jnp.einsum("bshk,hkd->bsd", out, p["wo_mla"].astype(xd))
+        return o, ck, cv, ks, vs
+    out, ck, cv = spec_paged_decode_update_attend(
+        q_t, k_full, v, cache_k, cache_v, block_tables, write_page,
+        write_off, base, scale=qk_dim ** -0.5, page_size=ps)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo_mla"].astype(xd))
     return o, ck, cv

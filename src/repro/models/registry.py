@@ -37,6 +37,11 @@ class Model:
         return T.decode_step(params, self.cfg, caches, tokens, lengths,
                              block_tables=block_tables)
 
+    def spec_decode_step(self, params, caches, tokens, lengths,
+                         block_tables):
+        return T.spec_decode_step(params, self.cfg, caches, tokens, lengths,
+                                  block_tables)
+
     def init_decode_caches(self, batch: int, cache_len: int, *,
                            enc_len: int = 0):
         return T.init_decode_caches(self.cfg, batch, cache_len,

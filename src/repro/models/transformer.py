@@ -348,6 +348,56 @@ def apply_layer_decode(p, x, cache, cfg: ModelConfig, kind: str,
     return x, new_cache
 
 
+def apply_layer_spec_decode(p, x, cache, cfg: ModelConfig, kind: str,
+                            is_moe: bool, lengths, block_tables=None):
+    """Speculative K1-token layer step.  x: (B,K1,d).
+
+    Only paged global-attention caches (GQA or MLA) are supported —
+    recurrent/ring/cross layers have sequential state that a batched
+    verify cannot roll back, and the engine refuses spec mode for them
+    up front.  FFN/MoE/norm blocks are shape-generic over S=K1.
+    """
+    if kind != "global":
+        raise ValueError(
+            f"spec decode supports global-attention layers only, got {kind!r}")
+    if "kp" not in cache:
+        raise ValueError("spec decode requires paged caches")
+    h = L.apply_norm(p["ln1"], x, cfg)
+    new_cache = dict(cache)
+    quantized = "ks" in cache
+    scales = (cache["ks"], cache["vs"]) if quantized else None
+    if cfg.mla:
+        out = A.spec_decode_mla(p["attn"], h, cache["kp"], cache["vp"],
+                                lengths, cfg, block_tables=block_tables,
+                                cache_scales=scales)
+    else:
+        out = A.spec_decode_attn(p["attn"], h, cache["kp"], cache["vp"],
+                                 lengths, cfg, kind=kind,
+                                 theta=_theta(cfg, kind),
+                                 block_tables=block_tables,
+                                 cache_scales=scales)
+    if quantized:
+        y, ck, cv, ks, vs = out
+        new_cache["ks"], new_cache["vs"] = ks, vs
+    else:
+        y, ck, cv = out
+    new_cache["kp"], new_cache["vp"] = ck, cv
+    if cfg.use_post_norms:
+        y = L.apply_norm(p["post_ln1"], y, cfg)
+    x = x + y
+
+    if _has_ffn(cfg, kind, is_moe):
+        hh = L.apply_norm(p["ln2"], x, cfg)
+        if is_moe:
+            y, _ = M.apply_moe(p["moe"], hh, cfg)
+        else:
+            y = L.apply_mlp(p["mlp"], hh, cfg.mlp_activation)
+        if cfg.use_post_norms:
+            y = L.apply_norm(p["post_ln2"], y, cfg)
+        x = x + y
+    return x, new_cache
+
+
 # ---------------------------------------------------------------------------
 # segments (scan over stacked reps)
 # ---------------------------------------------------------------------------
@@ -413,6 +463,22 @@ def seg_apply_decode(seg_p, caches, x, cfg: ModelConfig, plan: SegmentPlan,
         for i, (kind, is_moe) in enumerate(plan.block):
             x_, nc = apply_layer_decode(lp[i], x_, cs[i], cfg, kind, is_moe,
                                         lengths, block_tables=block_tables)
+            new.append(nc)
+        return x_, tuple(new)
+
+    x, new_caches = jax.lax.scan(body, x, (seg_p, caches))
+    return x, new_caches
+
+
+def seg_apply_spec_decode(seg_p, caches, x, cfg: ModelConfig,
+                          plan: SegmentPlan, lengths, block_tables=None):
+    def body(x_, xs):
+        lp, cs = xs
+        new = []
+        for i, (kind, is_moe) in enumerate(plan.block):
+            x_, nc = apply_layer_spec_decode(lp[i], x_, cs[i], cfg, kind,
+                                             is_moe, lengths,
+                                             block_tables=block_tables)
             new.append(nc)
         return x_, tuple(new)
 
@@ -644,3 +710,21 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, lengths,
         new_caches.append(nc)
     logits = _logits(params, x, cfg)
     return logits[:, 0], new_caches
+
+
+def spec_decode_step(params, cfg: ModelConfig, caches, tokens, lengths,
+                     block_tables):
+    """Speculative verify step.  tokens: (B, K1) int32 — current token
+    plus K1-1 drafts; lengths: (B,) committed tokens already in cache.
+    Returns (logits (B, K1, V), new caches) — logits[:, i] conditions on
+    ``tokens[:, :i+1]``, so row i greedily argmaxes the token that
+    *should* follow draft i.  All K1 rows' K/V land in the paged cache;
+    the engine rolls back rejected rows via block-table truncation."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    new_caches = []
+    for plan, seg_p, c in zip(plan_segments(cfg), params["segments"], caches):
+        x, nc = seg_apply_spec_decode(seg_p, c, x, cfg, plan, lengths,
+                                      block_tables=block_tables)
+        new_caches.append(nc)
+    logits = _logits(params, x, cfg)
+    return logits, new_caches

@@ -1,4 +1,4 @@
 from repro.serve.engine import (Engine, ServeConfig, Request,
-                                PREEMPT_POLICIES,
+                                PREEMPT_POLICIES, SPEC_MODES,
                                 run_recording_finish_order)  # noqa: F401
 from repro.serve import paging  # noqa: F401

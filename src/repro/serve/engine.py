@@ -88,10 +88,20 @@ class ServeConfig:
     #   "shortest" preempt the slot with the fewest generated tokens
     #   "fail"     raise the allocator's actionable error (pre-PR-5)
     preempt_policy: str = "lru"
+    # Self-speculative decoding (paged + greedy only): "ngram" drafts
+    # spec_k tokens per step from the slot's own token history (prompt
+    # lookup — no draft model) and verifies all of them in ONE batched
+    # paged-decode call; rejected tokens roll back by truncating the
+    # block-table suffix.  "off" is the plain one-token step.
+    spec_mode: str = "off"
+    spec_k: int = 4
 
 
 #: Valid ServeConfig.preempt_policy values (launch/serve.py choices).
 PREEMPT_POLICIES = ("lru", "shortest", "fail")
+
+#: Valid ServeConfig.spec_mode values (launch/serve.py choices).
+SPEC_MODES = ("off", "ngram")
 
 
 @dataclasses.dataclass
@@ -117,6 +127,29 @@ class Engine:
         if sc.preempt_policy not in PREEMPT_POLICIES:
             raise ValueError(f"preempt_policy must be one of "
                              f"{PREEMPT_POLICIES}, got {sc.preempt_policy!r}")
+        if sc.spec_mode not in SPEC_MODES:
+            raise ValueError(f"spec_mode must be one of {SPEC_MODES}, "
+                             f"got {sc.spec_mode!r}")
+        self.spec = sc.spec_mode != "off"
+        if self.spec:
+            if not sc.paged:
+                raise ValueError("spec_mode requires paged=True (rollback "
+                                 "is block-table suffix truncation)")
+            if sc.temperature > 0.0:
+                raise ValueError(
+                    f"spec_mode={sc.spec_mode!r} requires greedy decoding: "
+                    f"verification accepts drafts by token identity with "
+                    f"the argmax chain, which sampling at temperature="
+                    f"{sc.temperature} breaks; set temperature=0.0")
+            if sc.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {sc.spec_k}")
+            kinds = set(model.cfg.layer_kinds())
+            if kinds - {"global"} or model.cfg.is_encoder_decoder:
+                raise ValueError(
+                    f"spec_mode supports attention-only decoder models "
+                    f"(global attention / MLA); layer kinds "
+                    f"{sorted(kinds)} include sequential state that a "
+                    f"batched verify cannot roll back")
 
         self.paged = sc.paged
         if sc.kv_dtype is not None and not sc.paged:
@@ -134,6 +167,9 @@ class Engine:
                                         paging.NULL_PAGE, np.int32)
             self._bt_dev = jnp.asarray(self.block_tables)
             self._bt_dirty = False
+            # pages ensured for each slot this step (page-count horizon
+            # the spec-step rollback truncates back from)
+            self._ensured = np.zeros((slots,), np.int64)
             self.caches = paging.init_paged_caches(
                 model, slots, sc.cache_len, self.page_size, total,
                 kv_spec=self.kv_spec)
@@ -146,6 +182,11 @@ class Engine:
         self.cur_tok = jnp.zeros((slots,), jnp.int32)
         self.n_out = jnp.zeros((slots,), jnp.int32)
         self.active_mask = jnp.zeros((slots,), jnp.bool_)
+        # per-slot committed token history (device): position p holds
+        # the token whose KV sits in cache row p.  Column cache_len is a
+        # dump row absorbing clipped writes at the cache edge.  Fed by
+        # admission and the spec step; only the n-gram proposer reads it.
+        self.tok_hist = jnp.zeros((slots, sc.cache_len + 1), jnp.int32)
         # host mirrors (admission control / page allocation only)
         self._len_h = np.zeros((slots,), np.int64)
         self._active_h = np.zeros((slots,), bool)
@@ -161,11 +202,17 @@ class Engine:
         self._admit_seq = np.zeros((slots,), np.int64)
         self._seq = 0
         self._key = jax.random.PRNGKey(sc.seed)
+        # speculative-decode observability (host counters)
+        self.spec_steps = 0
+        self.spec_emitted = 0
+        self.spec_rejections = 0
 
         self._prefill = jax.jit(
             lambda p, t: model.prefill(p, t, sc.cache_len, {}))
         self._step_fn = jax.jit(self._build_step())
         self._admit_fn = jax.jit(self._build_admit())
+        self._spec_fn = jax.jit(self._build_spec_step()) if self.spec \
+            else None
 
     # -- jitted bodies ----------------------------------------------------
     def _resolve_page_size(self) -> int:
@@ -207,10 +254,89 @@ class Engine:
 
         return step_fn
 
+    def _build_spec_step(self):
+        model, cache_len = self.model, self.sc.cache_len
+        slots, k = self.sc.slots, self.sc.spec_k
+        k1 = k + 1
+        w = cache_len + 1                      # tok_hist width (+dump col)
+
+        def propose(hist, cur_tok, lengths):
+            """N-gram prompt lookup: draft the k tokens that followed the
+            most recent prior occurrence of ``cur_tok`` in the slot's own
+            history, preferring occurrences whose *predecessor* also
+            matches (bigram beats unigram; latest occurrence breaks
+            ties).  No occurrence -> repeat ``cur_tok`` k times, which
+            captures the fixed-point attractors greedy decode falls
+            into.  ``hist`` already holds ``cur_tok`` at ``lengths``."""
+            idx = jnp.arange(w, dtype=jnp.int32)[None, :]
+            big = lengths[:, None]             # (B,1) match below L only
+            match = (idx < big) & (hist == cur_tok[:, None])
+            prev = jnp.concatenate(
+                [jnp.zeros_like(hist[:, :1]), hist[:, :-1]], axis=1)
+            ctx = jnp.take_along_axis(hist, jnp.maximum(big - 1, 0), axis=1)
+            bigram = (idx >= 1) & (big >= 1) & (prev == ctx)
+            score = jnp.where(match, 1 + bigram.astype(jnp.int32), 0)
+            rank = jnp.where(score > 0, score * w + idx, -1)
+            j = jnp.argmax(rank, axis=1).astype(jnp.int32)
+            found = jnp.max(rank, axis=1) >= 0
+            di = j[:, None] + 1 + jnp.arange(k, dtype=jnp.int32)[None, :]
+            d = jnp.take_along_axis(hist, jnp.minimum(di, w - 1), axis=1)
+            return jnp.where(found[:, None] & (di <= big), d,
+                             cur_tok[:, None])
+
+        def spec_step_fn(params, caches, tok_hist, cur_tok, lengths,
+                         active, n_out, eos_id, max_new, block_tables):
+            rows = jnp.arange(slots)
+            # commit cur_tok into the history at its cache position L
+            # *before* proposing, so drafts reading up to L are real
+            p0 = jnp.minimum(lengths, cache_len)
+            tok_hist = tok_hist.at[rows, p0].set(
+                jnp.where(active, cur_tok, tok_hist[rows, p0]))
+            drafts = propose(tok_hist, cur_tok, lengths)
+            window = jnp.concatenate([cur_tok[:, None], drafts], axis=1)
+            # draft positions L+1..L+k: accepted ones hold committed
+            # tokens (acceptance == identity with the argmax chain);
+            # rejected ones are stale but sit past the new length, and
+            # the proposer masks on idx < L, so they are never read
+            for t in range(1, k1):
+                pt = jnp.minimum(lengths + t, cache_len)
+                tok_hist = tok_hist.at[rows, pt].set(
+                    jnp.where(active, window[:, t], tok_hist[rows, pt]))
+
+            logits, new_caches = model.spec_decode_step(
+                params, caches, window, lengths, block_tables)
+            y = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B,K1)
+
+            # accept-longest-prefix: row t's output is emitted iff every
+            # earlier row was emitted, did not finish, and its draft
+            # matched the argmax chain (token identity == greedy parity)
+            t_idx = jnp.arange(k1, dtype=jnp.int32)[None, :]
+            done_t = (active[:, None]
+                      & ((n_out[:, None] + t_idx + 1 >= max_new)
+                         | (y == eos_id)
+                         | (lengths[:, None] + t_idx + 2 > cache_len)))
+            cont = (window[:, 1:] == y[:, :-1]) & ~done_t[:, :-1]
+            prefix = jnp.concatenate(
+                [active[:, None],
+                 active[:, None] & jnp.cumprod(
+                     cont.astype(jnp.int32), axis=1).astype(bool)], axis=1)
+            n_emit = prefix.sum(axis=1).astype(jnp.int32)
+            done = (prefix & done_t).any(axis=1)
+            new_active = active & ~done
+            new_lengths = lengths + n_emit
+            new_n_out = n_out + n_emit
+            last = jnp.take_along_axis(
+                y, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)[:, 0]
+            new_cur = jnp.where(active, last, cur_tok)
+            return (y, n_emit, new_lengths, new_active, new_n_out, done,
+                    new_caches, tok_hist, new_cur)
+
+        return spec_step_fn
+
     def _build_admit(self):
-        def admit_fn(caches, lengths, cur_tok, active, n_out, cache1,
-                     first_tok, slot_idx, plens, admit_active, n_out_vals,
-                     page_rows):
+        def admit_fn(caches, lengths, cur_tok, active, n_out, tok_hist,
+                     cache1, first_tok, slot_idx, plens, admit_active,
+                     n_out_vals, page_rows, hist_rows):
             caches = paging.scatter_prefill(caches, cache1, slot_idx,
                                             page_rows)
             lengths = lengths.at[slot_idx].set(plens)
@@ -220,7 +346,8 @@ class Engine:
             # re-admitted preempted requests resume their real count so
             # the jitted max_new check stays in lockstep with req.out
             n_out = n_out.at[slot_idx].set(n_out_vals)
-            return caches, lengths, cur_tok, active, n_out
+            tok_hist = tok_hist.at[slot_idx].set(hist_rows)
+            return caches, lengths, cur_tok, active, n_out, tok_hist
 
         return admit_fn
 
@@ -332,6 +459,14 @@ class Engine:
 
         k = len(reqs)
         toks = jnp.asarray([r.tokens + r.out for r in reqs], jnp.int32)
+        # token-history rows for the spec proposer: position p holds the
+        # token cached at row p.  Host-built at the fixed width W so the
+        # admit retrace stays keyed on group size only; the prefill
+        # sample is NOT included — it is cur_tok, and the spec step
+        # writes it at position plen itself.
+        hist_rows = np.zeros((k, self.sc.cache_len + 1), np.int32)
+        for i, r in enumerate(reqs):
+            hist_rows[i, :plen] = r.tokens + r.out
         logits, cache1 = self._prefill(self.params, toks)
         self._key, sub = jax.random.split(self._key)
         first = self._sample(logits, sub)
@@ -362,12 +497,12 @@ class Engine:
         n_out_vals = np.asarray([len(r.out) for r in reqs], np.int32)
 
         (self.caches, self.lengths, self.cur_tok, self.active_mask,
-         self.n_out) = self._admit_fn(
+         self.n_out, self.tok_hist) = self._admit_fn(
             self.caches, self.lengths, self.cur_tok, self.active_mask,
-            self.n_out, cache1, jnp.asarray(first_h),
+            self.n_out, self.tok_hist, cache1, jnp.asarray(first_h),
             jnp.asarray(slots, jnp.int32),
             jnp.full((k,), plen, jnp.int32), jnp.asarray(admit_active),
-            jnp.asarray(n_out_vals), page_rows)
+            jnp.asarray(n_out_vals), page_rows, jnp.asarray(hist_rows))
 
         for i, (req, slot) in enumerate(zip(reqs, slots)):
             self._seq += 1
@@ -442,9 +577,12 @@ class Engine:
         self.active_mask = self.active_mask.at[slot].set(False)
         self._release(slot)
 
-    def _ensure_pages(self):
-        """Allocate the page the next token of each active slot writes
-        into, when the slot is about to cross a page boundary.  An
+    def _ensure_pages(self, horizon: int = 1):
+        """Allocate the pages the next ``horizon`` tokens of each active
+        slot write into, when the slot is about to cross a page
+        boundary.  Plain decode ensures one token ahead; the spec step
+        ensures its whole ``spec_k + 1`` verify window (capped at the
+        cache) and rolls unused pages back afterwards.  An
         oversubscribed pool (explicit total_pages) can run dry here
         mid-decode: with ``preempt_policy="fail"`` that raises the
         allocator's actionable error; under ``"lru"``/``"shortest"`` a
@@ -454,24 +592,29 @@ class Engine:
             slot = int(slot)
             if not self._active_h[slot]:       # preempted earlier in loop
                 continue
-            j = int(self._len_h[slot]) // self.page_size
-            if self.block_tables[slot, j] != paging.NULL_PAGE:
-                continue
-            if self.sc.preempt_policy != "fail":
-                while self.allocator.available == 0:
-                    victim = self._select_victim(slot)
-                    if victim is None:
-                        # sole active sequence holding every usable page:
-                        # nothing to preempt, and it cannot continue
-                        raise RuntimeError(
-                            f"KV page pool exhausted: slot {slot} is the "
-                            f"only active sequence and already holds all "
-                            f"{self.allocator.total_pages - 1} usable "
-                            f"pages; raise ServeConfig.total_pages (or "
-                            f"lower cache_len)")
-                    self._preempt(victim)
-            self.block_tables[slot, j] = self.allocator.alloc()
-            self._bt_dirty = True
+            needed = paging.pages_per_slot(
+                min(int(self._len_h[slot]) + horizon, self.sc.cache_len),
+                self.page_size)
+            for j in range(needed):
+                if self.block_tables[slot, j] != paging.NULL_PAGE:
+                    continue
+                if self.sc.preempt_policy != "fail":
+                    while self.allocator.available == 0:
+                        victim = self._select_victim(slot)
+                        if victim is None:
+                            # sole active sequence holding every usable
+                            # page: nothing to preempt, cannot continue
+                            raise RuntimeError(
+                                f"KV page pool exhausted: slot {slot} is "
+                                f"the only active sequence and already "
+                                f"holds all "
+                                f"{self.allocator.total_pages - 1} usable "
+                                f"pages; raise ServeConfig.total_pages "
+                                f"(or lower cache_len)")
+                        self._preempt(victim)
+                self.block_tables[slot, j] = self.allocator.alloc()
+                self._bt_dirty = True
+            self._ensured[slot] = needed
 
     # -- main loop ---------------------------------------------------------
     def step(self) -> bool:
@@ -479,6 +622,8 @@ class Engine:
         self._admit()
         if not self._active_h.any():
             return False
+        if self.spec:
+            return self._spec_step()
         if self.paged:
             self._ensure_pages()
             if self._bt_dirty:        # re-upload only when tables changed
@@ -506,6 +651,52 @@ class Engine:
                 self._release(slot)
         return True
 
+    def _spec_step(self) -> bool:
+        """One speculative verify step for all active slots: ensure the
+        whole window's pages, run the jitted draft+verify+accept step,
+        then commit accepted tokens and roll rejected pages back by
+        truncating each block-table suffix (still exactly ONE device_get
+        per step).  Invariant restored at every step boundary: in_use ==
+        sum over active slots of pages_per_slot(length)."""
+        k1 = self.sc.spec_k + 1
+        self._ensure_pages(horizon=k1)
+        if self._bt_dirty:
+            self._bt_dev = jnp.asarray(self.block_tables)
+            self._bt_dirty = False
+        eos = jnp.int32(self.sc.eos_id if self.sc.eos_id is not None else -1)
+        max_new = jnp.int32(self.sc.max_new_tokens)
+        (y, n_emit, self.lengths, self.active_mask, self.n_out, done,
+         self.caches, self.tok_hist, self.cur_tok) = self._spec_fn(
+            self.params, self.caches, self.tok_hist, self.cur_tok,
+            self.lengths, self.active_mask, self.n_out, eos, max_new,
+            self._bt_dev)
+        yh, ne, dn = _device_get((y, n_emit, done))  # THE one sync per step
+        yh, ne, dn = np.asarray(yh), np.asarray(ne), np.asarray(dn)
+        self.spec_steps += 1
+        for slot in np.nonzero(self._active_h)[0]:
+            slot = int(slot)
+            req = self.active[slot]
+            m = int(ne[slot])
+            req.out.extend(int(t) for t in yh[slot, :m])
+            self._len_h[slot] += m
+            self.spec_emitted += m
+            if dn[slot]:
+                req.done = True
+                self._release(slot)     # reclaims the whole row, tail incl.
+            else:
+                if m < k1:
+                    self.spec_rejections += 1
+                # rollback: drop the rejected tail's pages; rejected rows
+                # inside kept pages sit past the new length and are
+                # masked by every later read
+                keep = paging.pages_per_slot(int(self._len_h[slot]),
+                                             self.page_size)
+                if paging.truncate_suffix(self.allocator,
+                                          self.block_tables[slot], keep,
+                                          int(self._ensured[slot])):
+                    self._bt_dirty = True
+        return True
+
     def run_to_completion(self, requests: List[Request],
                           max_steps: int = 10_000) -> List[Request]:
         for r in requests:
@@ -522,6 +713,10 @@ class Engine:
              "queued_waiting": len(self.queue)}
         if self.paged:
             d.update(self.allocator.pressure())
+        if self.spec:
+            d.update({"spec_steps": self.spec_steps,
+                      "spec_emitted": self.spec_emitted,
+                      "spec_rejections": self.spec_rejections})
         return d
 
 

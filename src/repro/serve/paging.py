@@ -148,6 +148,37 @@ def pages_per_slot(cache_len: int, page_size: int) -> int:
     return -(-cache_len // page_size)
 
 
+def truncate_suffix(allocator: PageAllocator, table_row, keep: int,
+                    upto: Optional[int] = None) -> int:
+    """Free a block-table row's page suffix ``[keep, upto)`` back to the
+    pool and reset those entries to ``NULL_PAGE``, in place.
+
+    The speculative-decode rollback primitive: after a verify step
+    accepts ``n`` of ``k`` drafted tokens, the pages ensured for the
+    rejected tail are exactly ``row[keep:upto]`` with ``keep =
+    pages_per_slot(new_length)`` and ``upto`` the ensured-horizon page
+    count — rejected KV rows inside *kept* pages need no work (they sit
+    past ``lengths`` and every later read masks on length).
+
+    Strict like ``PageAllocator.free``: every entry in the suffix must
+    be a real allocated page.  A ``NULL_PAGE`` inside it means the
+    suffix was already truncated (or never ensured) — silently skipping
+    would hide an accounting bug, so it raises.  Returns the number of
+    pages freed (0 for an empty suffix).
+    """
+    tail = table_row[keep:upto]
+    if len(tail) == 0:
+        return 0
+    if any(int(p) == NULL_PAGE for p in tail):
+        raise ValueError(
+            f"truncate_suffix: pages [{keep}:{upto}) contain NULL_PAGE "
+            f"entries — suffix already truncated or never allocated "
+            f"(row={list(int(p) for p in table_row)})")
+    allocator.free([int(p) for p in tail])
+    table_row[keep:upto] = NULL_PAGE
+    return len(tail)
+
+
 def _is_paged_leaf_dict(c, cache_len: int) -> bool:
     return ("k" in c and hasattr(c["k"], "ndim") and c["k"].ndim == 5
             and c["k"].shape[3] == cache_len)

@@ -40,9 +40,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map
 from repro.core.runtime import runtime
-from repro.kernels.decode_attention.ops import (decode_attention,
-                                                paged_decode_attention,
-                                                quant_paged_decode_attention)
+from repro.kernels.decode_attention.ops import (
+    decode_attention, paged_decode_attention, quant_paged_decode_attention,
+    quant_spec_paged_decode_attention, spec_paged_decode_attention)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.mamba_scan.ops import mamba_scan
 from repro.kernels.mlstm_scan.ops import mlstm_scan
@@ -53,6 +53,8 @@ __all__ = [
     "sharded_flash_attention", "sharded_decode_attention",
     "sharded_paged_decode_update_attend",
     "sharded_quant_paged_decode_update_attend",
+    "sharded_spec_paged_decode_update_attend",
+    "sharded_quant_spec_paged_decode_update_attend",
     "sharded_mamba_scan", "sharded_mlstm_scan", "sharded_rmsnorm",
     "maybe_mesh", "shard_map",
 ]
@@ -392,6 +394,146 @@ def sharded_quant_paged_decode_update_attend(q, k_new, v_new,
         out_specs=(qs, ps_, ps_, ss_, ss_), check_vma=False)(
         q, k_new, v_new, k_pages, v_pages, k_scales, v_scales,
         block_tables, write_page, write_off, eff_len)
+
+
+def sharded_spec_paged_decode_update_attend(q, k_new, v_new, k_pages,
+                                            v_pages, block_tables,
+                                            write_pages, write_offs,
+                                            base_len, *,
+                                            window: Optional[int] = None,
+                                            softcap: Optional[float] = None,
+                                            scale: Optional[float] = None,
+                                            page_size: Optional[int] = None,
+                                            block_kv: Optional[int] = None):
+    """Fused speculation-window page write + multi-query paged verify.
+
+    q: (B,K1,Hq,D) — the committed token plus k drafts per slot;
+    k_new/v_new: (B,Hkv,K1,D) rope'd window K/V; pools: (Hkv,P,ps,D);
+    block_tables: (B,T) int32; write_pages/write_offs: (B,K1) page and
+    in-page row per window position (trash-redirected to null page 0
+    past the table's reach); base_len: (B,) PRE-speculation prefix.
+    Returns (out (B,K1,Hq,Dv), new k_pages, new v_pages).
+
+    All K1 rows scatter in one indexed write, then one spec-kernel call
+    verifies every position — the §Perf-B.1 rule (pool writes INSIDE
+    the shard_map region) and the paged wrapper's layout policy apply
+    unchanged (head-sharded when divisible, else replicated; no batch
+    sharding — the pool has no batch dim).
+    """
+    mesh = maybe_mesh()
+    b, hq = q.shape[0], q.shape[2]
+    hkv = k_pages.shape[0]
+    kw = dict(window=window, softcap=softcap, scale=scale,
+              page_size=page_size, block_kv=block_kv)
+
+    def update(kp, vp, kn, vn, pages, offs):
+        # (B,K1)-shaped page/off index arrays scatter all window rows
+        # at once; positions parked on null page 0 land in trash.
+        kn = jnp.swapaxes(kn, 0, 1).astype(kp.dtype)      # (Hkv, B, K1, D)
+        vn = jnp.swapaxes(vn, 0, 1).astype(vp.dtype)
+        kp = kp.at[:, pages, offs].set(kn)
+        vp = vp.at[:, pages, offs].set(vn)
+        return kp, vp
+
+    def body(q_, kn, vn, kp, vp, bt, pages, offs, ln):
+        kp, vp = update(kp, vp, kn, vn, pages, offs)
+        return (spec_paged_decode_attention(q_, kp, vp, bt, ln, **kw),
+                kp, vp)
+
+    if not _use_wrappers(mesh):
+        return body(q, k_new, v_new, k_pages, v_pages, block_tables,
+                    write_pages, write_offs, base_len)
+
+    dp = None                      # no batch sharding: pool has no batch dim
+    tp = _tp(mesh)
+    if hq % tp == 0 and hkv % tp == 0:
+        qs, ns_ = P(dp, None, "model", None), P(dp, "model", None, None)
+        ps_ = P("model", None, None, None)
+    else:
+        qs, ns_ = P(dp, None, None, None), P(dp, None, None, None)
+        ps_ = P(None, None, None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(qs, ns_, ns_, ps_, ps_, P(dp, None), P(dp, None),
+                  P(dp, None), P(dp)),
+        out_specs=(qs, ps_, ps_), check_vma=False)(
+        q, k_new, v_new, k_pages, v_pages, block_tables,
+        write_pages, write_offs, base_len)
+
+
+def sharded_quant_spec_paged_decode_update_attend(
+        q, k_new, v_new, k_pages, v_pages, k_scales, v_scales,
+        block_tables, write_pages, write_offs, base_len, *,
+        window: Optional[int] = None, softcap: Optional[float] = None,
+        scale: Optional[float] = None, page_size: Optional[int] = None,
+        block_kv: Optional[int] = None):
+    """Quantized-pool variant of the speculative update+attend.
+
+    Same layouts as the bf16 spec wrapper plus (Hkv,P) f32 scale pools.
+    Returns (out (B,K1,Hq,Dv), kp, vp, ks, vs).
+
+    The window's rows are written by a static K1-step loop over the
+    single-row re-quantizing update (gather page → dequant → splice →
+    zero stale tail → re-absmax → requant): K1 is small, the loop order
+    matches token order so each row sees every earlier window row
+    already spliced, and the PR 4 write-path invariants (exact requant
+    under an unchanged scale, bounded error on absmax growth) hold
+    per row exactly as in plain decode.
+    """
+    from repro.quant import quantize_absmax
+    mesh = maybe_mesh()
+    b, k1, hq = q.shape[0], q.shape[1], q.shape[2]
+    hkv = k_pages.shape[0]
+    ps = k_pages.shape[2]
+    kw = dict(window=window, softcap=softcap, scale=scale,
+              page_size=page_size, block_kv=block_kv)
+
+    def update_row(pool, scales, new_row, page, off):
+        # identical to the single-token quant write (PR 4)
+        new_row = jnp.swapaxes(new_row, 0, 1).astype(jnp.float32)  # (H,B,D)
+        pg = pool[:, page]                                  # (H,B,ps,D)
+        sc = scales[:, page]                                # (H,B)
+        pgf = pg.astype(jnp.float32) * sc[:, :, None, None]
+        rows = jnp.arange(ps)[None, None, :, None]
+        offb = off[None, :, None, None]
+        pgf = jnp.where(rows == offb, new_row[:, :, None, :],
+                        jnp.where(rows < offb, pgf, 0.0))
+        q_pg, sc_new = quantize_absmax(pgf, dtype=pool.dtype,
+                                       axis=(-2, -1))
+        return (pool.at[:, page].set(q_pg),
+                scales.at[:, page].set(sc_new.astype(scales.dtype)))
+
+    def body(q_, kn, vn, kp, vp, ks, vs, bt, pages, offs, ln):
+        for i in range(k1):                # static: K1 is small
+            kp, ks = update_row(kp, ks, kn[:, :, i], pages[:, i],
+                                offs[:, i])
+            vp, vs = update_row(vp, vs, vn[:, :, i], pages[:, i],
+                                offs[:, i])
+        out = quant_spec_paged_decode_attention(q_, kp, vp, ks, vs, bt,
+                                                ln, **kw)
+        return out, kp, vp, ks, vs
+
+    if not _use_wrappers(mesh):
+        return body(q, k_new, v_new, k_pages, v_pages, k_scales, v_scales,
+                    block_tables, write_pages, write_offs, base_len)
+
+    dp = None
+    tp = _tp(mesh)
+    if hq % tp == 0 and hkv % tp == 0:
+        qs, ns_ = P(dp, None, "model", None), P(dp, "model", None, None)
+        ps_ = P("model", None, None, None)
+        ss_ = P("model", None)
+    else:
+        qs, ns_ = P(dp, None, None, None), P(dp, None, None, None)
+        ps_ = P(None, None, None, None)
+        ss_ = P(None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(qs, ns_, ns_, ps_, ps_, ss_, ss_, P(dp, None),
+                  P(dp, None), P(dp, None), P(dp)),
+        out_specs=(qs, ps_, ps_, ss_, ss_), check_vma=False)(
+        q, k_new, v_new, k_pages, v_pages, k_scales, v_scales,
+        block_tables, write_pages, write_offs, base_len)
 
 
 def sharded_decode_attention(q, k_cache, v_cache, lengths, *,

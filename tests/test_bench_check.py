@@ -28,6 +28,11 @@ def _valid_doc():
                                  "budget_frac": 0.5, "total_pages": 5,
                                  "completion_rate": 1.0, "preemptions": 3,
                                  "tok_per_s": 980.0}]},
+        "spec": {"results": [{"workload": "repeat", "mode": "spec",
+                              "spec_k": 4, "tok_per_s": 1800.0,
+                              "tok_per_s_per_req": 900.0,
+                              "accepted_tokens_per_step": 2.7,
+                              "speedup_vs_paged": 2.3}]},
     }
 
 

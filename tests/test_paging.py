@@ -140,6 +140,46 @@ def test_allocator_reclaim_filters_null_strict_otherwise():
     assert a.reclaim([paging.NULL_PAGE] * 4) == 0   # all-null row is a no-op
 
 
+def test_truncate_suffix_frees_exact_tail():
+    """Speculative rollback: truncating a block-table suffix frees
+    exactly the tail pages and returns the pool to the pre-speculation
+    watermark."""
+    a = paging.PageAllocator(10)
+    pages = a.alloc_many(5)
+    row = np.array(pages + [paging.NULL_PAGE], np.int32)
+    before = a.pressure()["in_use"]
+    assert paging.truncate_suffix(a, row, keep=2, upto=5) == 3
+    assert a.pressure()["in_use"] == before - 3
+    # kept prefix untouched, freed tail nulled out
+    assert list(row[:2]) == pages[:2]
+    assert all(int(p) == paging.NULL_PAGE for p in row[2:])
+    # the freed pages are allocatable again
+    assert set(a.alloc_many(3)) == set(pages[2:])
+
+
+def test_truncate_suffix_empty_tail_is_noop():
+    a = paging.PageAllocator(8)
+    pages = a.alloc_many(3)
+    row = np.array(pages, np.int32)
+    assert paging.truncate_suffix(a, row, keep=3, upto=3) == 0
+    assert paging.truncate_suffix(a, row, keep=3) == 0
+    assert a.pressure()["in_use"] == 3
+
+
+def test_truncate_suffix_double_truncation_raises():
+    """Truncating the same suffix twice means the engine lost track of
+    the ensured-page watermark — the NULL entries must be rejected, not
+    silently skipped (that would mask a double free elsewhere)."""
+    a = paging.PageAllocator(8)
+    pages = a.alloc_many(4)
+    row = np.array(pages, np.int32)
+    paging.truncate_suffix(a, row, keep=1, upto=4)
+    with pytest.raises(ValueError, match="truncate_suffix"):
+        paging.truncate_suffix(a, row, keep=1, upto=4)
+    # pool state untouched by the failed call
+    assert a.pressure()["in_use"] == 1
+
+
 # --------------------------------------------------------- paged kernel ----
 
 def _paged_fixture(b=2, hq=4, hkv=2, d=32, pages_per_slot=3, ps=32, seed=0):

@@ -439,3 +439,113 @@ def test_paged_long_decode_crosses_page_boundaries():
         outs[paged] = req.out
     assert len(outs[True]) == 24
     assert outs[True] == outs[False]
+
+
+# ----------------------------------------------------------- speculative ----
+
+def _spec_engine(spec_k=4, **kw):
+    return _engine(slots=2, cache_len=32, max_new=12, paged=True,
+                   page_size=8, spec_mode="ngram", spec_k=spec_k, **kw)
+
+
+def _spec_requests(n=4):
+    # mixed lengths so admission groups differ and drafts cross pages
+    return [Request(rid=i, tokens=[1 + i] * (3 + i)) for i in range(n)]
+
+
+def test_spec_matches_plain_paged_greedy():
+    """The speculative contract: accepted drafts equal the tokens the
+    plain argmax chain would emit, so outputs are token-identical for
+    any k — with real rejections exercised, not just lucky accepts."""
+    ref_engine, *_ = _engine(slots=2, cache_len=32, max_new=12,
+                             paged=True, page_size=8)
+    ref = _spec_requests()
+    ref_engine.run_to_completion(ref)
+    want = [r.out for r in ref]
+
+    for k in (1, 2, 4):
+        engine, *_ = _spec_engine(spec_k=k)
+        reqs = _spec_requests()
+        engine.run_to_completion(reqs)
+        assert all(r.done for r in reqs)
+        assert [r.out for r in reqs] == want, k
+        assert engine.spec_rejections > 0, f"k={k} never rejected a draft"
+        st = engine.stats()
+        assert st["available"] == st["total_pages"] - 1   # no leaks
+
+
+def test_spec_rollback_restores_page_watermark():
+    """After every speculative step the pool must hold exactly the
+    pages the accepted lengths need: rejected drafts' pages are rolled
+    back by block-table suffix truncation, never leaked."""
+    from repro.serve import paging
+    engine, *_ = _spec_engine(spec_k=4)
+    for r in _spec_requests():
+        engine.submit(r)
+    engine._admit()
+    steps = 0
+    while engine.step():
+        steps += 1
+        want = sum(paging.pages_per_slot(int(engine._len_h[s]),
+                                         engine.page_size)
+                   for s in range(engine.sc.slots)
+                   if engine.active[s] is not None)
+        assert engine.allocator.pressure()["in_use"] == want, steps
+        engine._admit()
+    assert engine.spec_rejections > 0
+    assert engine.allocator.pressure()["in_use"] == 0
+
+
+def test_spec_single_device_get_per_step():
+    """The k+1-token verification step must keep the engine's one-sync
+    contract: draft, verify, accept, and rollback planning all ride a
+    single device_get."""
+    engine, *_ = _spec_engine(spec_k=4)
+    for r in _spec_requests():
+        engine.submit(r)
+    engine._admit()
+
+    calls = []
+    real = engine_mod._device_get
+    engine_mod._device_get = lambda x: (calls.append(1) or real(x))
+    try:
+        assert engine.step()
+    finally:
+        engine_mod._device_get = real
+    assert len(calls) == 1, f"{len(calls)} host syncs in one spec step"
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="temperature"):
+        _spec_engine(temperature=0.8)
+    with pytest.raises(ValueError, match="paged"):
+        _engine(spec_mode="ngram")
+    with pytest.raises(ValueError, match="spec_mode"):
+        _engine(paged=True, spec_mode="draft-model")
+    with pytest.raises(ValueError, match="spec_k"):
+        _spec_engine(spec_k=0)
+
+
+def test_preempt_mid_speculation_checkpoints_accepted_prefix():
+    """Preemption composing with speculation: a victim checkpointed
+    between speculative steps must resume from its *accepted* prefix
+    only (rejected drafts were already rolled back), so an
+    oversubscribed spec run stays token-identical to the unconstrained
+    plain paged run."""
+    ref_engine, *_ = _engine(slots=2, cache_len=32, max_new=24,
+                             paged=True, page_size=8)
+    ref = _oversub_requests()
+    ref_engine.run_to_completion(ref)
+    want = [r.out for r in ref]
+
+    engine, *_ = _engine(slots=2, cache_len=32, max_new=24, paged=True,
+                         page_size=8, total_pages=5, preempt_policy="lru",
+                         spec_mode="ngram", spec_k=4)
+    reqs = _oversub_requests()
+    engine.run_to_completion(reqs)
+    assert all(r.done for r in reqs)
+    assert [r.out for r in reqs] == want
+    assert engine.preemptions > 0, "spec oversub run never preempted"
+    assert engine.spec_rejections > 0
+    st = engine.stats()
+    assert st["available"] == st["total_pages"] - 1
