@@ -37,6 +37,7 @@ def main() -> None:
     from benchmarks.autotune import bench_json_path, format_rows
     from benchmarks.serve_bench import (format_kv_quant_rows,
                                         format_oversub_rows,
+                                        format_resilience_rows,
                                         format_serving_rows,
                                         format_spec_rows)
     path = bench_json_path()
@@ -55,7 +56,10 @@ def main() -> None:
              "python -m benchmarks.serve_bench --update-bench"),
             ("Speculative decode", format_spec_rows,
              "python -m benchmarks.serve_bench --update-bench "
-             "--section spec")):
+             "--section spec"),
+            ("Resilience", format_resilience_rows,
+             "python -m benchmarks.serve_bench --update-bench "
+             "--section resilience")):
         print()
         print("=" * 72)
         print(f"## {title} (from BENCH_autotune.json)")

@@ -16,10 +16,12 @@ regime CI can check):
 
   python -m benchmarks.serve_bench                 # print table
   python -m benchmarks.serve_bench --update-bench  # + merge the rows
-      into BENCH_autotune.json under "serving", "kv_quant", "oversub"
-      and "spec" (the ROADMAP perf trajectory; benchmarks/autotune.py
-      preserves every foreign section); --section <name> (repeatable)
-      refreshes only the named section(s), preserving the rest
+      into BENCH_autotune.json under "serving", "kv_quant", "oversub",
+      "spec" and "resilience" (the ROADMAP perf trajectory;
+      benchmarks/autotune.py preserves every foreign section);
+      --section <name> (repeatable) refreshes only the named
+      section(s), preserving the rest; an unknown name exits non-zero
+      listing the valid ones
   python -m benchmarks.serve_bench --smoke         # tiny paged-vs-slot
       parity gate for scripts/check.sh
   python -m benchmarks.serve_bench --quant-smoke   # quantized-vs-bf16
@@ -28,6 +30,10 @@ regime CI can check):
       unpreempted greedy output parity gate for scripts/check.sh
   python -m benchmarks.serve_bench --spec-smoke    # speculative-vs-
       plain greedy parity + rollback accounting gate for check.sh
+  python -m benchmarks.serve_bench --chaos-smoke   # fault-injection
+      recovery gate: all four fault classes detected + recovered,
+      token-identical to the un-faulted greedy run, paging.audit()
+      after every step (serve/faults.py, DESIGN.md §14)
 
 The ``kv_quant`` section measures the dtype axis of the paged pool
 (repro.quant): per KV dtype, end-to-end decode tokens/sec and the max
@@ -50,6 +56,12 @@ The ``spec`` section measures self-speculative decoding (ServeConfig
 tok/s per concurrent request vs the plain paged engine, on a
 repeat-heavy workload (speculation's target regime) and a uniform-
 random one (reported honestly alongside).
+
+The ``resilience`` section measures the fault plane (serve/faults.py)
+at injected fault rates 0% / 1% / 5%: completion rate, recoveries,
+quarantined pages, watchdog trips and decode tok/s with the full
+detection plane armed (NaN/Inf sentinel, watchdog, per-step audit) —
+the 0% row is the resilience machinery's overhead baseline.
 
 Smoke modes are CI gates and must never write outside a temp dir —
 only ``--update-bench`` writes at all, and every ``--*-smoke`` run is
@@ -210,6 +222,22 @@ def _repeat_requests(cfg, n, plen, seed=0, motif=4):
         m = rng.integers(0, cfg.vocab_size, size=motif).tolist()
         out.append(Request(rid=i, tokens=(m * (plen // motif + 1))[:plen]))
     return out
+
+
+def _run_audited(eng, reqs, max_steps=10_000):
+    """run_to_completion with ``paging.audit()`` checked after every
+    step: the un-faulted smoke paths must hold the same allocator /
+    block-table invariants the chaos gate judges the faulted ones by
+    (catches drift in the happy paths too)."""
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(max_steps):
+        busy = eng.step()
+        errs = eng.audit()
+        assert not errs, f"paging.audit() violations: {errs}"
+        if not busy and not eng.queue and not eng.requeue:
+            break
+    return reqs
 
 
 def _throughput(engine, cfg, n, plen, make=_requests) -> Dict[str, Any]:
@@ -512,8 +540,7 @@ def spec_smoke() -> None:
     def run(**kw):
         eng, cfg = build(True, layers=1, slots=2, cache_len=32,
                          max_new=12, **kw)
-        reqs = [r for r in _requests(cfg, 4, 6)]
-        eng.run_to_completion(reqs)
+        reqs = _run_audited(eng, _requests(cfg, 4, 6))
         assert all(r.done for r in reqs), "requests lost under speculation"
         return eng, [r.out for r in reqs]
 
@@ -551,8 +578,7 @@ def oversub_smoke() -> None:
     half = 1 + need_pages // 2
 
     def run(eng):
-        reqs = _requests(cfg, 4, 6)
-        eng.run_to_completion(reqs)
+        reqs = _run_audited(eng, _requests(cfg, 4, 6))
         assert all(r.done for r in reqs), "requests lost under preemption"
         return [r.out for r in reqs]
 
@@ -603,6 +629,7 @@ def quant_smoke() -> None:
         reqs = _requests(cfg, 4, 6)
         orders[dtype] = run_recording_finish_order(eng, reqs)
         assert all(r.done for r in reqs)
+        assert eng.audit() == [], f"paging.audit() after drain: {eng.audit()}"
         lens[dtype] = [len(r.out) for r in reqs]
         bps[dtype] = _paged_bytes_per_slot(eng)
     assert orders["int8"] == orders["bf16"], \
@@ -618,13 +645,193 @@ def quant_smoke() -> None:
           f"kernel err within tol for {_kv_dtypes_here()}")
 
 
+# ---------------------------------------------------------------------------
+# resilience: the fault-injection / recovery axis (serve/faults.py)
+# ---------------------------------------------------------------------------
+
+#: Injected per-step fault rates the resilience bench sweeps.  0.0 is
+#: the resilience machinery's overhead baseline (sentinel + watchdog
+#: armed, nothing ever fires).
+RESILIENCE_FAULT_RATES = (0.0, 0.01, 0.05)
+
+
+def _resilience_harness(*, layers=1, slots=2, cache_len=32, max_new=16,
+                        page_size=4, max_retries=8, retry_backoff=1):
+    """One model shared by the resilience engines; returns (cfg, mk)."""
+    from repro.configs.smoke import smoke_config
+    from repro.models.registry import build_model
+    from repro.serve import Engine, ServeConfig
+    cfg = smoke_config("granite-8b", num_layers=layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def mk(plan=None, **kw):
+        base = dict(slots=slots, cache_len=cache_len,
+                    max_new_tokens=max_new, paged=True,
+                    page_size=page_size, max_retries=max_retries,
+                    retry_backoff=retry_backoff)
+        base.update(kw)
+        return Engine(model, params, ServeConfig(**base), fault_plan=plan)
+
+    return cfg, mk
+
+
+def _drive_faulted(eng, reqs, *, watchdog_s=None, max_steps=2_000):
+    """Drive a (possibly faulted) engine to drain, auditing after every
+    step.  The watchdog is attached *after* the first step so jit
+    compile time cannot trip it spuriously (the engine reads the
+    mutable ``watchdog_s`` attribute each step for exactly this)."""
+    for r in reqs:
+        eng.submit(r)
+    for i in range(max_steps):
+        busy = eng.step()
+        if i == 0:
+            eng.watchdog_s = watchdog_s
+        errs = eng.audit()
+        assert not errs, f"paging.audit() violations: {errs}"
+        if not busy and not eng.queue and not eng.requeue:
+            return reqs
+    raise AssertionError(
+        f"faulted engine did not drain within {max_steps} steps "
+        f"(hang past the watchdog): {eng.stats()}")
+
+
+def resilience_payload(*, layers=1, slots=2, cache_len=32, max_new=16,
+                       prompts=8, prompt_len=6,
+                       page_size=4) -> Dict[str, Any]:
+    """Per-fault-rate rows: completion rate, recoveries, quarantined
+    pages and decode tok/s with the full detection plane armed
+    (sentinel + watchdog + per-step audit).  The 0.0 row is the
+    overhead baseline."""
+    from repro.serve import FaultPlan
+    cfg, mk = _resilience_harness(layers=layers, slots=slots,
+                                  cache_len=cache_len, max_new=max_new,
+                                  page_size=page_size)
+    rows = []
+    for rate in RESILIENCE_FAULT_RATES:
+        plan = FaultPlan(rate=rate, seed=11, stall_s=0.4) if rate else None
+        eng = mk(plan=plan)
+        # warm (compile) with the plan's early steps burning on a throw-
+        # away stream, then measure the same shape distribution
+        _drive_faulted(eng, _requests(cfg, prompts, prompt_len, seed=99),
+                       watchdog_s=0.25 if plan else None)
+        st0 = eng.stats()
+        reqs = _requests(cfg, prompts, prompt_len)
+        t0 = time.perf_counter()
+        _drive_faulted(eng, reqs, watchdog_s=0.25 if plan else None)
+        dt = time.perf_counter() - t0
+        st = eng.stats()
+        done = sum(r.done for r in reqs)
+        toks = sum(len(r.out) for r in reqs)
+        row = {"fault_rate": rate,
+               "completed": done, "submitted": len(reqs),
+               "completion_rate": round(done / len(reqs), 3),
+               "recoveries": (st["recoveries_total"]
+                              - st0["recoveries_total"]),
+               "failed": (st["failed_requests"] - st0["failed_requests"]),
+               "quarantined": st["quarantined"],
+               "watchdog_trips": st["watchdog_trips"],
+               "new_tokens": toks, "wall_s": round(dt, 3),
+               "tok_per_s": round(toks / dt, 2)}
+        rows.append(row)
+        print(f"rate {rate:>5.2%}  {row['completion_rate']:>5.0%} done  "
+              f"{row['recoveries']:>3} recoveries  "
+              f"{row['quarantined']:>3} quarantined  "
+              f"{row['tok_per_s']:>8.2f} tok/s")
+    return {
+        "bench": "resilience",
+        "generated_by": "python -m benchmarks.serve_bench --update-bench "
+                        "--section resilience",
+        "arch": "interpret",
+        "config": {"slots": slots, "cache_len": cache_len,
+                   "page_size": page_size, "prompts": prompts,
+                   "prompt_len": prompt_len, "max_new": max_new,
+                   "layers": layers, "max_retries": 8,
+                   "watchdog_s": 0.25, "model": "granite-8b smoke"},
+        "results": rows,
+    }
+
+
+def chaos_smoke() -> None:
+    """check.sh gate: the resilience acceptance contract, end to end.
+
+    A 5% random fault rate *plus* one scheduled injection per fault
+    class (coverage cannot depend on how the dice land) against the
+    un-faulted greedy bf16 reference:
+
+      * every submitted request reaches ``done`` or the explicit
+        ``failed`` status — no crash, no hang past the watchdog;
+      * every recovered request is token-identical to the reference;
+      * >= 1 real recovery happened for each of the four fault classes;
+      * ``paging.audit()`` holds after every step;
+      * the pool drains clean (available == total - 1 - quarantined).
+
+    Plus two ladder rungs the main run cannot pin down determini-
+    stically: repeated spec-step faults degrade the request to plain
+    decoding (spec_disabled) with outputs still token-identical, and an
+    exhausted retry budget yields ``failed`` instead of raising.
+    """
+    from repro.serve import FAULT_KINDS, FaultPlan
+    cfg, mk = _resilience_harness()
+    n, plen = 5, 6
+
+    refs = _run_audited(mk(), _requests(cfg, n, plen))
+    want = {r.rid: list(r.out) for r in refs}
+
+    plan = (FaultPlan(rate=0.05, seed=7, stall_s=0.6)
+            .at(3, "nan_logits").at(6, "kv_corrupt")
+            .at(9, "alloc_fail").at(12, "stall"))
+    eng = mk(plan=plan)
+    reqs = _drive_faulted(eng, _requests(cfg, n, plen), watchdog_s=0.3)
+    st = eng.stats()
+
+    assert all(r.status in ("done", "failed") for r in reqs), \
+        f"requests stuck pending: {[(r.rid, r.status) for r in reqs]}"
+    mismatch = [(r.rid, r.out, want[r.rid]) for r in reqs
+                if r.done and list(r.out) != want[r.rid]]
+    assert not mismatch, \
+        f"recovered requests diverged from the un-faulted run: {mismatch}"
+    missing = [k for k in FAULT_KINDS if st["recoveries"][k] < 1]
+    assert not missing, \
+        f"no recovery exercised for fault class(es) {missing}: " \
+        f"{st['recoveries']} (injected: {st['faults_injected']})"
+    recovered = [r for r in reqs if r.done and r.retries > 0]
+    assert recovered, f"no request actually went down the ladder: {st}"
+    assert st["available"] == st["total_pages"] - 1 - st["quarantined"], \
+        f"pool did not drain clean: {st}"
+
+    # degrade rung: two spec-step faults pin the request to plain decode
+    spec_want_eng = mk(spec_mode="ngram", spec_k=3)
+    spec_refs = _run_audited(spec_want_eng, _requests(cfg, 2, plen))
+    spec_plan = FaultPlan().at(2, "nan_logits").at(3, "nan_logits")
+    spec_eng = mk(plan=spec_plan, spec_mode="ngram", spec_k=3,
+                  spec_disable_after=2)
+    spec_reqs = _drive_faulted(spec_eng, _requests(cfg, 2, plen))
+    assert any(r.spec_disabled for r in spec_reqs), \
+        "repeated spec-step faults never disabled drafting"
+    assert ([r.out for r in spec_reqs] == [r.out for r in spec_refs]), \
+        "degraded spec outputs diverged from the un-faulted spec run"
+
+    # terminal rung: a zero retry budget fails explicitly, never raises
+    f_eng = mk(plan=FaultPlan().at(2, "nan_logits"), max_retries=0)
+    f_reqs = _drive_faulted(f_eng, _requests(cfg, 1, plen))
+    assert f_reqs[0].status == "failed" and not f_reqs[0].done, \
+        f"exhausted budget did not fail explicitly: {f_reqs[0]}"
+    assert f_eng.stats()["failed_requests"] == 1
+
+    print(f"chaos-smoke OK: {sum(r.done for r in reqs)}/{len(reqs)} done "
+          f"token-identical under 5% faults; recoveries per class "
+          f"{st['recoveries']}; {st['quarantined']} pages quarantined; "
+          f"{st['watchdog_trips']} watchdog trips; spec degrade + "
+          f"explicit-failed rungs exercised; audit held every step")
+
+
 def smoke() -> None:
     """check.sh gate: tiny run, paged and slot outputs must be equal."""
     outs = {}
     for paged in (False, True):
         eng, cfg = build(paged, layers=1, slots=2, cache_len=32, max_new=4)
-        reqs = _requests(cfg, 4, 6)
-        eng.run_to_completion(reqs)
+        reqs = _run_audited(eng, _requests(cfg, 4, 6))
         assert all(r.done for r in reqs)
         outs[paged] = [r.out for r in reqs]
     assert outs[True] == outs[False], \
@@ -671,7 +878,7 @@ def serving_payload(args) -> Dict[str, Any]:
 
 
 #: BENCH_autotune.json sections this benchmark owns, in compute order.
-SECTIONS = ("serving", "kv_quant", "oversub", "spec")
+SECTIONS = ("serving", "kv_quant", "oversub", "spec", "resilience")
 
 
 def main(argv=None) -> Dict[str, Any]:
@@ -687,13 +894,18 @@ def main(argv=None) -> Dict[str, Any]:
     ap.add_argument("--spec-smoke", action="store_true",
                     help="speculative-vs-plain greedy output parity + "
                          "rollback accounting gate (no timing)")
+    ap.add_argument("--chaos-smoke", action="store_true",
+                    help="fault-injection recovery gate: all four fault "
+                         "classes recovered, token-identical to the "
+                         "un-faulted greedy run, audit held every step "
+                         "(no timing)")
     ap.add_argument("--prompts", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=64)
     ap.add_argument("--layers", type=int, default=2)
-    ap.add_argument("--section", action="append", choices=list(SECTIONS),
+    ap.add_argument("--section", action="append", metavar="NAME",
                     help="compute (and with --update-bench, refresh) only "
                          "the named BENCH section(s); other sections in "
                          "BENCH_autotune.json are preserved untouched. "
@@ -704,8 +916,17 @@ def main(argv=None) -> Dict[str, Any]:
                          "un-named sections preserved)")
     args = ap.parse_args(argv)
 
+    # validate section names by hand rather than argparse choices= so
+    # the error can name every valid section: a typo'd --section must
+    # exit non-zero *here*, not silently refresh nothing for
+    # bench_check.py to report later as a confusing missing section
+    unknown = [s for s in (args.section or ()) if s not in SECTIONS]
+    if unknown:
+        ap.error(f"unknown --section {', '.join(map(repr, unknown))}; "
+                 f"valid sections: {', '.join(SECTIONS)}")
+
     if args.smoke or args.quant_smoke or args.oversub_smoke \
-            or args.spec_smoke:
+            or args.spec_smoke or args.chaos_smoke:
         # CI gates: never write anything (the guard raises on a stray
         # repo-root/tuning-cache artifact instead of letting it land)
         with _guard_no_repo_root_writes():
@@ -717,6 +938,8 @@ def main(argv=None) -> Dict[str, Any]:
                 oversub_smoke()
             if args.spec_smoke:
                 spec_smoke()
+            if args.chaos_smoke:
+                chaos_smoke()
         return {}
 
     producers = {
@@ -727,6 +950,7 @@ def main(argv=None) -> Dict[str, Any]:
             prompt_len=args.prompt_len),
         "oversub": oversub_payload,
         "spec": spec_payload,
+        "resilience": resilience_payload,
     }
     names = [s for s in SECTIONS if s in (args.section or SECTIONS)]
     computed: Dict[str, Any] = {}
@@ -811,6 +1035,24 @@ def format_spec_rows(doc: Dict[str, Any]) -> List[str]:
             f"{r['tok_per_s']:>9.2f} {r['tok_per_s_per_req']:>10.2f} "
             f"{'-' if acc is None else format(acc, '.2f'):>9} "
             f"{r['speedup_vs_paged']:>8.2f}x")
+    return lines
+
+
+def format_resilience_rows(doc: Dict[str, Any]) -> List[str]:
+    """Render BENCH_autotune.json['resilience'] (shared with run.py)."""
+    rs = doc.get("resilience")
+    if not rs:
+        return ["(no resilience rows; run python -m benchmarks.serve_bench "
+                "--update-bench --section resilience)"]
+    header = (f"{'fault_rate':>10} {'done':>6} {'recov':>6} {'failed':>7} "
+              f"{'quar':>5} {'wdog':>5} {'tok/s':>9}")
+    lines = [f"config: {json.dumps(rs.get('config', {}), sort_keys=True)}",
+             header, "-" * len(header)]
+    for r in rs.get("results", ()):
+        lines.append(
+            f"{r['fault_rate']:>9.2%} {r['completion_rate']:>5.0%} "
+            f"{r['recoveries']:>6} {r['failed']:>7} {r['quarantined']:>5} "
+            f"{r['watchdog_trips']:>5} {r['tok_per_s']:>9.2f}")
     return lines
 
 

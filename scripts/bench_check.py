@@ -18,6 +18,7 @@ Required sections and per-row keys:
   kv_quant  "kv_quant".results  (benchmarks/serve_bench.py)
   oversub   "oversub".results   (benchmarks/serve_bench.py)
   spec      "spec".results      (benchmarks/serve_bench.py)
+  resilience "resilience".results (benchmarks/serve_bench.py)
 
 Wired as the check.sh `bench-check` stage.
 """
@@ -66,6 +67,13 @@ SCHEMA: Dict[str, Any] = {
                      "speedup_vs_paged"),
         "regen": "python -m benchmarks.serve_bench --update-bench "
                  "--section spec",
+    },
+    "resilience": {
+        "rows": ("resilience", "results"),
+        "row_keys": ("fault_rate", "completion_rate", "recoveries",
+                     "quarantined", "tok_per_s"),
+        "regen": "python -m benchmarks.serve_bench --update-bench "
+                 "--section resilience",
     },
 }
 

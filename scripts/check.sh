@@ -21,7 +21,7 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-STAGES=(pytest parity tune-smoke serve-smoke quant-smoke oversub-smoke spec-smoke bench-check)
+STAGES=(pytest parity tune-smoke serve-smoke quant-smoke oversub-smoke spec-smoke chaos-smoke bench-check)
 
 # -- stage bodies (each runs in its own `set -e` subshell) -------------------
 
@@ -86,6 +86,14 @@ stage_spec_smoke() {
     # self-speculative decode (k=2,4) token-identical to plain paged
     # greedy, with at least one real draft rejection exercised
     python -m benchmarks.serve_bench --spec-smoke
+}
+
+stage_chaos_smoke() {
+    # fault-injection recovery gate: all four fault classes detected and
+    # recovered token-identically to the un-faulted greedy run, with
+    # paging.audit() held after every step (runs under the same
+    # no-repo-root-writes guard as the other smokes)
+    python -m benchmarks.serve_bench --chaos-smoke
 }
 
 stage_bench_check() {

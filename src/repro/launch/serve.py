@@ -4,6 +4,11 @@ CPU demo (reduced config):
 
   python -m repro.launch.serve --arch granite-8b --smoke \
       --prompts 6 --max-new 12 --paged
+
+Fault-injection demo (the resilience plane, DESIGN.md §14):
+
+  python -m repro.launch.serve --arch granite-8b --smoke --paged \
+      --fault-rate 0.05 --watchdog-s 0.5
 """
 from __future__ import annotations
 
@@ -60,6 +65,22 @@ def main():
                          "--paged and greedy --temperature 0)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens per speculative step (>= 1)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="inject faults (KV-page corruption, NaN logits, "
+                         "allocation failure, stalled step) at this "
+                         "per-step probability through serve/faults.py "
+                         "(requires --paged); the engine detects and "
+                         "recovers them — see the summary's recovery "
+                         "counters")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic fault plan")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="per-request fault-retry budget; past it the "
+                         "request finishes with status='failed'")
+    ap.add_argument("--watchdog-s", type=float, default=None,
+                    help="per-step wall-clock deadline; a step past it "
+                         "is discarded and its slots requeued (armed "
+                         "after the first, compiling, step)")
     args = ap.parse_args()
     if args.kv_dtype and not args.paged:
         ap.error("--kv-dtype requires --paged")
@@ -67,12 +88,14 @@ def main():
         ap.error("--total-pages requires --paged")
     if args.spec_mode != "off" and not args.paged:
         ap.error("--spec-mode requires --paged")
+    if args.fault_rate and not args.paged:
+        ap.error("--fault-rate requires --paged")
 
     from repro.configs import get_config
     from repro.configs.smoke import smoke_config
     from repro.core import tuning
     from repro.models.registry import build_model
-    from repro.serve import Engine, Request, ServeConfig
+    from repro.serve import Engine, FaultPlan, Request, ServeConfig
 
     # Pick up persisted per-arch tuning caches before any kernel traces:
     # block_*=None then resolves to autotuned winners, no re-tuning.
@@ -89,8 +112,11 @@ def main():
                      kv_dtype=args.kv_dtype,
                      total_pages=args.total_pages,
                      preempt_policy=args.preempt_policy,
-                     spec_mode=args.spec_mode, spec_k=args.spec_k)
-    engine = Engine(model, params, sc)
+                     spec_mode=args.spec_mode, spec_k=args.spec_k,
+                     max_retries=args.max_retries)
+    plan = (FaultPlan(rate=args.fault_rate, seed=args.fault_seed)
+            if args.fault_rate > 0 else None)
+    engine = Engine(model, params, sc, fault_plan=plan)
 
     import numpy as np
     rng = np.random.default_rng(0)
@@ -98,18 +124,41 @@ def main():
         0, cfg.vocab_size, size=args.prompt_len).tolist())
         for i in range(args.prompts)]
     t0 = time.perf_counter()
-    engine.run_to_completion(reqs)
+    for r in reqs:
+        engine.submit(r)
+    first = True
+    while True:
+        busy = engine.step()
+        if first:
+            # arm the watchdog only after the first (compiling) step so
+            # jit compile time cannot trip it spuriously
+            engine.watchdog_s = args.watchdog_s
+            first = False
+        if not busy and not engine.queue and not engine.requeue:
+            break
     dt = time.perf_counter() - t0
     new_tokens = sum(len(r.out) for r in reqs)
+    st = engine.stats()
     print(json.dumps({
         "arch": args.arch, "paged": args.paged,
         "kv_dtype": (engine.kv_spec.dtype if getattr(engine, "kv_spec", None)
                      else None),
         "requests": len(reqs),
         "all_done": all(r.done for r in reqs),
+        "statuses": {s: sum(r.status == s for r in reqs)
+                     for s in ("done", "failed", "pending")},
         "new_tokens": new_tokens, "wall_s": round(dt, 2),
         "tok_per_s": round(new_tokens / dt, 1),
-        "preemptions": engine.stats()["preemptions"],
+        "preemptions": st["preemptions"],
+        "preemptions_by_policy": st["preemptions_by_policy"],
+        "requeue_depth": st["requeue_depth"],
+        "requeue_peak_depth": st["requeue_peak_depth"],
+        "recoveries": st["recoveries"],
+        "failed_requests": st["failed_requests"],
+        "watchdog_trips": st["watchdog_trips"],
+        **({"quarantined_pages": st["quarantined"]} if args.paged else {}),
+        **({"faults_injected": st["faults_injected"]}
+           if plan is not None else {}),
         **({"accepted_tokens_per_step":
             round(engine.spec_emitted / max(engine.spec_steps, 1), 2),
             "spec_rejections": engine.spec_rejections}

@@ -47,13 +47,30 @@ state out to host memory — DESIGN.md §12).  Requeued requests are
 re-admitted ahead of never-admitted ones (the starvation guard), and
 ``lru`` never victimizes the slot it is allocating for, so the growing
 slot always makes progress.
+
+Resilience (serve/faults.py, DESIGN.md §14): the step is guarded by a
+NaN/Inf logits sentinel folded into its return tuple (no extra
+transfer), a host-side watchdog around dispatch + device_get, and the
+``paging.audit()`` invariant auditor.  A detected fault checkpoints
+the slot through the same requeue path preemption uses — with a
+per-request retry budget and exponential backoff; corrupted pool
+pages are quarantined (capacity shrinks, never recycled), repeated
+speculation-step faults disable drafting for the offending request,
+and an exhausted budget finishes the request with an explicit
+``failed`` status instead of raising.  Recovery is re-prefill of the
+committed checkpoint, so under greedy decoding every recovered
+request is token-identical to an un-faulted run.  Step results commit
+only *after* the device_get returns inside the watchdog deadline; a
+tripped watchdog discards the step wholesale and requeues every
+active slot.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 import warnings
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +78,8 @@ import numpy as np
 
 from repro.models.registry import Model
 from repro.serve import paging
+from repro.serve.faults import FAULT_KINDS, FaultPlan, corrupt_page, \
+    nonfinite_pages
 
 # Indirection for tests that count host syncs per step.
 _device_get = jax.device_get
@@ -95,6 +114,19 @@ class ServeConfig:
     # block-table suffix.  "off" is the plain one-token step.
     spec_mode: str = "off"
     spec_k: int = 4
+    # Resilience knobs (DESIGN.md §14).  A faulted slot is requeued and
+    # re-prefilled at most max_retries times, with an exponential
+    # backoff of retry_backoff * 2**(retries-1) engine steps between
+    # attempts; past the budget the request finishes with an explicit
+    # ``failed`` status.  watchdog_s bounds the wall-clock of one step
+    # dispatch + device_get; a step past the deadline is discarded
+    # un-committed and every active slot requeues (None disables).
+    # spec_disable_after: speculation-step faults on one request before
+    # its drafting is disabled (it decodes 1 token/step from then on).
+    max_retries: int = 3
+    retry_backoff: int = 2
+    watchdog_s: Optional[float] = None
+    spec_disable_after: int = 2
 
 
 #: Valid ServeConfig.preempt_policy values (launch/serve.py choices).
@@ -112,10 +144,30 @@ class Request:
     done: bool = False
     truncated: bool = False
     preempts: int = 0       # times this request was preempted/requeued
+    # resilience state (engine-managed): fault-retry count, earliest
+    # engine step for re-admission (exponential backoff stamp), and the
+    # explicit terminal failure flag for an exhausted retry budget
+    retries: int = 0
+    not_before: int = 0
+    failed: bool = False
+    # speculation-step faults observed for this request; at
+    # ServeConfig.spec_disable_after the engine pins the slot to plain
+    # 1-token decoding (the degrade rung of the recovery ladder)
+    spec_faults: int = 0
+    spec_disabled: bool = False
+
+    @property
+    def status(self) -> str:
+        """'done' | 'failed' | 'pending' — failed is terminal and
+        explicit, never an exception out of the serve loop."""
+        if self.failed:
+            return "failed"
+        return "done" if self.done else "pending"
 
 
 class Engine:
-    def __init__(self, model: Model, params, sc: ServeConfig):
+    def __init__(self, model: Model, params, sc: ServeConfig,
+                 fault_plan: Optional[FaultPlan] = None):
         self.model = model
         self.params = params
         self.sc = sc
@@ -124,6 +176,15 @@ class Engine:
         if sc.on_overflow not in ("reject", "truncate"):
             raise ValueError(f"on_overflow must be 'reject' or 'truncate', "
                              f"got {sc.on_overflow!r}")
+        if sc.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got "
+                             f"{sc.max_retries}")
+        if sc.retry_backoff < 0:
+            raise ValueError(f"retry_backoff must be >= 0, got "
+                             f"{sc.retry_backoff}")
+        if fault_plan is not None and not sc.paged:
+            raise ValueError("fault injection requires paged=True "
+                             "(kv_corrupt/alloc_fail target the page pool)")
         if sc.preempt_policy not in PREEMPT_POLICIES:
             raise ValueError(f"preempt_policy must be one of "
                              f"{PREEMPT_POLICIES}, got {sc.preempt_policy!r}")
@@ -199,6 +260,8 @@ class Engine:
         # monotonic admission stamp the "lru" victim policy reads.
         self.requeue: collections.deque[Request] = collections.deque()
         self.preemptions = 0
+        self.preemptions_by_policy = {p: 0 for p in PREEMPT_POLICIES}
+        self.requeue_peak_depth = 0
         self._admit_seq = np.zeros((slots,), np.int64)
         self._seq = 0
         self._key = jax.random.PRNGKey(sc.seed)
@@ -206,6 +269,23 @@ class Engine:
         self.spec_steps = 0
         self.spec_emitted = 0
         self.spec_rejections = 0
+        # resilience state: the injectable fault plan (None in
+        # production paths); the step counter backoff stamps are quoted
+        # in (it ticks even on idle steps, so a backing-off requeue
+        # always drains); the sticky alloc-failure deny; and the
+        # recovery-ladder counters
+        self.fault_plan = fault_plan
+        self.watchdog_s = sc.watchdog_s
+        self.step_count = 0
+        self._alloc_deny = False
+        self.recoveries = {k: 0 for k in FAULT_KINDS}
+        self.failed_requests = 0
+        self.watchdog_trips = 0
+        # per-slot drafting enable for the spec step (a request whose
+        # spec_faults crossed spec_disable_after decodes 1 token/step)
+        self._spec_ok_h = np.ones((slots,), bool)
+        self._spec_ok_dev = jnp.asarray(self._spec_ok_h)
+        self._spec_ok_dirty = False
 
         self._prefill = jax.jit(
             lambda p, t: model.prefill(p, t, sc.cache_len, {}))
@@ -236,21 +316,32 @@ class Engine:
         model, cache_len = self.model, self.sc.cache_len
 
         def step_fn(params, caches, cur_tok, lengths, active, n_out, key,
-                    eos_id, max_new, block_tables):
+                    eos_id, max_new, block_tables, nan_mask):
             logits, new_caches = model.decode_step(
                 params, caches, cur_tok, lengths, block_tables=block_tables)
+            # nan_logits fault injection: flip the target rows before
+            # the sentinel so detection sees what a real compute fault
+            # would produce (all-zeros mask on the un-faulted path)
+            logits = jnp.where(nan_mask[:, None], jnp.nan, logits)
+            # NaN/Inf sentinel, folded into the step's return tuple —
+            # detection costs no extra transfer.  A flagged slot's
+            # sampled token is garbage; the host discards it and routes
+            # the slot down the recovery ladder instead of committing.
+            bad = active & ~jnp.all(jnp.isfinite(logits), axis=-1)
             next_tok = self._sample(logits, key)
             adv = active.astype(jnp.int32)
             new_lengths = lengths + adv
             new_n_out = n_out + adv
             # finish: budget spent, EOS sampled, or no cache row left for
             # the *next* token (the final row at cache_len-1 is usable).
-            done = active & ((new_n_out >= max_new)
-                             | (next_tok == eos_id)
-                             | (new_lengths + 1 > cache_len))
+            # A sentinel-flagged slot never finishes here — its fate is
+            # the host-side recovery ladder, not the EOS of a NaN argmax.
+            done = active & ~bad & ((new_n_out >= max_new)
+                                    | (next_tok == eos_id)
+                                    | (new_lengths + 1 > cache_len))
             new_active = active & ~done
             return (next_tok, new_lengths, new_active, new_n_out, done,
-                    new_caches)
+                    bad, new_caches)
 
         return step_fn
 
@@ -285,7 +376,8 @@ class Engine:
                              cur_tok[:, None])
 
         def spec_step_fn(params, caches, tok_hist, cur_tok, lengths,
-                         active, n_out, eos_id, max_new, block_tables):
+                         active, n_out, eos_id, max_new, block_tables,
+                         nan_mask, spec_ok):
             rows = jnp.arange(slots)
             # commit cur_tok into the history at its cache position L
             # *before* proposing, so drafts reading up to L are real
@@ -305,23 +397,32 @@ class Engine:
 
             logits, new_caches = model.spec_decode_step(
                 params, caches, window, lengths, block_tables)
+            # nan_logits injection + NaN/Inf sentinel over the whole
+            # verify window (any poisoned position taints the slot) —
+            # same contract as the plain step, still one device_get
+            logits = jnp.where(nan_mask[:, None, None], jnp.nan, logits)
+            bad = active & ~jnp.all(jnp.isfinite(logits), axis=(1, 2))
             y = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B,K1)
 
             # accept-longest-prefix: row t's output is emitted iff every
             # earlier row was emitted, did not finish, and its draft
-            # matched the argmax chain (token identity == greedy parity)
+            # matched the argmax chain (token identity == greedy parity).
+            # spec_ok gates drafting per slot: a request degraded by
+            # repeated speculation faults accepts only row 0, which is
+            # bit-identical to the plain decode step's token.
             t_idx = jnp.arange(k1, dtype=jnp.int32)[None, :]
             done_t = (active[:, None]
                       & ((n_out[:, None] + t_idx + 1 >= max_new)
                          | (y == eos_id)
                          | (lengths[:, None] + t_idx + 2 > cache_len)))
-            cont = (window[:, 1:] == y[:, :-1]) & ~done_t[:, :-1]
+            cont = ((window[:, 1:] == y[:, :-1]) & ~done_t[:, :-1]
+                    & spec_ok[:, None])
             prefix = jnp.concatenate(
                 [active[:, None],
                  active[:, None] & jnp.cumprod(
                      cont.astype(jnp.int32), axis=1).astype(bool)], axis=1)
             n_emit = prefix.sum(axis=1).astype(jnp.int32)
-            done = (prefix & done_t).any(axis=1)
+            done = (prefix & done_t).any(axis=1) & ~bad
             new_active = active & ~done
             new_lengths = lengths + n_emit
             new_n_out = n_out + n_emit
@@ -329,7 +430,7 @@ class Engine:
                 y, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)[:, 0]
             new_cur = jnp.where(active, last, cur_tok)
             return (y, n_emit, new_lengths, new_active, new_n_out, done,
-                    new_caches, tok_hist, new_cur)
+                    bad, new_caches, tok_hist, new_cur)
 
         return spec_step_fn
 
@@ -358,9 +459,10 @@ class Engine:
         they can clamp-corrupt a cache slot."""
         limit = self.sc.cache_len - 1
         if self.paged:
-            # an undersized pool (explicit total_pages) that can never
-            # hold the prompt would requeue forever — fail here instead
-            usable = self.allocator.total_pages - 1
+            # an undersized pool (explicit total_pages, or one shrunk by
+            # fault quarantine) that can never hold the prompt would
+            # requeue forever — fail here instead
+            usable = self.allocator.usable
             fits = usable * self.page_size - 1
             limit = min(limit, fits) if self.sc.on_overflow == "truncate" \
                 else limit
@@ -405,10 +507,22 @@ class Engine:
         while self._free_slots() and (self.requeue or self.queue):
             free = len(self._free_slots())
             batch: List[Request] = []
+            held: List[Request] = []
             while self.requeue and len(batch) < free:
-                batch.append(self.requeue.popleft())
+                r = self.requeue.popleft()
+                # exponential-backoff stamp from a fault requeue: not
+                # eligible yet — hold it aside (order preserved) so a
+                # flapping request cannot hot-loop through re-prefill
+                (held if r.not_before > self.step_count
+                 else batch).append(r)
+            for r in reversed(held):
+                self.requeue.appendleft(r)
             while self.queue and len(batch) < free:
                 batch.append(self.queue.pop(0))
+            if not batch:
+                # everything waiting is backing off; idle steps keep
+                # ticking step_count, so the stamps always expire
+                return
             groups: Dict[int, List[Request]] = {}
             for r in batch:
                 # effective prompt: original tokens plus everything
@@ -507,6 +621,11 @@ class Engine:
         for i, (req, slot) in enumerate(zip(reqs, slots)):
             self._seq += 1
             self._admit_seq[slot] = self._seq
+            if self.spec and self._spec_ok_h[slot] == req.spec_disabled:
+                # degrade rung: a request that repeatedly faulted inside
+                # speculative steps decodes 1 token/step from now on
+                self._spec_ok_h[slot] = not req.spec_disabled
+                self._spec_ok_dirty = True
             if admit_active[i]:
                 self.active[slot] = req
                 self._active_h[slot] = True
@@ -560,18 +679,21 @@ class Engine:
         scattering its KV into trash until the slot is reused."""
         req = self.active[slot]
         eff = len(req.tokens) + len(req.out)
-        usable = self.allocator.total_pages - 1
+        usable = self.allocator.usable
         if paging.pages_per_slot(min(eff + 1, self.sc.cache_len),
                                  self.page_size) > usable:
             # the checkpoint could never be re-admitted: requeueing it
             # would spin forever, so surface the sizing problem now
             raise RuntimeError(
                 f"request {req.rid}: checkpoint of {eff} tokens needs "
-                f"more KV pages than the whole pool holds ({usable} x "
-                f"{self.page_size}); raise ServeConfig.total_pages")
+                f"more KV pages than the pool's usable capacity ({usable} "
+                f"x {self.page_size}); raise ServeConfig.total_pages")
         req.preempts += 1
         self.preemptions += 1
+        self.preemptions_by_policy[self.sc.preempt_policy] += 1
         self.requeue.append(req)
+        self.requeue_peak_depth = max(self.requeue_peak_depth,
+                                      len(self.requeue))
         # park the device rows: the jitted step must stop advancing this
         # slot *before* the next decode, not at its end like finish does
         self.active_mask = self.active_mask.at[slot].set(False)
@@ -595,9 +717,20 @@ class Engine:
             needed = paging.pages_per_slot(
                 min(int(self._len_h[slot]) + horizon, self.sc.cache_len),
                 self.page_size)
+            faulted = False
             for j in range(needed):
                 if self.block_tables[slot, j] != paging.NULL_PAGE:
                     continue
+                if self._alloc_deny:
+                    # injected allocator failure, beyond what preemption
+                    # can absorb: the needy slot itself goes down the
+                    # recovery ladder.  The deny is sticky until it
+                    # bites (a scheduled injection always manifests)
+                    # and one-shot once it has.
+                    self._alloc_deny = False
+                    self._fault_requeue(slot, "alloc_fail")
+                    faulted = True
+                    break
                 if self.sc.preempt_policy != "fail":
                     while self.allocator.available == 0:
                         victim = self._select_victim(slot)
@@ -607,25 +740,159 @@ class Engine:
                             raise RuntimeError(
                                 f"KV page pool exhausted: slot {slot} is "
                                 f"the only active sequence and already "
-                                f"holds all "
-                                f"{self.allocator.total_pages - 1} usable "
-                                f"pages; raise ServeConfig.total_pages "
+                                f"holds all {self.allocator.usable} "
+                                f"usable pages; raise "
+                                f"ServeConfig.total_pages "
                                 f"(or lower cache_len)")
                         self._preempt(victim)
                 self.block_tables[slot, j] = self.allocator.alloc()
                 self._bt_dirty = True
-            self._ensured[slot] = needed
+            if not faulted:
+                self._ensured[slot] = needed
+
+    # -- fault injection + recovery ladder --------------------------------
+    def _draw_faults(self):
+        """Query the fault plan exactly once for this step.  kv_corrupt
+        is applied immediately (a pool-page NaN write); alloc_fail arms
+        the sticky allocator deny; nan_logits slots and the stall sleep
+        are returned for the jitted step / watchdog window."""
+        nan_slots: List[int] = []
+        stall = 0.0
+        if self.fault_plan is None:
+            return nan_slots, stall
+        active = [int(s) for s in np.nonzero(self._active_h)[0]]
+        for kind, slot in self.fault_plan.faults_for(self.step_count,
+                                                     active):
+            if kind == "alloc_fail":
+                self._alloc_deny = True
+            elif kind == "stall":
+                stall = max(stall, self.fault_plan.stall_s)
+            elif kind == "nan_logits":
+                nan_slots.append(int(slot))
+            elif kind == "kv_corrupt":
+                self._corrupt_slot(int(slot))
+        return nan_slots, stall
+
+    def _corrupt_slot(self, slot: int) -> None:
+        """Poison the slot's first live page (always inside the read
+        prefix: position 0 lives there and active implies length >= 1)."""
+        page = int(self.block_tables[slot, 0])
+        if page != paging.NULL_PAGE:
+            self.caches = corrupt_page(self.caches, page)
+
+    def _nan_mask(self, nan_slots: List[int]):
+        mask = np.zeros((self.sc.slots,), bool)
+        for s in nan_slots:
+            if self._active_h[s]:     # target may have been preempted
+                mask[s] = True
+        return jnp.asarray(mask)
+
+    def _watchdog_tripped(self, t0: float) -> bool:
+        """Deadline check around one dispatch + device_get.  On a trip
+        the caller discards the step's un-committed results (device
+        state holds the *previous* step) and every active slot goes
+        down the recovery ladder — re-prefill of the committed
+        checkpoint keeps greedy outputs token-identical.  Detection
+        happens once the transfer returns: a device wedged hard enough
+        to never return needs an external supervisor, but a stalled
+        step (the injectable class) is caught and recovered here."""
+        if self.watchdog_s is None:
+            return False
+        if time.perf_counter() - t0 <= self.watchdog_s:
+            return False
+        self.watchdog_trips += 1
+        for slot in np.nonzero(self._active_h)[0]:
+            self._fault_requeue(int(slot), "stall")
+        return True
+
+    def _handle_bad_slot(self, slot: int) -> None:
+        """The NaN/Inf sentinel flagged ``slot``: discriminate KV-pool
+        corruption from a transient compute fault by scanning the
+        slot's live pages (device reductions on the fault path only),
+        quarantine whatever is corrupted, then requeue the request."""
+        kind = "nan_logits"
+        if self.paged:
+            live = [int(p) for p in self.block_tables[slot]
+                    if int(p) != paging.NULL_PAGE]
+            corrupt = nonfinite_pages(self.caches, live)
+            if corrupt:
+                kind = "kv_corrupt"
+                # quarantine first (pages leave the allocated set), and
+                # null the table entries so _release's reclaim does not
+                # try to free what is no longer leased
+                self.allocator.quarantine(corrupt)
+                cset = set(corrupt)
+                row = self.block_tables[slot]
+                for j in range(len(row)):
+                    if int(row[j]) in cset:
+                        row[j] = paging.NULL_PAGE
+                self._bt_dirty = True
+        self._fault_requeue(slot, kind)
+
+    def _fault_requeue(self, slot: int, kind: str) -> None:
+        """One rung down the recovery ladder for a faulted slot: park
+        the device rows exactly like a preemption, spend one unit of
+        the request's retry budget, stamp the exponential backoff, and
+        checkpoint it onto the same requeue deque preemption uses —
+        re-prefill reproduces the committed tokens exactly under
+        greedy decoding.  An exhausted budget, or a pool quarantined
+        below what the checkpoint needs, finishes the request with the
+        explicit ``failed`` status instead of raising."""
+        req = self.active[slot]
+        self.active_mask = self.active_mask.at[slot].set(False)
+        req.retries += 1
+        if self.spec:
+            req.spec_faults += 1
+            if req.spec_faults >= self.sc.spec_disable_after:
+                req.spec_disabled = True
+        eff = len(req.tokens) + len(req.out)
+        need = (paging.pages_per_slot(min(eff + 1, self.sc.cache_len),
+                                      self.page_size)
+                if self.paged else 0)
+        if req.retries > self.sc.max_retries \
+                or (self.paged and need > self.allocator.usable):
+            req.failed = True
+            self.failed_requests += 1
+            self._release(slot)
+            return
+        self.recoveries[kind] += 1
+        req.not_before = (self.step_count + self.sc.retry_backoff
+                          * (2 ** (req.retries - 1)))
+        self.requeue.append(req)
+        self.requeue_peak_depth = max(self.requeue_peak_depth,
+                                      len(self.requeue))
+        self._release(slot)
+
+    def audit(self) -> List[str]:
+        """paging.audit over the live scheduler state: allocator
+        conservation, live-prefix integrity, no double leases, in_use
+        == sum of per-slot page needs.  Empty list = consistent (dense
+        engines have no pool to audit).  The chaos/serve/oversub/spec
+        smoke gates call this after every step."""
+        if not self.paged:
+            return []
+        return paging.audit(self.allocator, self.block_tables,
+                            self._len_h, self._active_h, self.page_size)
 
     # -- main loop ---------------------------------------------------------
     def step(self) -> bool:
-        """One decode step for all active slots.  Returns busy-ness."""
+        """One decode step for all active slots.  Returns busy-ness.
+
+        Results are held in locals and committed only after the step's
+        single device_get lands inside the watchdog deadline; sentinel-
+        flagged slots commit nothing and route through the recovery
+        ladder instead."""
+        self.step_count += 1
         self._admit()
         if not self._active_h.any():
             return False
+        nan_slots, stall = self._draw_faults()
         if self.spec:
-            return self._spec_step()
+            return self._spec_step(nan_slots, stall)
         if self.paged:
             self._ensure_pages()
+            if not self._active_h.any():   # alloc_fail took the last slot
+                return True
             if self._bt_dirty:        # re-upload only when tables changed
                 self._bt_dev = jnp.asarray(self.block_tables)
                 self._bt_dirty = False
@@ -635,14 +902,27 @@ class Engine:
         self._key, sub = jax.random.split(self._key)
         eos = jnp.int32(self.sc.eos_id if self.sc.eos_id is not None else -1)
         max_new = jnp.int32(self.sc.max_new_tokens)
-        (next_tok, self.lengths, self.active_mask, self.n_out, done,
-         self.caches) = self._step_fn(
+        t0 = time.perf_counter()
+        (next_tok, new_lengths, new_active, new_n_out, done, bad,
+         new_caches) = self._step_fn(
             self.params, self.caches, self.cur_tok, self.lengths,
-            self.active_mask, self.n_out, sub, eos, max_new, bt)
+            self.active_mask, self.n_out, sub, eos, max_new, bt,
+            self._nan_mask(nan_slots))
+        if stall:
+            time.sleep(stall)                       # injected device stall
+        nt, dn, bh = _device_get((next_tok, done, bad))  # THE one sync/step
+        if self._watchdog_tripped(t0):
+            return True             # step discarded; active slots requeued
+        self.lengths, self.active_mask, self.n_out = \
+            new_lengths, new_active, new_n_out
+        self.caches = new_caches
         self.cur_tok = next_tok
-        nt, dn = _device_get((next_tok, done))       # THE one sync per step
-        nt, dn = np.asarray(nt), np.asarray(dn)
+        nt, dn, bh = np.asarray(nt), np.asarray(dn), np.asarray(bh)
         for slot in np.nonzero(self._active_h)[0]:
+            slot = int(slot)
+            if bh[slot]:
+                self._handle_bad_slot(slot)
+                continue
             req = self.active[slot]
             req.out.append(int(nt[slot]))
             self._len_h[slot] += 1
@@ -651,30 +931,51 @@ class Engine:
                 self._release(slot)
         return True
 
-    def _spec_step(self) -> bool:
+    def _spec_step(self, nan_slots: List[int], stall: float) -> bool:
         """One speculative verify step for all active slots: ensure the
         whole window's pages, run the jitted draft+verify+accept step,
         then commit accepted tokens and roll rejected pages back by
         truncating each block-table suffix (still exactly ONE device_get
         per step).  Invariant restored at every step boundary: in_use ==
-        sum over active slots of pages_per_slot(length)."""
+        sum over active slots of pages_per_slot(length).  The same
+        sentinel/watchdog/recovery contract as the plain step applies;
+        a sentinel-flagged slot skips commit *and* rollback — release
+        reclaims its whole ensured row."""
         k1 = self.sc.spec_k + 1
         self._ensure_pages(horizon=k1)
+        if not self._active_h.any():       # alloc_fail took the last slot
+            return True
         if self._bt_dirty:
             self._bt_dev = jnp.asarray(self.block_tables)
             self._bt_dirty = False
+        if self._spec_ok_dirty:
+            self._spec_ok_dev = jnp.asarray(self._spec_ok_h)
+            self._spec_ok_dirty = False
         eos = jnp.int32(self.sc.eos_id if self.sc.eos_id is not None else -1)
         max_new = jnp.int32(self.sc.max_new_tokens)
-        (y, n_emit, self.lengths, self.active_mask, self.n_out, done,
-         self.caches, self.tok_hist, self.cur_tok) = self._spec_fn(
+        t0 = time.perf_counter()
+        (y, n_emit, new_lengths, new_active, new_n_out, done, bad,
+         new_caches, new_hist, new_cur) = self._spec_fn(
             self.params, self.caches, self.tok_hist, self.cur_tok,
             self.lengths, self.active_mask, self.n_out, eos, max_new,
-            self._bt_dev)
-        yh, ne, dn = _device_get((y, n_emit, done))  # THE one sync per step
-        yh, ne, dn = np.asarray(yh), np.asarray(ne), np.asarray(dn)
+            self._bt_dev, self._nan_mask(nan_slots), self._spec_ok_dev)
+        if stall:
+            time.sleep(stall)                       # injected device stall
+        yh, ne, dn, bh = _device_get((y, n_emit, done, bad))  # THE one sync
+        if self._watchdog_tripped(t0):
+            return True             # step discarded; active slots requeued
+        self.lengths, self.active_mask, self.n_out = \
+            new_lengths, new_active, new_n_out
+        self.caches, self.tok_hist, self.cur_tok = \
+            new_caches, new_hist, new_cur
+        yh, ne, dn, bh = (np.asarray(yh), np.asarray(ne), np.asarray(dn),
+                          np.asarray(bh))
         self.spec_steps += 1
         for slot in np.nonzero(self._active_h)[0]:
             slot = int(slot)
+            if bh[slot]:
+                self._handle_bad_slot(slot)   # release reclaims the row
+                continue
             req = self.active[slot]
             m = int(ne[slot])
             req.out.extend(int(t) for t in yh[slot, :m])
@@ -706,11 +1007,22 @@ class Engine:
                 break
         return requests
 
-    def stats(self) -> Dict[str, int]:
-        """Scheduler + allocator pressure counters (host-side only)."""
+    def stats(self) -> Dict[str, Any]:
+        """Scheduler + allocator pressure + resilience counters (all
+        host-side; no device sync)."""
         d = {"preemptions": self.preemptions,
+             "preemptions_by_policy": dict(self.preemptions_by_policy),
              "requeued_waiting": len(self.requeue),
-             "queued_waiting": len(self.queue)}
+             "requeue_depth": len(self.requeue),
+             "requeue_peak_depth": self.requeue_peak_depth,
+             "queued_waiting": len(self.queue),
+             "steps": self.step_count,
+             "recoveries": dict(self.recoveries),
+             "recoveries_total": sum(self.recoveries.values()),
+             "failed_requests": self.failed_requests,
+             "watchdog_trips": self.watchdog_trips}
+        if self.fault_plan is not None:
+            d["faults_injected"] = dict(self.fault_plan.injected)
         if self.paged:
             d.update(self.allocator.pressure())
         if self.spec:

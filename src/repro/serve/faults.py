@@ -1,0 +1,219 @@
+"""Deterministic fault-injection plane for the serving engine.
+
+The engine's failure modes today are silent corruption or a crash; the
+resilience layer (engine.py + paging.audit) turns them into detected,
+recovered scheduling events.  This module is the *injection* side: a
+:class:`FaultPlan` decides, per engine step, which of four fault
+classes to fire and at which slot — seeded and fully deterministic, so
+a chaos run is replayable and the token-identity contract ("every
+recovered request matches the un-faulted greedy bf16 run") can be
+asserted exactly in CI.
+
+Fault classes (:data:`FAULT_KINDS`):
+
+  kv_corrupt   NaN is written into one of the target slot's live KV
+               pool pages (the V pool — see below — or the V *scale*
+               pool for quantized dtypes).  Models a flipped bit in
+               cache HBM.  Detected by the step's NaN/Inf logits
+               sentinel; the engine then scans the slot's pages
+               (:func:`nonfinite_pages`), quarantines the corrupted
+               ones, and requeues the request.
+  nan_logits   The jitted step overwrites the target slot's logits row
+               with NaN via its ``nan_mask`` argument.  Models a
+               transient compute fault (bad reduction, overflow).
+               Detected by the same sentinel; no page is corrupted, so
+               the scan comes back clean and the slot simply requeues.
+  alloc_fail   The next page-allocation attempt inside the decode loop
+               fails as if the pool were dry with nothing left to
+               preempt (the deny is *sticky* until a slot actually
+               asks for a page, so a scheduled injection is guaranteed
+               to manifest).  Models allocator-level resource failure
+               beyond what preemption can absorb.
+  stall        The step's host side sleeps ``stall_s`` between dispatch
+               and the device_get, so the engine's watchdog sees the
+               step blow its deadline.  Models a hung device / runaway
+               kernel.  Recovery discards the un-committed step and
+               requeues every active slot.
+
+Why the **V** pool and not K: the paged flash-decode kernel clamps its
+running max against ``NEG_INF`` sentinels (``p = where(m_new >
+NEG_INF/2, p, 0)``), so NaN scores from a poisoned K page zero out and
+the caller's ``l == 0`` guard turns the slot's attention output into
+silent zeros — exactly the undetectable corruption this subsystem
+exists to eliminate, and useless as an *injected* fault because no
+sentinel can see it.  NaN in V (or in a V scale) flows through
+``p @ v`` with a finite normalizer and reaches the slot's logits,
+where the fused sentinel catches it.  (Verified empirically; see
+tests/test_faults.py::test_v_pool_nan_propagates_k_pool_does_not.)
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+#: The injectable fault classes, in the order the recovery counters
+#: report them.
+FAULT_KINDS = ("kv_corrupt", "nan_logits", "alloc_fail", "stall")
+
+
+class FaultPlan:
+    """A seeded, deterministic per-step fault schedule.
+
+    Two sources of faults compose:
+
+    * ``rate`` — each step draws at most one random fault with this
+      probability (kind uniform over ``kinds``, slot uniform over the
+      step's active slots).  The draw is memoized per step, so
+      re-querying a step is stable and replay is exact.
+    * :meth:`at` — explicit ``(step, kind, slot)`` entries for tests
+      and the chaos-smoke gate, which must guarantee coverage of every
+      class regardless of how the random draws land.
+
+    The plan never mutates engine state itself; the engine queries
+    :meth:`faults_for` once per step and applies the result.
+    """
+
+    def __init__(self, rate: float = 0.0, seed: int = 0,
+                 kinds: Sequence[str] = FAULT_KINDS,
+                 stall_s: float = 0.05):
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"fault rate must be in [0, 1], got {rate}")
+        unknown = [k for k in kinds if k not in FAULT_KINDS]
+        if unknown:
+            raise ValueError(f"unknown fault kinds {unknown}; valid: "
+                             f"{FAULT_KINDS}")
+        if not kinds:
+            raise ValueError("kinds must name at least one fault class")
+        self.rate = float(rate)
+        self.seed = int(seed)
+        self.kinds = tuple(kinds)
+        self.stall_s = float(stall_s)
+        self._rng = np.random.default_rng(seed)
+        self._at: Dict[int, List[Tuple[str, Optional[int]]]] = {}
+        self._memo: Dict[int, List[Tuple[str, Optional[int]]]] = {}
+        #: per-kind count of faults handed to the engine (injection
+        #: side; the engine's ``recoveries`` counts what it survived)
+        self.injected = {k: 0 for k in FAULT_KINDS}
+
+    def at(self, step: int, kind: str, slot: Optional[int] = None
+           ) -> "FaultPlan":
+        """Schedule ``kind`` at engine step ``step`` (chainable).
+
+        ``slot=None`` targets the lowest active slot at fire time —
+        callers scheduling ahead cannot know the slot map."""
+        if kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {kind!r}; valid: "
+                             f"{FAULT_KINDS}")
+        self._at.setdefault(int(step), []).append((kind, slot))
+        return self
+
+    def faults_for(self, step: int, active_slots: Sequence[int]
+                   ) -> List[Tuple[str, Optional[int]]]:
+        """The faults to apply at ``step`` given the active slot set.
+
+        Memoized: the random draw for a step happens exactly once, in
+        the order the engine advances, so a fixed seed replays the
+        same fault sequence.  Slot-targeted kinds resolve ``None`` to
+        the first active slot (scheduled entries) or a seeded uniform
+        choice (rate draws); with no active slot they are dropped —
+        there is nothing to corrupt.
+        """
+        step = int(step)
+        if step in self._memo:
+            return self._memo[step]
+        raw = list(self._at.get(step, ()))
+        if self.rate > 0.0 and self._rng.random() < self.rate:
+            kind = self.kinds[int(self._rng.integers(len(self.kinds)))]
+            slot = None
+            if kind in ("kv_corrupt", "nan_logits") and active_slots:
+                slot = int(active_slots[
+                    int(self._rng.integers(len(active_slots)))])
+            raw.append((kind, slot))
+        resolved: List[Tuple[str, Optional[int]]] = []
+        for kind, slot in raw:
+            if kind in ("kv_corrupt", "nan_logits"):
+                if slot is None or slot not in active_slots:
+                    if not active_slots:
+                        continue
+                    slot = int(active_slots[0])
+            self.injected[kind] += 1
+            resolved.append((kind, slot))
+        self._memo[step] = resolved
+        return resolved
+
+
+def _value_leaf_name(c) -> Optional[str]:
+    """The float leaf of a paged dict that NaN-poisoning a page will
+    push into the slot's logits: the V scale pool when quantized (the
+    int8/fp8 value pool cannot hold NaN; a NaN scale makes every
+    dequantized value NaN), else the V pool itself."""
+    if "vp" not in c:
+        return None
+    if "vs" in c:
+        return "vs"
+    if jnp.issubdtype(c["vp"].dtype, jnp.floating):
+        return "vp"
+    return None
+
+
+def corrupt_page(caches, page: int):
+    """Write NaN over pool page ``page`` in the first paged layer's
+    value (or value-scale) pool; returns the new cache tree.
+
+    One layer is enough: NaN anywhere in the residual stream reaches
+    the logits.  Raises if the tree has no poisonable paged leaf (a
+    dense-cache engine cannot take kv_corrupt faults).
+    """
+    out = []
+    poisoned = False
+    for seg in caches:
+        new_seg = []
+        for c in seg:
+            name = None if poisoned else _value_leaf_name(c)
+            if name is not None:
+                nc = dict(c)
+                nc[name] = c[name].at[:, :, page].set(jnp.nan)
+                new_seg.append(nc)
+                poisoned = True
+            else:
+                new_seg.append(c)
+        out.append(tuple(new_seg))
+    if not poisoned:
+        raise ValueError("corrupt_page: no paged float pool leaf in the "
+                         "cache tree (kv_corrupt needs paged=True)")
+    return out
+
+
+def nonfinite_pages(caches, pages: Sequence[int]) -> List[int]:
+    """The subset of pool ``pages`` holding any non-finite value in a
+    float paged leaf (KV pools and scale pools).
+
+    The engine's kv_corrupt-vs-nan_logits discriminator: it runs only
+    on the fault path (after the logits sentinel fired for a slot), so
+    the per-page device reductions never touch the happy path's
+    one-sync-per-step contract.
+    """
+    bad: List[int] = []
+    for p in pages:
+        p = int(p)
+        hit = False
+        for seg in caches:
+            for c in seg:
+                for name in ("kp", "vp", "ks", "vs"):
+                    leaf = c.get(name)
+                    if leaf is None or not jnp.issubdtype(
+                            leaf.dtype, jnp.floating):
+                        continue
+                    if not bool(jnp.all(jnp.isfinite(
+                            leaf[:, :, p].astype(jnp.float32)))):
+                        hit = True
+                        break
+                if hit:
+                    break
+            if hit:
+                break
+        if hit:
+            bad.append(p)
+    return bad

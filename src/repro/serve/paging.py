@@ -60,10 +60,14 @@ class PageAllocator:
         self.total_pages = int(total_pages)
         self._free: List[int] = list(range(total_pages - 1, 0, -1))
         self._allocated: Set[int] = set()
+        # fault-quarantined pages: permanently out of circulation (a
+        # corrupted page recycled to a new sequence would re-poison it)
+        self._quarantined: Set[int] = set()
         # pressure stats: the scheduler's preempt/requeue decisions and
         # the oversub benchmark both read these (pure counters, no cost)
         self.alloc_count = 0
         self.free_count = 0
+        self.quarantine_count = 0
         self.peak_in_use = 0
 
     @property
@@ -74,11 +78,24 @@ class PageAllocator:
     def in_use(self) -> int:
         return len(self._allocated)
 
+    @property
+    def quarantined(self) -> int:
+        return len(self._quarantined)
+
+    @property
+    def usable(self) -> int:
+        """Pages a sequence can ever hold: total minus the reserved
+        null page minus everything quarantined.  Capacity checks
+        (admission fit, checkpoint re-admit fit) must use this, not
+        ``total_pages - 1`` — quarantine shrinks the pool for good."""
+        return self.total_pages - 1 - len(self._quarantined)
+
     def pressure(self) -> dict:
         """Allocator pressure snapshot (all host-side counters)."""
         return {"total_pages": self.total_pages,
                 "available": self.available,
                 "in_use": self.in_use,
+                "quarantined": self.quarantined,
                 "peak_in_use": self.peak_in_use,
                 "allocs": self.alloc_count,
                 "frees": self.free_count}
@@ -127,6 +144,33 @@ class PageAllocator:
             self._allocated.discard(p)
             self._free.append(p)
         self.free_count += len(pages)
+
+    def quarantine(self, pages: Sequence[int]) -> None:
+        """Permanently remove ``pages`` from circulation (corrupted-KV
+        recovery: a poisoned page must never be handed to another
+        sequence).  Accepts allocated *or* free pages; capacity
+        (``usable``) shrinks either way and ``pressure()`` reports the
+        count.  Validates the whole batch before mutating, like
+        ``free``.  The caller owns the block-table side: a quarantined
+        page's table entries must be reset to NULL_PAGE *before* the
+        row is reclaimed (reclaim would double-handle it otherwise).
+        """
+        pages = [int(p) for p in pages]
+        seen: Set[int] = set()
+        for p in pages:
+            if p == NULL_PAGE or not 0 < p < self.total_pages:
+                raise ValueError(f"cannot quarantine page {p}: not a real "
+                                 f"pool page (1..{self.total_pages - 1})")
+            if p in self._quarantined or p in seen:
+                raise ValueError(f"page {p} is already quarantined")
+            seen.add(p)
+        for p in pages:
+            if p in self._allocated:
+                self._allocated.discard(p)
+            else:
+                self._free.remove(p)
+            self._quarantined.add(p)
+        self.quarantine_count += len(pages)
 
     def reclaim(self, table_row: Sequence[int]) -> int:
         """Bulk-free every real page named by a block-table row.
@@ -177,6 +221,87 @@ def truncate_suffix(allocator: PageAllocator, table_row, keep: int,
     allocator.free([int(p) for p in tail])
     table_row[keep:upto] = NULL_PAGE
     return len(tail)
+
+
+def audit(allocator: PageAllocator, block_tables, lengths, active,
+          page_size: int) -> List[str]:
+    """Check every allocator/block-table invariant that must hold at a
+    step boundary; returns a list of problems (empty = consistent).
+
+    Invariants (the engine's between-steps contract — plain decode
+    tops a slot up to exactly ``pages_per_slot(length)`` and the spec
+    step truncates back to it after rollback):
+
+    * allocator conservation: free + allocated + quarantined partition
+      the non-null pages exactly (disjoint, no duplicates, in range);
+    * every live-prefix block-table entry (``row[:pages_per_slot(len)]``
+      of an active slot) is a real allocated page — no NULL_PAGE holes;
+    * nothing past a live prefix, and nothing in an inactive row, holds
+      a real page (that page would leak on the next reset);
+    * no page is leased to two rows (the double-lease corruption class
+      the strict free/reclaim path exists to prevent);
+    * ``in_use`` equals the sum of live-prefix page counts.
+
+    Wired as ``Engine.audit()`` and run after every step of the serve /
+    oversub / spec / chaos smoke gates.
+    """
+    problems: List[str] = []
+    total = allocator.total_pages
+    free_list = [int(p) for p in allocator._free]
+    free = set(free_list)
+    alloc = set(allocator._allocated)
+    quar = set(allocator._quarantined)
+    if len(free_list) != len(free):
+        dups = sorted(p for p in free if free_list.count(p) > 1)
+        problems.append(f"free list holds duplicate pages {dups}")
+    for name, s in (("free", free), ("allocated", alloc),
+                    ("quarantined", quar)):
+        if NULL_PAGE in s:
+            problems.append(f"reserved null page in the {name} set")
+        bad = sorted(p for p in s if not 0 < p < total)
+        if bad:
+            problems.append(f"{name} set holds out-of-range pages {bad}")
+    for a, b in (("free", "allocated"), ("free", "quarantined"),
+                 ("allocated", "quarantined")):
+        inter = {"free": free, "allocated": alloc,
+                 "quarantined": quar}
+        both = sorted(inter[a] & inter[b])
+        if both:
+            problems.append(f"pages {both} are both {a} and {b}")
+    if not problems and len(free | alloc | quar) != total - 1:
+        missing = sorted(set(range(1, total)) - free - alloc - quar)
+        problems.append(f"pages {missing} vanished from the allocator "
+                        f"(not free, allocated, or quarantined)")
+
+    leased: dict = {}
+    need_total = 0
+    for slot, row in enumerate(block_tables):
+        n_live = (pages_per_slot(int(lengths[slot]), page_size)
+                  if active[slot] else 0)
+        need_total += n_live
+        for j, p in enumerate(row):
+            p = int(p)
+            if j < n_live:
+                if p == NULL_PAGE:
+                    problems.append(f"slot {slot}: NULL_PAGE inside the "
+                                    f"live prefix at index {j} "
+                                    f"(length {int(lengths[slot])})")
+                elif p not in alloc:
+                    problems.append(f"slot {slot}: live page {p} is not "
+                                    f"allocated (in "
+                                    f"{'quarantine' if p in quar else 'free list' if p in free else 'limbo'})")
+            elif p != NULL_PAGE:
+                problems.append(f"slot {slot}: page {p} past the live "
+                                f"prefix at index {j} (would leak)")
+            if p != NULL_PAGE:
+                if p in leased:
+                    problems.append(f"page {p} leased to both slot "
+                                    f"{leased[p]} and slot {slot}")
+                leased[p] = slot
+    if need_total != allocator.in_use:
+        problems.append(f"in_use {allocator.in_use} != sum of live-prefix "
+                        f"pages {need_total}")
+    return problems
 
 
 def _is_paged_leaf_dict(c, cache_len: int) -> bool:

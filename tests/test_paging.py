@@ -115,7 +115,8 @@ def test_allocator_pressure_stats():
     a = paging.PageAllocator(6)
     got = a.alloc_many(3)
     assert a.pressure() == {"total_pages": 6, "available": 2, "in_use": 3,
-                            "peak_in_use": 3, "allocs": 3, "frees": 0}
+                            "peak_in_use": 3, "allocs": 3, "frees": 0,
+                            "quarantined": 0}
     a.free(got[:2])
     st = a.pressure()
     assert st["in_use"] == 1 and st["frees"] == 2
@@ -340,3 +341,110 @@ def test_init_paged_caches_pages_only_global_kv():
     assert "kp" in names and "vp" in names
     # gemma's local ring layers (window=16 < cache_len) stay dense
     assert "k" in names and "v" in names
+
+
+# --------------------------------------------------- quarantine + audit ----
+
+def test_quarantine_allocated_and_free_pages_shrink_usable():
+    a = paging.PageAllocator(8)                   # pages 1..7 usable
+    got = a.alloc_many(3)
+    a.quarantine([got[0]])                        # from the allocated set
+    free_page = next(p for p in range(1, 8)
+                     if p not in got)
+    a.quarantine([free_page])                     # from the free list
+    assert a.quarantined == 2
+    assert a.usable == 7 - 2
+    assert a.in_use == 2                          # got[1], got[2] still out
+    assert a.pressure()["quarantined"] == 2
+    # quarantined pages never come back: drain the free list fully
+    rest = a.alloc_many(a.available)
+    assert free_page not in rest and got[0] not in rest
+
+
+def test_quarantine_validates_batch_before_mutating():
+    a = paging.PageAllocator(6)
+    got = a.alloc_many(2)
+    with pytest.raises(ValueError, match="not a real pool page"):
+        a.quarantine([got[0], paging.NULL_PAGE])
+    with pytest.raises(ValueError, match="not a real pool page"):
+        a.quarantine([99])
+    assert a.quarantined == 0                     # nothing half-applied
+    a.quarantine([got[0]])
+    with pytest.raises(ValueError, match="already quarantined"):
+        a.quarantine([got[0]])
+    with pytest.raises(ValueError, match="already quarantined"):
+        a.quarantine([got[1], got[1]])            # dup inside one batch
+    assert a.quarantined == 1
+
+
+def _audit_fixture(slots=2, pages_per_slot=3, page_size=4):
+    a = paging.PageAllocator(1 + slots * pages_per_slot)
+    bt = np.full((slots, pages_per_slot), paging.NULL_PAGE, np.int32)
+    lengths = np.zeros((slots,), np.int64)
+    active = np.zeros((slots,), bool)
+    return a, bt, lengths, active, page_size
+
+
+def test_audit_clean_state_and_live_prefix():
+    a, bt, lengths, active, ps = _audit_fixture()
+    assert paging.audit(a, bt, lengths, active, ps) == []
+    bt[0, :2] = a.alloc_many(2)
+    lengths[0], active[0] = 6, True               # 6 tokens -> 2 pages
+    assert paging.audit(a, bt, lengths, active, ps) == []
+
+
+def test_audit_flags_null_in_live_prefix():
+    a, bt, lengths, active, ps = _audit_fixture()
+    bt[0, 0] = a.alloc()
+    lengths[0], active[0] = 6, True               # needs 2 pages, has 1
+    errs = paging.audit(a, bt, lengths, active, ps)
+    assert any("NULL_PAGE inside the live prefix" in e for e in errs)
+
+
+def test_audit_flags_leak_past_prefix_and_inactive_rows():
+    a, bt, lengths, active, ps = _audit_fixture()
+    bt[0, 0] = a.alloc()
+    lengths[0], active[0] = 2, True               # 1 live page
+    bt[0, 2] = a.alloc()                          # past the prefix
+    errs = paging.audit(a, bt, lengths, active, ps)
+    assert any("past the live prefix" in e for e in errs)
+    # move the leak to an inactive row: still flagged (whole row is dead)
+    bt[1, 0], bt[0, 2] = bt[0, 2], paging.NULL_PAGE
+    errs = paging.audit(a, bt, lengths, active, ps)
+    assert any("past the live prefix" in e for e in errs)
+
+
+def test_audit_flags_double_lease_and_in_use_mismatch():
+    a, bt, lengths, active, ps = _audit_fixture()
+    p = a.alloc()
+    bt[0, 0] = p
+    bt[1, 0] = p                                  # same page, two rows
+    lengths[:] = 2
+    active[:] = True
+    errs = paging.audit(a, bt, lengths, active, ps)
+    assert any("leased to both" in e for e in errs)
+    assert any("in_use" in e for e in errs)       # 1 allocated != 2 needed
+
+
+def test_audit_flags_free_list_corruption():
+    a, bt, lengths, active, ps = _audit_fixture()
+    page = a.alloc()
+    a._free.append(page)                          # corrupt: free AND allocated
+    errs = paging.audit(a, bt, lengths, active, ps)
+    assert any("both free and allocated" in e for e in errs)
+
+
+def test_audit_accounts_quarantined_pages():
+    a, bt, lengths, active, ps = _audit_fixture()
+    bt[0, 0] = a.alloc()
+    lengths[0], active[0] = 2, True
+    a.quarantine([a.alloc()])                     # quarantine a second page
+    assert paging.audit(a, bt, lengths, active, ps) == []
+    # a live table entry pointing at a quarantined page is flagged (the
+    # engine must NULL quarantined entries before reclaiming the row)
+    q = a.alloc()
+    a.quarantine([q])
+    bt[0, 1] = q
+    lengths[0] = 6                                # prefix now covers index 1
+    errs = paging.audit(a, bt, lengths, active, ps)
+    assert any("quarantine" in e for e in errs)

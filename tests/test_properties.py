@@ -226,3 +226,59 @@ def test_ring_cache_slot_mapping(s, w, seed):
     for p in range(max(0, s - w), s):       # decode would write p -> p%W
         want[p % w] = np.asarray(k_full[0, 0, p])
     np.testing.assert_allclose(np.asarray(ring[0, 0]), want, atol=0)
+
+
+# ------------------------------------- allocator interleaving law ----
+
+@given(
+    total=st.integers(3, 12),
+    ops=st.lists(st.tuples(st.sampled_from(
+        ["alloc", "free", "reclaim", "truncate", "quarantine"]),
+        st.integers(0, 2 ** 16)), max_size=40),
+)
+@settings(max_examples=60, deadline=None)
+def test_allocator_interleaving_preserves_disjointness(total, ops):
+    """Any interleaving of alloc / free / reclaim / truncate /
+    quarantine preserves the allocator partition law: free, allocated
+    and quarantined page sets stay pairwise disjoint, never contain the
+    null page, and together cover exactly the pool (the invariant
+    paging.audit() enforces between engine steps)."""
+    from repro.serve import paging
+    a = paging.PageAllocator(total)
+    held = []                                   # pages we hold leases on
+
+    def check():
+        free = list(a._free)
+        fs, al, qr = set(free), set(a._allocated), set(a._quarantined)
+        assert len(free) == len(fs)             # no free-list duplicates
+        assert not (fs & al) and not (fs & qr) and not (al & qr)
+        assert paging.NULL_PAGE not in fs | al | qr
+        assert fs | al | qr == set(range(1, total))
+        assert sorted(held) == sorted(al)       # our leases == allocated
+        assert a.usable == total - 1 - len(qr)
+
+    for op, arg in ops:
+        if op == "alloc":
+            n = arg % 3 + 1
+            if a.available >= n:
+                held.extend(a.alloc_many(n))
+        elif op == "free" and held:
+            held.remove(p := held[arg % len(held)])
+            a.free([p])
+        elif op == "reclaim" and held:
+            k = arg % len(held) + 1
+            row = [held.pop() for _ in range(k)] + [paging.NULL_PAGE]
+            assert a.reclaim(row) == k
+        elif op == "truncate" and len(held) >= 2:
+            keep = arg % (len(held) - 1) + 1
+            row = np.array(held + [paging.NULL_PAGE], np.int32)
+            freed = paging.truncate_suffix(a, row, keep, len(held))
+            assert freed == len(held) - keep
+            del held[keep:]
+        elif op == "quarantine":
+            if arg % 2 and held:                # quarantine a leased page
+                held.remove(p := held[arg % len(held)])
+                a.quarantine([p])
+            elif a.available:                   # quarantine a free page
+                a.quarantine([list(a._free)[arg % a.available]])
+        check()
