@@ -35,7 +35,8 @@ def main() -> None:
     parity.main()
 
     from benchmarks.autotune import bench_json_path, format_rows
-    from benchmarks.serve_bench import (format_kv_quant_rows,
+    from benchmarks.serve_bench import (format_hybrid_rows,
+                                        format_kv_quant_rows,
                                         format_oversub_rows,
                                         format_resilience_rows,
                                         format_serving_rows,
@@ -59,7 +60,10 @@ def main() -> None:
              "--section spec"),
             ("Resilience", format_resilience_rows,
              "python -m benchmarks.serve_bench --update-bench "
-             "--section resilience")):
+             "--section resilience"),
+            ("Hybrid window serving", format_hybrid_rows,
+             "python -m benchmarks.serve_bench --update-bench "
+             "--section hybrid")):
         print()
         print("=" * 72)
         print(f"## {title} (from BENCH_autotune.json)")

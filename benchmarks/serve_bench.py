@@ -34,6 +34,10 @@ regime CI can check):
       recovery gate: all four fault classes detected + recovered,
       token-identical to the un-faulted greedy run, paging.audit()
       after every step (serve/faults.py, DESIGN.md §14)
+  python -m benchmarks.serve_bench --hybrid-smoke  # hybrid-layer
+      (sliding-window local + global) paged-vs-dense greedy parity
+      gate: windowed ring block tables with eager prefix free, window
+      pool pressure O(window), both pools drain clean (DESIGN.md §15)
 
 The ``kv_quant`` section measures the dtype axis of the paged pool
 (repro.quant): per KV dtype, end-to-end decode tokens/sec and the max
@@ -62,6 +66,13 @@ at injected fault rates 0% / 1% / 5%: completion rate, recoveries,
 quarantined pages, watchdog trips and decode tok/s with the full
 detection plane armed (NaN/Inf sentinel, watchdog, per-step audit) —
 the 0% row is the resilience machinery's overhead baseline.
+
+The ``hybrid`` section measures hybrid-layer serving (gemma2 smoke:
+sliding-window local + global pattern) through the unified paged cache
+plane: per KV dtype, decode tok/s and — at a context 4x the window —
+the peak live pages per slot of a local layer (O(window), bounded by
+the ring-table width via eager prefix free) vs a global layer
+(O(context)), both measured from the same run.
 
 Smoke modes are CI gates and must never write outside a temp dir —
 only ``--update-bench`` writes at all, and every ``--*-smoke`` run is
@@ -877,8 +888,105 @@ def serving_payload(args) -> Dict[str, Any]:
     }
 
 
+# ---------------------------------------------------------------------------
+# hybrid: windowed block tables on local+global layer mixes
+# ---------------------------------------------------------------------------
+
+def hybrid_payload(*, slots=2, cache_len=64, max_new=48, prompts=2,
+                   prompt_len=16) -> Dict[str, Any]:
+    """Hybrid-model (gemma2 smoke: sliding-window local + global layer
+    pattern) serving rows, per KV dtype: decode tok/s plus the page-
+    pressure split between the two pool groups.  The headline number is
+    ``live_page_ratio``: at a context 4x the window, a local layer's
+    peak live pages per slot (bounded by the ring-table width, O(window)
+    thanks to eager prefix free) vs a global layer's (O(context)) —
+    measured from the same run, same engine, same request stream."""
+    rows = []
+    for dtype in ["bf16"] + _kv_dtypes_here():
+        eng, cfg = build(True, arch="gemma2-2b", layers=2, slots=slots,
+                         cache_len=cache_len, max_new=max_new,
+                         kv_dtype=dtype, page_size=4)
+        assert eng.windowed, "gemma2 smoke must route local layers windowed"
+        r = _throughput(eng, cfg, prompts, prompt_len)
+        r.pop("sample")
+        st = eng.stats()
+        groups = st["pool_groups"]
+        ppw = groups["window"]["peak_in_use"] / slots
+        ppg = groups["global"]["peak_in_use"] / slots
+        r.update({
+            "kv_dtype": dtype, "window": cfg.window,
+            "context_len": prompt_len + max_new,
+            "pages_per_global_slot": ppg,
+            "pages_per_window_slot": ppw,
+            "live_page_ratio": round(ppg / ppw, 2),
+            "window_prefix_frees": st["window_prefix_frees"],
+        })
+        rows.append(r)
+        print(f"{dtype:<10} ctx {r['context_len']:>3} window {cfg.window:>3} "
+              f"pages/slot global {ppg:.1f} window {ppw:.1f} "
+              f"ratio {r['live_page_ratio']:.2f}x  "
+              f"{r['tok_per_s']:>8.2f} tok/s")
+    return {
+        "bench": "hybrid_window_serving",
+        "generated_by": "python -m benchmarks.serve_bench --update-bench "
+                        "--section hybrid",
+        "arch": "interpret",
+        "config": {"model": "gemma2-2b smoke", "layers": 2, "slots": slots,
+                   "cache_len": cache_len, "page_size": 4,
+                   "prompts": prompts, "prompt_len": prompt_len,
+                   "max_new": max_new},
+        "results": rows,
+    }
+
+
+def hybrid_smoke() -> None:
+    """check.sh gate: hybrid-layer serving through the unified paged
+    cache plane.
+
+    gemma2 smoke (alternating sliding-window local / global layers,
+    window=16): the paged engine — global KV through the global pool,
+    local KV through windowed ring block tables with eager prefix
+    free — must emit exactly the dense engine's greedy tokens with
+    prompt+output crossing the window (20 + 12 > 16, so the ring wraps
+    mid-run); at least one behind-window page must have been freed
+    eagerly (else the sliding lease is vacuous); window-pool pressure
+    must stay O(window); both pools must drain clean; and
+    ``paging.audit()`` — including the window-mode ring invariants —
+    must hold after every step."""
+    def run(paged):
+        eng, cfg = build(paged, arch="gemma2-2b", layers=2, slots=2,
+                         cache_len=64, max_new=12,
+                         page_size=4 if paged else None)
+        reqs = _run_audited(eng, _requests(cfg, 3, 20))
+        assert all(r.done for r in reqs), "requests lost on hybrid model"
+        return eng, cfg, [r.out for r in reqs]
+
+    _, cfg, want = run(False)
+    eng, _, got = run(True)
+    assert got == want, f"hybrid-smoke parity FAILED: {got} != {want}"
+    assert eng.windowed, "gemma2 smoke must route local layers windowed"
+    from repro.serve import paging
+    st = eng.stats()
+    groups = st["pool_groups"]
+    assert st["window_prefix_frees"] > 0, \
+        "hybrid-smoke vacuous: the sliding window never freed a " \
+        "behind-window page"
+    tw = paging.window_table_width(cfg.window, eng.page_size)
+    assert groups["window"]["peak_in_use"] <= 2 * tw, \
+        f"window pool pressure not O(window): peak " \
+        f"{groups['window']['peak_in_use']} > slots * T_w = {2 * tw}"
+    assert groups["window"]["in_use"] == 0, f"window pool leaked: {groups}"
+    assert groups["global"]["in_use"] == 0, f"global pool leaked: {groups}"
+    print(f"hybrid-smoke OK: paged-window == dense on {len(want)} requests "
+          f"crossing window={cfg.window}; {st['window_prefix_frees']} "
+          f"eager prefix frees; window pool peak "
+          f"{groups['window']['peak_in_use']} <= {2 * tw}; both pools "
+          f"drain clean")
+
+
 #: BENCH_autotune.json sections this benchmark owns, in compute order.
-SECTIONS = ("serving", "kv_quant", "oversub", "spec", "resilience")
+SECTIONS = ("serving", "kv_quant", "oversub", "spec", "resilience",
+            "hybrid")
 
 
 def main(argv=None) -> Dict[str, Any]:
@@ -899,6 +1007,11 @@ def main(argv=None) -> Dict[str, Any]:
                          "classes recovered, token-identical to the "
                          "un-faulted greedy run, audit held every step "
                          "(no timing)")
+    ap.add_argument("--hybrid-smoke", action="store_true",
+                    help="hybrid-layer (sliding-window local + global) "
+                         "paged-vs-dense greedy parity gate with eager "
+                         "window-page reclaim and O(window) pool "
+                         "pressure asserted (no timing)")
     ap.add_argument("--prompts", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
@@ -926,7 +1039,7 @@ def main(argv=None) -> Dict[str, Any]:
                  f"valid sections: {', '.join(SECTIONS)}")
 
     if args.smoke or args.quant_smoke or args.oversub_smoke \
-            or args.spec_smoke or args.chaos_smoke:
+            or args.spec_smoke or args.chaos_smoke or args.hybrid_smoke:
         # CI gates: never write anything (the guard raises on a stray
         # repo-root/tuning-cache artifact instead of letting it land)
         with _guard_no_repo_root_writes():
@@ -940,6 +1053,8 @@ def main(argv=None) -> Dict[str, Any]:
                 spec_smoke()
             if args.chaos_smoke:
                 chaos_smoke()
+            if args.hybrid_smoke:
+                hybrid_smoke()
         return {}
 
     producers = {
@@ -951,6 +1066,7 @@ def main(argv=None) -> Dict[str, Any]:
         "oversub": oversub_payload,
         "spec": spec_payload,
         "resilience": resilience_payload,
+        "hybrid": hybrid_payload,
     }
     names = [s for s in SECTIONS if s in (args.section or SECTIONS)]
     computed: Dict[str, Any] = {}
@@ -1071,6 +1187,28 @@ def format_serving_rows(doc: Dict[str, Any]) -> List[str]:
         lines.append(
             f"{r['engine']:<14} {r['new_tokens']:>7} {r['wall_s']:>8.3f} "
             f"{r['tok_per_s']:>9.2f} {r['speedup_vs_legacy']:>9.2f}x")
+    return lines
+
+
+def format_hybrid_rows(doc: Dict[str, Any]) -> List[str]:
+    """Render BENCH_autotune.json['hybrid'] (shared with run.py)."""
+    hy = doc.get("hybrid")
+    if not hy:
+        return ["(no hybrid rows; run python -m benchmarks.serve_bench "
+                "--update-bench --section hybrid)"]
+    cfg = hy.get("config", {})
+    header = (f"{'kv_dtype':<10} {'window':>7} {'context':>8} "
+              f"{'pg/global':>10} {'pg/window':>10} {'ratio':>7} "
+              f"{'frees':>6} {'tok/s':>9}")
+    lines = [f"config: {json.dumps(cfg, sort_keys=True)}",
+             header, "-" * len(header)]
+    for r in hy.get("results", ()):
+        lines.append(
+            f"{r['kv_dtype']:<10} {r['window']:>7} {r['context_len']:>8} "
+            f"{r['pages_per_global_slot']:>10.1f} "
+            f"{r['pages_per_window_slot']:>10.1f} "
+            f"{r['live_page_ratio']:>6.2f}x "
+            f"{r['window_prefix_frees']:>6} {r['tok_per_s']:>9.2f}")
     return lines
 
 

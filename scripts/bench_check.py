@@ -19,6 +19,7 @@ Required sections and per-row keys:
   oversub   "oversub".results   (benchmarks/serve_bench.py)
   spec      "spec".results      (benchmarks/serve_bench.py)
   resilience "resilience".results (benchmarks/serve_bench.py)
+  hybrid    "hybrid".results    (benchmarks/serve_bench.py)
 
 Wired as the check.sh `bench-check` stage.
 """
@@ -74,6 +75,15 @@ SCHEMA: Dict[str, Any] = {
                      "quarantined", "tok_per_s"),
         "regen": "python -m benchmarks.serve_bench --update-bench "
                  "--section resilience",
+    },
+    "hybrid": {
+        "rows": ("hybrid", "results"),
+        "row_keys": ("kv_dtype", "window", "context_len",
+                     "pages_per_global_slot", "pages_per_window_slot",
+                     "live_page_ratio", "window_prefix_frees",
+                     "tok_per_s"),
+        "regen": "python -m benchmarks.serve_bench --update-bench "
+                 "--section hybrid",
     },
 }
 

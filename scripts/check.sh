@@ -21,7 +21,7 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-STAGES=(pytest parity tune-smoke serve-smoke quant-smoke oversub-smoke spec-smoke chaos-smoke bench-check)
+STAGES=(pytest parity tune-smoke serve-smoke quant-smoke oversub-smoke spec-smoke chaos-smoke hybrid-smoke bench-check)
 
 # -- stage bodies (each runs in its own `set -e` subshell) -------------------
 
@@ -94,6 +94,13 @@ stage_chaos_smoke() {
     # paging.audit() held after every step (runs under the same
     # no-repo-root-writes guard as the other smokes)
     python -m benchmarks.serve_bench --chaos-smoke
+}
+
+stage_hybrid_smoke() {
+    # hybrid-layer (sliding-window local + global) paged-vs-dense greedy
+    # parity, with eager behind-window page reclaim and O(window) pool
+    # pressure asserted, audit held every step
+    python -m benchmarks.serve_bench --hybrid-smoke
 }
 
 stage_bench_check() {

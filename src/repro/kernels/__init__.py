@@ -20,6 +20,8 @@ from repro.kernels.decode_attention.ops import paged_decode_attention  # noqa: F
 from repro.kernels.decode_attention.ops import quant_paged_decode_attention  # noqa: F401
 from repro.kernels.decode_attention.ops import spec_paged_decode_attention  # noqa: F401
 from repro.kernels.decode_attention.ops import quant_spec_paged_decode_attention  # noqa: F401
+from repro.kernels.decode_attention.ops import window_paged_decode_attention  # noqa: F401
+from repro.kernels.decode_attention.ops import quant_window_paged_decode_attention  # noqa: F401
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
 from repro.kernels.gmm.ops import gmm  # noqa: F401
 from repro.kernels.mamba_scan.ops import mamba_scan  # noqa: F401

@@ -164,6 +164,145 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
     return (acc / l_safe[..., None]).astype(q.dtype)
 
 
+# ------------------------------------------------ windowed ring paged ------
+
+def _window_paged_ref_impl(q, k_pages, v_pages, block_tables, lengths, *,
+                           window, softcap, scale, page_size, block_kv):
+    del page_size, block_kv            # scheduling-only, as for the paged op
+    return _ref.window_paged_decode_attention_ref(
+        q, k_pages, v_pages, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, return_residuals=True)
+
+
+def _window_paged_kernel_impl(q, k_pages, v_pages, block_tables, lengths, *,
+                              window, softcap, scale, page_size, block_kv):
+    return _paged.window_paged_decode_attention_fwd(
+        q, k_pages, v_pages, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, page_size=page_size, block_kv=block_kv)
+
+
+def _window_paged_example(key):
+    # Ring block tables: T_w = (window-1)//ps + 2 columns, global page g
+    # at column g % T_w.  window=96 over ps=64 gives T_w=3; slot 0 has
+    # run long enough that its live pages {2,3,4} wrap the ring (columns
+    # {2,0,1}), slot 1 is still short (pages {0,1}, column 2 NULL) — the
+    # example pins both the wrap gather and the partial-first-block mask.
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    b, hq, hkv, d = 2, 4, 2, 64
+    window, page_size = 96, 64
+    tw = (window - 1) // page_size + 2
+    n_pages = 1 + b * tw                       # page 0 = reserved null page
+    q = jax.random.normal(kq, (b, hq, d), jnp.float32)
+    kpg = jax.random.normal(kk, (hkv, n_pages, page_size, d), jnp.float32)
+    vpg = jax.random.normal(kv, (hkv, n_pages, page_size, d), jnp.float32)
+    perm = jax.random.permutation(kp, jnp.arange(1, n_pages, dtype=jnp.int32))
+    lengths = jnp.array([4 * page_size + 17, page_size + 5], jnp.int32)
+    bt = jnp.zeros((b, tw), jnp.int32)
+    for i, g in enumerate(range(2, 5)):        # slot 0: live pages 2..4
+        bt = bt.at[0, g % tw].set(perm[i])
+    for i, g in enumerate(range(0, 2)):        # slot 1: live pages 0..1
+        bt = bt.at[1, g % tw].set(perm[3 + i])
+    return (q, kpg, vpg, bt, lengths), dict(
+        window=window, softcap=None, scale=None, page_size=None, block_kv=None)
+
+
+window_paged_decode_attention_op = device_op(
+    name="window_paged_decode_attention",
+    ref=_window_paged_ref_impl,
+    kernel=_window_paged_kernel_impl,
+    tunables={"page_size": 64, "block_kv": 64},
+    search_space={"page_size": (16, 32, 64), "block_kv": (16, 32, 64)},
+    constraints=(lambda cfg: cfg["page_size"] % cfg["block_kv"] == 0,),
+    differentiable=False,
+    example=_window_paged_example,
+)
+
+
+def window_paged_decode_attention(q, k_pages, v_pages, block_tables, lengths,
+                                  *, window: int,
+                                  softcap: Optional[float] = None,
+                                  scale: Optional[float] = None,
+                                  page_size: Optional[int] = None,
+                                  block_kv: Optional[int] = None,
+                                  return_residuals: bool = False):
+    """Sliding-window GQA decode attention over a *ring* block table.
+
+    q: (B, Hq, D); pools: (Hkv, P, ps, D); block_tables: (B, T_w) int32
+    ring tables (``T_w = window_table_width(window, ps)``, global page
+    ``g`` at column ``g % T_w``); lengths: (B,) valid prefix.  Semantics
+    match ``decode_attention(window=window)`` over the un-rung dense
+    cache, but the table — and the kernel grid — stay O(window) wide no
+    matter how long the context ran.
+    """
+    acc, m, l = window_paged_decode_attention_op(
+        q, k_pages, v_pages, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, page_size=page_size, block_kv=block_kv)
+    if return_residuals:
+        return acc, m, l
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l_safe[..., None]).astype(q.dtype)
+
+
+def _quant_window_paged_ref_impl(q, k_pages, v_pages, k_scales, v_scales,
+                                 block_tables, lengths, *, window, softcap,
+                                 scale, page_size, block_kv):
+    del page_size, block_kv
+    return _ref.quant_window_paged_decode_attention_ref(
+        q, k_pages, v_pages, k_scales, v_scales, block_tables, lengths,
+        window=window, softcap=softcap, scale=scale, return_residuals=True)
+
+
+def _quant_window_paged_kernel_impl(q, k_pages, v_pages, k_scales, v_scales,
+                                    block_tables, lengths, *, window, softcap,
+                                    scale, page_size, block_kv):
+    return _quant.quant_window_paged_decode_attention_fwd(
+        q, k_pages, v_pages, k_scales, v_scales, block_tables, lengths,
+        window=window, softcap=softcap, scale=scale, page_size=page_size,
+        block_kv=block_kv)
+
+
+def _quant_window_paged_example(key):
+    from repro.quant import spec_for_storage
+    (q, kpg, vpg, bt, lengths), params = _window_paged_example(key)
+    s = spec_for_storage(jnp.int8)
+    kq, ks = s.quantize_pages(kpg)
+    vq, vs = s.quantize_pages(vpg)
+    return (q, kq, vq, ks, vs, bt, lengths), dict(params)
+
+
+quant_window_paged_decode_attention_op = device_op(
+    name="quant_window_paged_decode_attention",
+    ref=_quant_window_paged_ref_impl,
+    kernel=_quant_window_paged_kernel_impl,
+    tunables={"page_size": 64, "block_kv": 64},
+    search_space={"page_size": (16, 32, 64), "block_kv": (16, 32, 64)},
+    constraints=(lambda cfg: cfg["page_size"] % cfg["block_kv"] == 0,),
+    differentiable=False,
+    example=_quant_window_paged_example,
+)
+
+
+def quant_window_paged_decode_attention(q, k_pages, v_pages, k_scales,
+                                        v_scales, block_tables, lengths, *,
+                                        window: int,
+                                        softcap: Optional[float] = None,
+                                        scale: Optional[float] = None,
+                                        page_size: Optional[int] = None,
+                                        block_kv: Optional[int] = None,
+                                        return_residuals: bool = False):
+    """Sliding-window decode over a *quantized* ring-table pool —
+    ``window_paged_decode_attention`` semantics over the dequantized
+    pools, dequant fused into the kernel body (the PR 4 path)."""
+    acc, m, l = quant_window_paged_decode_attention_op(
+        q, k_pages, v_pages, k_scales, v_scales, block_tables, lengths,
+        window=window, softcap=softcap, scale=scale, page_size=page_size,
+        block_kv=block_kv)
+    if return_residuals:
+        return acc, m, l
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l_safe[..., None]).astype(q.dtype)
+
+
 # -------------------------------------------------- speculative paged ------
 
 def _spec_paged_ref_impl(q, k_pages, v_pages, block_tables, lengths, *,

@@ -215,3 +215,160 @@ def paged_decode_attention_fwd(q, k_pages, v_pages, block_tables, lengths, *,
     m = m[:, :, :group, 0].reshape(b, hq)
     l = l[:, :, :group, 0].reshape(b, hq)
     return acc, m, l
+
+
+# ------------------------------------------------ windowed ring tables ----
+
+def _window_paged_decode_kernel(*refs, rt: DeviceRuntime, scale: float,
+                                window: int, softcap: Optional[float],
+                                page_size: int, spp: int, block_kv: int,
+                                quantized: bool):
+    # operand order matches _paged_decode_kernel: bt, len, q, k, v,
+    # [k_scales, v_scales,] outputs, scratch.  The block table is a
+    # *ring*: the index maps already resolved the page DMA, so the body
+    # only has to recover each grid step's true token position —
+    # k_start is measured from the window's first live page, which it
+    # derives from the same prefetched length the maps used.
+    _, len_ref, q_ref, k_ref, v_ref = refs[:5]
+    if quantized:
+        ks_ref, vs_ref = refs[5:7]
+        k_scale, v_scale = ks_ref[0, 0], vs_ref[0, 0]
+        rest = refs[7:]
+    else:
+        k_scale = v_scale = None
+        rest = refs[5:]
+    o_ref, m_out_ref, l_out_ref, acc_ref, m_ref, l_ref = rest
+    ib = rt.team_id(0)
+    ik = rt.team_id(2)
+    nk = rt.num_teams(2)
+    base = len_ref[ib]
+    first = jnp.maximum(base - window, 0) // page_size
+    k_start = (first + ik // spp) * page_size + (ik % spp) * block_kv
+    # flash_decode_step's window mask supplies the partial-first-block
+    # masking relative to the window start; blocks past the live range
+    # have k_start >= base and are skipped whole.
+    flash_decode_step(
+        q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+        acc_ref, m_ref, l_ref, rt=rt, scale=scale, window=window,
+        softcap=softcap, k_start=k_start,
+        length=base, ik=ik, nk=nk,
+        k_scale=k_scale, v_scale=v_scale)
+
+
+def window_paged_decode_attention_fwd(q, k_pages, v_pages, block_tables,
+                                      lengths, *, window: int,
+                                      softcap: Optional[float] = None,
+                                      scale: Optional[float] = None,
+                                      page_size: Optional[int] = None,
+                                      block_kv: int = 64,
+                                      k_scales=None, v_scales=None,
+                                      rt: Optional[DeviceRuntime] = None):
+    """Sliding-window decode over a *ring* block table.
+
+    q: (B, Hq, D); pools: (Hkv, P, ps, D); block_tables: (B, T_w) with
+    ``T_w = window_table_width(window, ps)`` — global page ``g`` sits
+    at column ``g % T_w``; lengths: (B,) int32 post-write length.
+
+    Instead of masking a full-context table, the index maps gather from
+    the window's first live page: grid step ``ik`` reads the page at
+    column ``(first_live + ik // spp) % T_w``, so the grid is O(window)
+    wide no matter how long the context ran.  Logical re-paging keeps
+    the ring law — ``(g*r + sub) % (T_w*r) == (g % T_w)*r + sub`` — so
+    the autotuner sweeps ``page_size``/``block_kv`` exactly as for the
+    prefix-table kernel.  Returns the same unnormalized (acc, m, l)
+    residual contract; ``k_scales``/``v_scales`` switch on the fused
+    per-page dequant.
+    """
+    from repro.core.runtime import runtime
+    rt = rt or runtime()
+    quantized = k_scales is not None
+    assert (v_scales is None) == (k_scales is None)
+    if window is None:
+        raise ValueError("window_paged_decode_attention requires a window "
+                         "(use paged_decode_attention for full-context "
+                         "tables)")
+    b, hq, d = q.shape
+    hkv = k_pages.shape[0]
+    ps_phys = k_pages.shape[2]
+    dv = v_pages.shape[3]
+    page_size = ps_phys if page_size is None else page_size
+    if quantized:
+        k_scales = repage_scales(k_scales, page_size, ps_phys)
+        v_scales = repage_scales(v_scales, page_size, ps_phys)
+    k_pages, bt = repage(k_pages, block_tables, page_size)
+    v_pages, _ = repage(v_pages, block_tables, page_size)
+    tw = bt.shape[1]                      # logical ring width
+
+    group = hq // hkv
+    g8 = max(SUBLANES, group)
+    scale = (d ** -0.5) if scale is None else scale
+    block_kv = min(block_kv, page_size)
+    while page_size % block_kv:
+        block_kv -= 1
+    spp = page_size // block_kv
+    nk = tw * spp                         # O(window) grid, not O(context)
+
+    qg = q.reshape(b, hkv, group, d)
+    if g8 != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g8 - group), (0, 0)))
+
+    kern = functools.partial(
+        _window_paged_decode_kernel, rt=rt, scale=scale, window=window,
+        softcap=softcap, page_size=page_size, spp=spp, block_kv=block_kv,
+        quantized=quantized)
+
+    def _col(ib, ik, len_ref):
+        first = jnp.maximum(len_ref[ib] - window, 0) // page_size
+        return (first + ik // spp) % tw
+
+    def kv_map(ib, ih, ik, bt_ref, len_ref):
+        return (ih, bt_ref[ib, _col(ib, ik, len_ref)], ik % spp, 0)
+
+    def sc_map(ib, ih, ik, bt_ref, len_ref):
+        return (ih, bt_ref[ib, _col(ib, ik, len_ref)])
+
+    def q_map(ib, ih, ik, bt_ref, len_ref):
+        del ik, bt_ref, len_ref
+        return (ib, ih, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g8, d), q_map),
+        pl.BlockSpec((1, 1, block_kv, d), kv_map),
+        pl.BlockSpec((1, 1, block_kv, dv), kv_map),
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1), sc_map), pl.BlockSpec((1, 1), sc_map)]
+        operands += [k_scales, v_scales]
+
+    grid = (b, hkv, nk)
+    acc, m, l = kernel_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, hkv, g8, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g8, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g8, LANES), jnp.float32),
+        ),
+        grid=grid,
+        num_scalar_prefetch=2,
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((1, 1, g8, dv), q_map),
+            pl.BlockSpec((1, 1, g8, LANES), q_map),
+            pl.BlockSpec((1, 1, g8, LANES), q_map),
+        ),
+        scratch_shapes=[
+            rt.alloc_shared((g8, dv), jnp.float32),
+            rt.alloc_shared((g8, LANES), jnp.float32),
+            rt.alloc_shared((g8, LANES), jnp.float32),
+        ],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        name=("portable_quant_window_paged_decode_attention" if quantized
+              else "portable_window_paged_decode_attention"),
+        rt=rt,
+    )(bt, lengths, *operands)
+
+    acc = acc[:, :, :group].reshape(b, hq, dv)
+    m = m[:, :, :group, 0].reshape(b, hq)
+    l = l[:, :, :group, 0].reshape(b, hq)
+    return acc, m, l

@@ -20,7 +20,8 @@ from typing import Optional
 
 from repro.core.runtime import DeviceRuntime
 from repro.kernels.decode_attention.paged import (  # noqa: F401
-    paged_decode_attention_fwd, repage_scales)
+    paged_decode_attention_fwd, repage_scales,
+    window_paged_decode_attention_fwd)
 
 
 def quant_paged_decode_attention_fwd(q, k_pages, v_pages, k_scales, v_scales,
@@ -38,6 +39,24 @@ def quant_paged_decode_attention_fwd(q, k_pages, v_pages, k_scales, v_scales,
     residual contract as the other decode kernels.
     """
     return paged_decode_attention_fwd(
+        q, k_pages, v_pages, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, page_size=page_size,
+        block_kv=block_kv, k_scales=k_scales, v_scales=v_scales, rt=rt)
+
+
+def quant_window_paged_decode_attention_fwd(q, k_pages, v_pages, k_scales,
+                                            v_scales, block_tables, lengths,
+                                            *, window: int,
+                                            softcap: Optional[float] = None,
+                                            scale: Optional[float] = None,
+                                            page_size: Optional[int] = None,
+                                            block_kv: int = 64,
+                                            rt: Optional[DeviceRuntime] = None):
+    """Fused-dequant variant of the windowed ring-table decode: same
+    ``(B, T_w)`` ring block table as the bf16 op, same residual
+    contract, with the ``(Hkv, P)`` scale pools riding the ring index
+    map exactly as the prefix-table quant op rides its own."""
+    return window_paged_decode_attention_fwd(
         q, k_pages, v_pages, block_tables, lengths, window=window,
         softcap=softcap, scale=scale, page_size=page_size,
         block_kv=block_kv, k_scales=k_scales, v_scales=v_scales, rt=rt)

@@ -101,6 +101,50 @@ def quant_paged_decode_attention_ref(q, k_pages, v_pages, k_scales, v_scales,
         softcap=softcap, scale=scale, return_residuals=return_residuals)
 
 
+def window_paged_decode_attention_ref(q, k_pages, v_pages, block_tables,
+                                      lengths, *, window: int,
+                                      softcap: Optional[float] = None,
+                                      scale: Optional[float] = None,
+                                      return_residuals: bool = False):
+    """Oracle for the windowed ring-table kernel.
+
+    block_tables: (B, T_w) *ring* tables — global page ``g`` lives at
+    column ``g % T_w``.  The oracle un-rings by gathering the T_w
+    columns starting at the window's first live page, producing a dense
+    cache whose row 0 is global position ``first * ps``; the plain
+    decode oracle then applies the window mask with a per-batch
+    ``kv_offset`` (broadcast through ``k_pos``).  Columns holding stale
+    or NULL pages land past the mask and never contribute.
+    """
+    b, t = block_tables.shape
+    ps = k_pages.shape[2]
+    first = jnp.maximum(lengths - window, 0) // ps              # (B,)
+    cols = (first[:, None] + jnp.arange(t)[None, :]) % t        # (B, T_w)
+    page_ids = jnp.take_along_axis(block_tables, cols, axis=1)
+    k_dense = gather_pages(k_pages, page_ids)
+    v_dense = gather_pages(v_pages, page_ids)
+    return decode_attention_ref(
+        q, k_dense, v_dense, lengths, window=window, softcap=softcap,
+        scale=scale, kv_offset=(first * ps)[:, None, None],
+        return_residuals=return_residuals)
+
+
+def quant_window_paged_decode_attention_ref(q, k_pages, v_pages, k_scales,
+                                            v_scales, block_tables, lengths,
+                                            *, window: int,
+                                            softcap: Optional[float] = None,
+                                            scale: Optional[float] = None,
+                                            return_residuals: bool = False):
+    """Quantized-pool oracle for the windowed ring-table kernel: dense
+    dequant (arithmetically identical to the kernel's fused
+    ``f32(q) * scale``), then the windowed oracle."""
+    k_dense = k_pages.astype(jnp.float32) * k_scales[:, :, None, None]
+    v_dense = v_pages.astype(jnp.float32) * v_scales[:, :, None, None]
+    return window_paged_decode_attention_ref(
+        q, k_dense, v_dense, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, return_residuals=return_residuals)
+
+
 def spec_paged_decode_attention_ref(q, k_pages, v_pages, block_tables,
                                     lengths, *,
                                     window: Optional[int] = None,

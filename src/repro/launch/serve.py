@@ -156,7 +156,10 @@ def main():
         "recoveries": st["recoveries"],
         "failed_requests": st["failed_requests"],
         "watchdog_trips": st["watchdog_trips"],
-        **({"quarantined_pages": st["quarantined"]} if args.paged else {}),
+        **({"quarantined_pages": st["quarantined"],
+            "pool_groups": st["pool_groups"]} if args.paged else {}),
+        **({"window_prefix_frees": st["window_prefix_frees"]}
+           if args.paged and engine.windowed else {}),
         **({"faults_injected": st["faults_injected"]}
            if plan is not None else {}),
         **({"accepted_tokens_per_step":

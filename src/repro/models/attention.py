@@ -21,6 +21,10 @@ from repro.sharding.kernel_sharding import (
     sharded_decode_update_attend as decode_update_attend,
     sharded_paged_decode_update_attend as paged_decode_update_attend,
     sharded_quant_paged_decode_update_attend as quant_paged_decode_update_attend,
+    sharded_window_paged_decode_update_attend as
+    window_paged_decode_update_attend,
+    sharded_quant_window_paged_decode_update_attend as
+    quant_window_paged_decode_update_attend,
     sharded_spec_paged_decode_update_attend as spec_paged_decode_update_attend,
     sharded_quant_spec_paged_decode_update_attend as
     quant_spec_paged_decode_update_attend,
@@ -36,6 +40,24 @@ def _page_coords(block_tables, lengths, page_size: int):
     can never land in a live sequence's pages.
     """
     page_idx = (lengths // page_size).astype(jnp.int32)
+    write_page = jnp.take_along_axis(block_tables, page_idx[:, None],
+                                     axis=1)[:, 0]
+    write_off = (lengths % page_size).astype(jnp.int32)
+    return write_page, write_off
+
+
+def _window_page_coords(block_tables, lengths, page_size: int):
+    """(write_page, write_off) against a (B, T_w) *ring* block table.
+
+    Global page ``g`` lives at ring column ``g % T_w``, so the write
+    page for the token at position ``lengths`` sits at column
+    ``(lengths // ps) % T_w`` — the engine's eager prefix free ran
+    before the step, so the column's previous tenant (page ``g - T_w``,
+    always behind the window) is already back in the pool.  Freed slots
+    carry an all-null row, redirecting the write to trash page 0.
+    """
+    t = block_tables.shape[1]
+    page_idx = ((lengths // page_size) % t).astype(jnp.int32)
     write_page = jnp.take_along_axis(block_tables, page_idx[:, None],
                                      axis=1)[:, 0]
     write_off = (lengths % page_size).astype(jnp.int32)
@@ -143,7 +165,8 @@ def project_kv(p, x_enc, cfg: ModelConfig, positions=None, theta=None):
 
 def decode_attn(p, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
                 kind: str = "global", theta=None, ring: bool = False,
-                block_tables=None, cache_scales=None):
+                block_tables=None, cache_scales=None,
+                windowed: bool = False):
     """One-token decode.  x: (B, 1, d).  Returns (out (B,1,d), new_k,
     new_v) — the new token's K/V is written into the cache *inside* the
     fused update+attend wrapper (sharded in sharding/kernel_sharding.py)
@@ -153,6 +176,9 @@ def decode_attn(p, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
     block_tables: (B, T) int32 — cache_k/cache_v are then head-major
     paged pools (Hkv, P, ps, D) and the new token's K/V is scattered
     into the slot's current page (paged serving; incompatible with ring).
+    windowed=True: block_tables is the (B, T_w) *ring* table of a
+    paged sliding-window layer (``kind`` must be 'local') and the step
+    routes through the O(window) ring-table kernel.
     cache_scales: (ks, vs) per-page-per-head scale pools (Hkv, P) —
     the pools are then quantized (repro.quant) and the step routes
     through the re-quantizing write + fused-dequant kernel, returning
@@ -172,8 +198,39 @@ def decode_attn(p, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
     k = L.apply_rope(k, cos[:, None, :], sin[:, None, :])
 
     if block_tables is not None:
-        assert not ring, "paged decode does not support ring caches"
+        if ring:
+            # a plain assert vanishes under ``python -O``, silently
+            # scattering ring-addressed rows into paged pools
+            raise ValueError(
+                f"paged decode does not support ring caches (layer kind "
+                f"{kind!r}, window={cfg.window}): local layers page "
+                f"through windowed ring tables (windowed=True), not "
+                f"dense rings")
         ps = cache_k.shape[2]
+        if windowed:
+            if kind != "local" or cfg.window is None:
+                raise ValueError(
+                    f"windowed paged decode requires a local layer with "
+                    f"a configured window (got kind={kind!r}, "
+                    f"window={cfg.window})")
+            write_page, write_off = _window_page_coords(
+                block_tables, lengths, ps)
+            eff = (lengths + 1).astype(jnp.int32)
+            if cache_scales is not None:
+                out, ck, cv, ks, vs = quant_window_paged_decode_update_attend(
+                    q, k, v, cache_k, cache_v,
+                    cache_scales[0], cache_scales[1], block_tables,
+                    write_page, write_off, eff, window=cfg.window,
+                    softcap=cfg.attn_softcap, page_size=ps)
+                o = jnp.einsum("bhk,hkd->bd", out,
+                               p["wo"].astype(xd))[:, None, :]
+                return o, ck, cv, ks, vs
+            out, ck, cv = window_paged_decode_update_attend(
+                q, k, v, cache_k, cache_v, block_tables, write_page,
+                write_off, eff, window=cfg.window,
+                softcap=cfg.attn_softcap, page_size=ps)
+            o = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(xd))[:, None, :]
+            return o, ck, cv
         write_page, write_off = _page_coords(block_tables, lengths, ps)
         window = cfg.window if kind == "local" else None
         if cache_scales is not None:

@@ -279,39 +279,59 @@ def apply_layer_decode(p, x, cache, cfg: ModelConfig, kind: str,
                        is_moe: bool, lengths, block_tables=None):
     """One-token layer step.  x: (B,1,d).
 
-    A cache carrying ``kp``/``vp`` holds paged pools (serve/paging.py);
-    the layer then routes through the paged update+attend kernel with
-    ``block_tables``.  A cache that also carries ``ks``/``vs`` scale
-    pools holds *quantized* pools (repro.quant) and routes through the
-    re-quantizing write + fused-dequant kernel.  Recurrent/ring/cross
-    caches are never paged and take their usual path.
+    A cache carrying ``kp``/``vp`` holds paged pools (serve/paging.py)
+    routed through the paged update+attend kernel; ``kw``/``vw`` holds
+    a paged *window* group (ring block tables, O(window) pool pressure)
+    routed through the windowed ring-table kernel.  ``block_tables`` is
+    then either the plain (B, T) array (global-only models) or a dict
+    with ``"global"`` / ``"window"`` entries for hybrid models.  A cache
+    that also carries ``ks``/``vs`` scale pools holds *quantized* pools
+    (repro.quant) and routes through the re-quantizing write +
+    fused-dequant kernel.  Recurrent/cross caches are never paged and
+    take their usual path.
     """
     h = L.apply_norm(p["ln1"], x, cfg)
     new_cache = dict(cache)
     if kind in ("global", "local"):
-        paged = "kp" in cache
+        paged_g = "kp" in cache
+        paged_w = "kw" in cache
         quantized = "ks" in cache
-        ck_in = cache["kp"] if paged else cache["k"]
-        cv_in = cache["vp"] if paged else cache["v"]
         scales = (cache["ks"], cache["vs"]) if quantized else None
-        bt = block_tables if paged else None
-        ring = (not paged and kind == "local" and cfg.window is not None
-                and cache["k"].shape[2] == cfg.window)
-        if cfg.mla:
-            out = A.decode_mla(p["attn"], h, ck_in, cv_in,
-                               lengths, cfg, block_tables=bt,
-                               cache_scales=scales)
+        if isinstance(block_tables, dict):
+            bt_g = block_tables.get("global")
+            bt_w = block_tables.get("window")
         else:
-            out = A.decode_attn(p["attn"], h, ck_in, cv_in,
-                                lengths, cfg, kind=kind, ring=ring,
+            bt_g, bt_w = block_tables, None
+        if paged_w:
+            out = A.decode_attn(p["attn"], h, cache["kw"], cache["vw"],
+                                lengths, cfg, kind=kind,
                                 theta=_theta(cfg, kind),
-                                block_tables=bt, cache_scales=scales)
+                                block_tables=bt_w, cache_scales=scales,
+                                windowed=True)
+        else:
+            ck_in = cache["kp"] if paged_g else cache["k"]
+            cv_in = cache["vp"] if paged_g else cache["v"]
+            bt = bt_g if paged_g else None
+            ring = (not paged_g and kind == "local"
+                    and cfg.window is not None
+                    and cache["k"].shape[2] == cfg.window)
+            if cfg.mla:
+                out = A.decode_mla(p["attn"], h, ck_in, cv_in,
+                                   lengths, cfg, block_tables=bt,
+                                   cache_scales=scales)
+            else:
+                out = A.decode_attn(p["attn"], h, ck_in, cv_in,
+                                    lengths, cfg, kind=kind, ring=ring,
+                                    theta=_theta(cfg, kind),
+                                    block_tables=bt, cache_scales=scales)
         if quantized:
             y, ck, cv, ks, vs = out
             new_cache["ks"], new_cache["vs"] = ks, vs
         else:
             y, ck, cv = out
-        if paged:
+        if paged_w:
+            new_cache["kw"], new_cache["vw"] = ck, cv
+        elif paged_g:
             new_cache["kp"], new_cache["vp"] = ck, cv
         else:
             new_cache["k"], new_cache["v"] = ck, cv

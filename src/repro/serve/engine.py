@@ -96,6 +96,11 @@ class ServeConfig:
     paged: bool = False
     page_size: Optional[int] = None    # None -> per-target tuning table
     total_pages: Optional[int] = None  # None -> 1 + slots*pages_per_slot
+    # Window-group pool size (paged hybrid models only): pages backing
+    # the kw/vw pools of sliding-window layers.  None -> 1 + slots *
+    # window_table_width, which never exhausts because eager prefix
+    # free keeps every slot's window footprint <= T_w pages.
+    total_pages_window: Optional[int] = None
     on_overflow: str = "reject"        # "reject" | "truncate"
     # KV pool dtype (paged only): None = model-dtype passthrough;
     # "bf16" | "int8" | "fp8_e4m3" resolve through the arch-aware
@@ -231,11 +236,40 @@ class Engine:
             # pages ensured for each slot this step (page-count horizon
             # the spec-step rollback truncates back from)
             self._ensured = np.zeros((slots,), np.int64)
+            # window group: sliding-window ("local") layers page through
+            # ring block tables over their own pool, O(window) per slot.
+            # MLA models cache full per-head K/V even for local kinds,
+            # so they stay in the global group (mirrors the routing in
+            # paging._is_window_leaf_dict).
+            self.window = getattr(self.cfg, "window", None)
+            self.windowed = bool(
+                "local" in set(self.cfg.layer_kinds())
+                and self.window and self.window < sc.cache_len
+                and not self.cfg.mla)
+            total_w = None
+            if self.windowed:
+                self.tw = paging.window_table_width(self.window,
+                                                    self.page_size)
+                total_w = sc.total_pages_window or (1 + slots * self.tw)
+                self.allocator_w = paging.PageAllocator(total_w)
+                self.block_tables_w = np.full((slots, self.tw),
+                                              paging.NULL_PAGE, np.int32)
+                self._btw_dev = jnp.asarray(self.block_tables_w)
+                self._btw_dirty = False
+                # first live global page per slot (the sliding lease's
+                # low-water mark free_prefix advances from)
+                self.win_first = np.zeros((slots,), np.int64)
+                self.window_prefix_frees = 0
             self.caches = paging.init_paged_caches(
                 model, slots, sc.cache_len, self.page_size, total,
-                kv_spec=self.kv_spec)
+                kv_spec=self.kv_spec, total_pages_window=total_w)
+            has_kw = any("kw" in c for seg in self.caches for c in seg)
+            assert has_kw == self.windowed, \
+                "engine/paging window-group routing disagree"
         else:
             self.kv_spec = None
+            self.windowed = False
+            self.window = None
             self.caches = model.init_decode_caches(slots, sc.cache_len)
 
         # device-resident scheduler state
@@ -435,11 +469,15 @@ class Engine:
         return spec_step_fn
 
     def _build_admit(self):
+        window = self.window if self.windowed else None
+
         def admit_fn(caches, lengths, cur_tok, active, n_out, tok_hist,
                      cache1, first_tok, slot_idx, plens, admit_active,
-                     n_out_vals, page_rows, hist_rows):
+                     n_out_vals, page_rows, hist_rows, page_rows_w):
             caches = paging.scatter_prefill(caches, cache1, slot_idx,
-                                            page_rows)
+                                            page_rows,
+                                            page_rows_w=page_rows_w,
+                                            plens=plens, window=window)
             lengths = lengths.at[slot_idx].set(plens)
             cur_tok = cur_tok.at[slot_idx].set(first_tok)
             active = active.at[slot_idx].set(admit_active)
@@ -466,6 +504,15 @@ class Engine:
             fits = usable * self.page_size - 1
             limit = min(limit, fits) if self.sc.on_overflow == "truncate" \
                 else limit
+            if (self.sc.on_overflow != "truncate" and self.windowed
+                    and len(paging.live_window_pages(
+                        len(req.tokens) + 1, self.window,
+                        self.page_size)) > self.allocator_w.usable):
+                raise ValueError(
+                    f"request {req.rid}: prompt of {len(req.tokens)} tokens "
+                    f"needs more window KV pages than the window pool "
+                    f"holds ({self.allocator_w.usable} x {self.page_size}); "
+                    f"raise total_pages_window")
             if (self.sc.on_overflow != "truncate"
                     and paging.pages_per_slot(len(req.tokens) + 1,
                                               self.page_size) > usable):
@@ -564,6 +611,12 @@ class Engine:
             need = paging.pages_per_slot(min(plen + 1, self.sc.cache_len),
                                          self.page_size)
             fit = self.allocator.available // max(need, 1)
+            if self.windowed:
+                need_w = len(paging.live_window_pages(
+                    min(plen + 1, self.sc.cache_len), self.window,
+                    self.page_size))
+                fit = min(fit,
+                          self.allocator_w.available // max(need_w, 1))
             if fit < len(reqs):
                 self._requeue_front(reqs[fit:])
                 reqs = reqs[:fit]
@@ -587,6 +640,7 @@ class Engine:
         first_h = np.asarray(_device_get(first))     # one sync per group
 
         page_rows = None
+        page_rows_w = None
         if self.paged:
             rows = np.full((k, self.pages_per_slot), paging.NULL_PAGE,
                            np.int32)
@@ -596,6 +650,22 @@ class Engine:
                 self.block_tables[slot] = rows[i]
             page_rows = jnp.asarray(rows)
             self._bt_dirty = True
+            if self.windowed:
+                # window group: allocate only the prompt's live window
+                # pages.  rows_w is global-page-indexed (full timeline
+                # width) for the prefill scatter; the persistent ring
+                # table keeps the same pages at column g % T_w.
+                rows_w = np.full((k, self.pages_per_slot),
+                                 paging.NULL_PAGE, np.int32)
+                for i, slot in enumerate(slots):
+                    for g in paging.live_window_pages(
+                            plen, self.window, self.page_size):
+                        rows_w[i, g] = self.allocator_w.alloc()
+                        self.block_tables_w[slot, g % self.tw] = rows_w[i, g]
+                    self.win_first[slot] = paging.first_live_page(
+                        plen, self.window, self.page_size)
+                page_rows_w = jnp.asarray(rows_w)
+                self._btw_dirty = True
 
         admit_active = np.ones((k,), bool)
         for i, (req, slot) in enumerate(zip(reqs, slots)):
@@ -616,7 +686,8 @@ class Engine:
             self.n_out, self.tok_hist, cache1, jnp.asarray(first_h),
             jnp.asarray(slots, jnp.int32),
             jnp.full((k,), plen, jnp.int32), jnp.asarray(admit_active),
-            jnp.asarray(n_out_vals), page_rows, jnp.asarray(hist_rows))
+            jnp.asarray(n_out_vals), page_rows, jnp.asarray(hist_rows),
+            page_rows_w)
 
         for i, (req, slot) in enumerate(zip(reqs, slots)):
             self._seq += 1
@@ -646,6 +717,11 @@ class Engine:
             self.allocator.reclaim(self.block_tables[slot])
             self.block_tables[slot] = paging.NULL_PAGE
             self._bt_dirty = True
+            if self.windowed:
+                self.allocator_w.reclaim(self.block_tables_w[slot])
+                self.block_tables_w[slot] = paging.NULL_PAGE
+                self.win_first[slot] = 0
+                self._btw_dirty = True
 
     # -- preempt/requeue scheduler ----------------------------------------
     def _select_victim(self, needy: int) -> Optional[int]:
@@ -714,9 +790,22 @@ class Engine:
             slot = int(slot)
             if not self._active_h[slot]:       # preempted earlier in loop
                 continue
-            needed = paging.pages_per_slot(
-                min(int(self._len_h[slot]) + horizon, self.sc.cache_len),
-                self.page_size)
+            target = min(int(self._len_h[slot]) + horizon,
+                         self.sc.cache_len)
+            if self.windowed:
+                # eager reclaim first: pages the advancing window left
+                # behind go back to the pool *before* anything allocates
+                # this step, so window-pool pressure stays O(window)
+                new_first = paging.first_live_page(
+                    target, self.window, self.page_size)
+                freed = paging.free_prefix(
+                    self.allocator_w, self.block_tables_w[slot],
+                    int(self.win_first[slot]), new_first)
+                if freed:
+                    self.window_prefix_frees += freed
+                    self._btw_dirty = True
+                self.win_first[slot] = new_first
+            needed = paging.pages_per_slot(target, self.page_size)
             faulted = False
             for j in range(needed):
                 if self.block_tables[slot, j] != paging.NULL_PAGE:
@@ -749,6 +838,32 @@ class Engine:
                 self._bt_dirty = True
             if not faulted:
                 self._ensured[slot] = needed
+                if self.windowed:
+                    # the ring column a fresh page lands in was vacated
+                    # by free_prefix (its old occupant is exactly T_w
+                    # pages behind, always outside the live window), so
+                    # with default pool sizing this alloc cannot run
+                    # dry; an explicit undersized total_pages_window
+                    # falls back on preemption like the global pool
+                    for g in paging.live_window_pages(
+                            target, self.window, self.page_size):
+                        col = g % self.tw
+                        if self.block_tables_w[slot, col] != \
+                                paging.NULL_PAGE:
+                            continue
+                        if self.sc.preempt_policy != "fail":
+                            while self.allocator_w.available == 0:
+                                victim = self._select_victim(slot)
+                                if victim is None:
+                                    raise RuntimeError(
+                                        f"window KV page pool exhausted: "
+                                        f"slot {slot} is the only active "
+                                        f"sequence; raise "
+                                        f"ServeConfig.total_pages_window")
+                                self._preempt(victim)
+                        self.block_tables_w[slot, col] = \
+                            self.allocator_w.alloc()
+                        self._btw_dirty = True
 
     # -- fault injection + recovery ladder --------------------------------
     def _draw_faults(self):
@@ -871,8 +986,13 @@ class Engine:
         smoke gates call this after every step."""
         if not self.paged:
             return []
-        return paging.audit(self.allocator, self.block_tables,
-                            self._len_h, self._active_h, self.page_size)
+        probs = paging.audit(self.allocator, self.block_tables,
+                             self._len_h, self._active_h, self.page_size)
+        if self.windowed:
+            probs += ["window: " + p for p in paging.audit(
+                self.allocator_w, self.block_tables_w, self._len_h,
+                self._active_h, self.page_size, window=self.window)]
+        return probs
 
     # -- main loop ---------------------------------------------------------
     def step(self) -> bool:
@@ -897,6 +1017,11 @@ class Engine:
                 self._bt_dev = jnp.asarray(self.block_tables)
                 self._bt_dirty = False
             bt = self._bt_dev
+            if self.windowed:
+                if self._btw_dirty:
+                    self._btw_dev = jnp.asarray(self.block_tables_w)
+                    self._btw_dirty = False
+                bt = {"global": self._bt_dev, "window": self._btw_dev}
         else:
             bt = None
         self._key, sub = jax.random.split(self._key)
@@ -1024,7 +1149,15 @@ class Engine:
         if self.fault_plan is not None:
             d["faults_injected"] = dict(self.fault_plan.injected)
         if self.paged:
+            # top-level pressure keys stay the global group's (the keys
+            # every existing gate reads); pool_groups breaks pressure
+            # out per layer-group for hybrid models
             d.update(self.allocator.pressure())
+            groups = {"global": self.allocator.pressure()}
+            if self.windowed:
+                groups["window"] = self.allocator_w.pressure()
+                d["window_prefix_frees"] = self.window_prefix_frees
+            d["pool_groups"] = groups
         if self.spec:
             d.update({"spec_steps": self.spec_steps,
                       "spec_emitted": self.spec_emitted,

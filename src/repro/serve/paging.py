@@ -15,11 +15,24 @@ the stale ``cur_tok`` a dead slot keeps feeding through the batched
 decode scatters its KV into trash instead of a live sequence (the paged
 fix for the slot engine's stale-slot bug).
 
-Only caches with a ``cache_len``-long sequence axis are paged (global
-attention and MLA; local ring buffers, recurrent ssm/xlstm states, and
-encoder cross-KV are fixed-size and stay slot-dense).  Paged cache
-dicts carry ``kp``/``vp`` pools of shape ``(reps, Hkv, P, ps, D)`` in
-place of ``k``/``v``; the transformer decode path routes on that key
+Every *attention* cache is paged through this one block-table
+abstraction; only recurrent ssm/xlstm states and encoder cross-KV stay
+slot-dense.  Two pool groups exist:
+
+* **global** (global attention and MLA): ``kp``/``vp`` pools of shape
+  ``(reps, Hkv, P, ps, D)`` with per-slot block tables indexed by
+  logical page number — ``row[g]`` is the page holding tokens
+  ``[g*ps, (g+1)*ps)``.
+* **window** (local attention with ``window < cache_len``): ``kw``/
+  ``vw`` pools with a *ring* block table of bounded width ``T_w =
+  (window - 1)//ps + 2`` (``window_table_width``).  Global page ``g``
+  lives at column ``g % T_w``; because the window's live page span
+  never exceeds ``T_w``, the column a new write page needs is always
+  either NULL or held by page ``g - T_w``, which is already behind the
+  window — so ``free_prefix`` (eager behind-window reclaim) run before
+  each step's ensure keeps pool pressure O(window), not O(context).
+
+The transformer decode path routes on the key names
 (models/transformer.py::apply_layer_decode).
 
 **Quantized pools** (repro.quant): with a :class:`~repro.quant.
@@ -192,6 +205,78 @@ def pages_per_slot(cache_len: int, page_size: int) -> int:
     return -(-cache_len // page_size)
 
 
+# ------------------------------------------------ windowed block tables ----
+
+def window_table_width(window: int, page_size: int) -> int:
+    """Ring block-table width for a sliding-window layer.
+
+    An interval of ``window`` token positions touches at most
+    ``(window - 1)//ps + 1`` pages at the worst alignment; one extra
+    column lets the next write page coexist with a not-yet-freed first
+    page, so the live span never wraps onto itself.
+    """
+    return (window - 1) // page_size + 2
+
+
+def first_live_page(length: int, window: int, page_size: int) -> int:
+    """First global page holding any in-window token for a sequence of
+    ``length`` tokens (the window covers ``[length - window, length)``).
+    Pages before it are dead and must be freed eagerly."""
+    return max(0, length - window) // page_size
+
+
+def live_window_pages(length: int, window: int, page_size: int) -> range:
+    """Global page numbers a windowed slot of ``length`` tokens must
+    have mapped (empty for length <= 0).  Always spans at most
+    ``window_table_width`` pages."""
+    if length <= 0:
+        return range(0)
+    return range(first_live_page(length, window, page_size),
+                 (length - 1) // page_size + 1)
+
+
+def free_prefix(allocator: PageAllocator, table_row, old_first: int,
+                new_first: int) -> int:
+    """Eagerly free a windowed slot's behind-window pages, in place.
+
+    ``table_row`` is a ring row of width ``T``: global page ``g`` sits
+    at column ``g % T``.  Frees pages ``[old_first, new_first)`` (the
+    sliding lease the window just slid past) back to the pool and
+    resets their columns to ``NULL_PAGE``.  This is the window-group
+    dual of ``truncate_suffix`` — prefix instead of suffix — and runs
+    *before* each step's page ensure, so a write page's column is
+    always vacant by the time it is needed.
+
+    Strict like ``truncate_suffix``: every column in the range must
+    hold a real allocated page (a NULL there means the prefix was
+    already freed — an accounting bug, not a no-op), and the range may
+    not exceed the ring width (that would lap live columns).  Returns
+    the number of pages freed.
+    """
+    if new_first < old_first:
+        raise ValueError(
+            f"free_prefix: window start moved backwards "
+            f"({old_first} -> {new_first})")
+    t = len(table_row)
+    if new_first - old_first > t:
+        raise ValueError(
+            f"free_prefix: freeing {new_first - old_first} pages would "
+            f"lap the ring (width {t}) — window start was not advanced "
+            f"every step")
+    cols = [(g % t) for g in range(old_first, new_first)]
+    pages = [int(table_row[c]) for c in cols]
+    if any(p == NULL_PAGE for p in pages):
+        raise ValueError(
+            f"free_prefix: pages [{old_first}:{new_first}) contain "
+            f"NULL_PAGE entries — prefix already freed or never "
+            f"allocated (row={list(int(p) for p in table_row)})")
+    if pages:
+        allocator.free(pages)         # validates the batch atomically
+        for c in cols:
+            table_row[c] = NULL_PAGE
+    return len(pages)
+
+
 def truncate_suffix(allocator: PageAllocator, table_row, keep: int,
                     upto: Optional[int] = None) -> int:
     """Free a block-table row's page suffix ``[keep, upto)`` back to the
@@ -224,7 +309,7 @@ def truncate_suffix(allocator: PageAllocator, table_row, keep: int,
 
 
 def audit(allocator: PageAllocator, block_tables, lengths, active,
-          page_size: int) -> List[str]:
+          page_size: int, window: Optional[int] = None) -> List[str]:
     """Check every allocator/block-table invariant that must hold at a
     step boundary; returns a list of problems (empty = consistent).
 
@@ -242,8 +327,16 @@ def audit(allocator: PageAllocator, block_tables, lengths, active,
       the strict free/reclaim path exists to prevent);
     * ``in_use`` equals the sum of live-prefix page counts.
 
-    Wired as ``Engine.audit()`` and run after every step of the serve /
-    oversub / spec / chaos smoke gates.
+    With ``window`` set the tables are *ring* rows (window group): the
+    live set becomes the columns ``g % T`` of ``live_window_pages``
+    instead of a prefix, so the same walk enforces the window
+    invariants — the live window suffix fully mapped, nothing mapped
+    behind the window start, and ``in_use`` equal to the sum of live
+    window pages (O(window) per slot, regardless of context length).
+
+    Wired as ``Engine.audit()`` (once per pool group) and run after
+    every step of the serve / oversub / spec / chaos / hybrid smoke
+    gates.
     """
     problems: List[str] = []
     total = allocator.total_pages
@@ -276,30 +369,41 @@ def audit(allocator: PageAllocator, block_tables, lengths, active,
     leased: dict = {}
     need_total = 0
     for slot, row in enumerate(block_tables):
-        n_live = (pages_per_slot(int(lengths[slot]), page_size)
-                  if active[slot] else 0)
-        need_total += n_live
+        length = int(lengths[slot]) if active[slot] else 0
+        if window is None:
+            live_at = {j: j for j in range(
+                pages_per_slot(length, page_size) if length > 0 else 0)}
+        else:
+            tw = len(row)
+            live_at = {g % tw: g
+                       for g in live_window_pages(length, window, page_size)}
+        need_total += len(live_at)
         for j, p in enumerate(row):
             p = int(p)
-            if j < n_live:
+            if j in live_at:
                 if p == NULL_PAGE:
+                    where = ("live prefix at index" if window is None else
+                             f"live window (page {live_at[j]}) at column")
                     problems.append(f"slot {slot}: NULL_PAGE inside the "
-                                    f"live prefix at index {j} "
-                                    f"(length {int(lengths[slot])})")
+                                    f"{where} {j} "
+                                    f"(length {length})")
                 elif p not in alloc:
                     problems.append(f"slot {slot}: live page {p} is not "
                                     f"allocated (in "
                                     f"{'quarantine' if p in quar else 'free list' if p in free else 'limbo'})")
             elif p != NULL_PAGE:
-                problems.append(f"slot {slot}: page {p} past the live "
-                                f"prefix at index {j} (would leak)")
+                where = ("past the live prefix at index" if window is None
+                         else "mapped behind the live window at column")
+                problems.append(f"slot {slot}: page {p} {where} {j} "
+                                f"(would leak)")
             if p != NULL_PAGE:
                 if p in leased:
                     problems.append(f"page {p} leased to both slot "
                                     f"{leased[p]} and slot {slot}")
                 leased[p] = slot
     if need_total != allocator.in_use:
-        problems.append(f"in_use {allocator.in_use} != sum of live-prefix "
+        what = "live-prefix" if window is None else "live window"
+        problems.append(f"in_use {allocator.in_use} != sum of {what} "
                         f"pages {need_total}")
     return problems
 
@@ -309,36 +413,83 @@ def _is_paged_leaf_dict(c, cache_len: int) -> bool:
             and c["k"].shape[3] == cache_len)
 
 
+def _is_window_leaf_dict(c, kind: str, cache_len: int,
+                         window: Optional[int]) -> bool:
+    # A local-attention layer whose ring is genuinely smaller than the
+    # context gets the window group; a window >= cache_len ring is just
+    # a dense cache, so it pages through the global group (the paged
+    # kernel applies the window mask over the full table there).
+    return (kind == "local" and window is not None and window < cache_len
+            and "k" in c and hasattr(c["k"], "ndim") and c["k"].ndim == 5
+            and c["k"].shape[3] == min(cache_len, window))
+
+
+def _layer_kinds_by_segment(model):
+    """kinds[i][j] = layer kind of segment i, block-layer j (aligned
+    with the abstract cache tree's structure)."""
+    from repro.models.transformer import plan_segments
+    plans = plan_segments(model.cfg)
+    return [[kind for kind, _ in p.block] for p in plans]
+
+
+def _pool_pair(leaf, total: int, page_size: int,
+               kv_spec: Optional[KVQuantSpec]):
+    reps, _, h, _, d = leaf.shape
+    dtype = kv_spec.storage if kv_spec else leaf.dtype
+    pool = jnp.zeros((reps, h, total, page_size, d), dtype)
+    scales = (jnp.ones((reps, h, total), kv_spec.scale_dtype)
+              if kv_spec is not None and kv_spec.quantized else None)
+    return pool, scales
+
+
 def init_paged_caches(model, slots: int, cache_len: int, page_size: int,
                       total_pages: int,
-                      kv_spec: Optional[KVQuantSpec] = None):
+                      kv_spec: Optional[KVQuantSpec] = None,
+                      total_pages_window: Optional[int] = None):
     """Build the paged decode-cache tree for ``model``.
 
-    Derived from the abstract dense tree (no dense allocation): each
-    pageable layer's ``k``/``v`` (reps, slots, H, S, D) becomes
-    ``kp``/``vp`` pools (reps, H, total_pages, page_size, D); every
-    other leaf keeps its dense slot-major shape.  With a quantizing
-    ``kv_spec`` the pools take the spec's storage dtype and parallel
-    ``ks``/``vs`` scale pools (reps, H, total_pages) appear (ones-
+    Derived from the abstract dense tree (no dense allocation), routed
+    by layer kind: global/MLA KV ``k``/``v`` (reps, slots, H, S, D)
+    becomes ``kp``/``vp`` pools (reps, H, total_pages, page_size, D);
+    local-attention rings (window < cache_len) become ``kw``/``vw``
+    pools over their own ``total_pages_window``-page pool (default
+    ``1 + slots * window_table_width``, the never-exhausting sizing);
+    recurrent/cross leaves keep their dense slot-major shape.  With a
+    quantizing ``kv_spec`` pools of either group take the spec's
+    storage dtype and grow parallel ``ks``/``vs`` scale pools (ones-
     initialized: a zero pool dequantizes to zeros under any scale, and
     a unit scale keeps dequantization total before the first write).
     """
+    window = getattr(model.cfg, "window", None)
+    if total_pages_window is None and window is not None:
+        total_pages_window = 1 + slots * window_table_width(window,
+                                                            page_size)
     abstract = model.abstract_decode_caches(slots, cache_len)
+    kinds = _layer_kinds_by_segment(model)
     caches = []
-    for seg in abstract:
+    for seg, seg_kinds in zip(abstract, kinds):
         new_seg = []
-        for c in seg:
+        for c, kind in zip(seg, seg_kinds):
             if _is_paged_leaf_dict(c, cache_len):
                 nc = {}
                 for name, leaf in c.items():
                     if name in ("k", "v"):
-                        reps, _, h, _, d = leaf.shape
-                        dtype = kv_spec.storage if kv_spec else leaf.dtype
-                        nc["kp" if name == "k" else "vp"] = jnp.zeros(
-                            (reps, h, total_pages, page_size, d), dtype)
-                        if kv_spec is not None and kv_spec.quantized:
-                            nc["ks" if name == "k" else "vs"] = jnp.ones(
-                                (reps, h, total_pages), kv_spec.scale_dtype)
+                        pool, scales = _pool_pair(leaf, total_pages,
+                                                  page_size, kv_spec)
+                        nc["kp" if name == "k" else "vp"] = pool
+                        if scales is not None:
+                            nc["ks" if name == "k" else "vs"] = scales
+                    else:
+                        nc[name] = jnp.zeros(leaf.shape, leaf.dtype)
+            elif _is_window_leaf_dict(c, kind, cache_len, window):
+                nc = {}
+                for name, leaf in c.items():
+                    if name in ("k", "v"):
+                        pool, scales = _pool_pair(leaf, total_pages_window,
+                                                  page_size, kv_spec)
+                        nc["kw" if name == "k" else "vw"] = pool
+                        if scales is not None:
+                            nc["ks" if name == "k" else "vs"] = scales
                     else:
                         nc[name] = jnp.zeros(leaf.shape, leaf.dtype)
             else:
@@ -390,14 +541,63 @@ def _scatter_slots(pool, one, slot_idx):
     return pool.at[:, slot_idx].set(one.astype(pool.dtype))
 
 
-def scatter_prefill(caches, cache1, slot_idx, page_rows=None):
+def _unring_window(one, page_rows_w, ps: int, window: int, plens):
+    """Expand a batch-k *ring* prefill leaf (reps, k, H, W, D) into page
+    blocks (reps, H, k, T, ps, D) at true token positions.
+
+    The ring stores position ``p`` at slot ``p % W`` (the same slot law
+    ``_ring_from_full`` produces and decode's modular writes maintain),
+    so the inverse gather rebuilds the dense timeline; positions
+    outside ``[plen - window, plen)`` are zeroed — their pages are
+    behind the window (their ``page_rows_w`` entries are NULL, so the
+    zeros land in trash) or past the prompt (masked by length).  Only
+    the window tail is ever re-materialized: O(window) work per layer,
+    which is what makes preemption re-prefill cheap for local layers.
+    """
+    reps, k, h, w, d = one.shape
+    t = page_rows_w.shape[1]
+    pos = jnp.arange(t * ps)
+    full = jnp.take(one, pos % w, axis=3)        # (reps, k, H, T*ps, D)
+    valid = ((pos[None, :] >= plens[:, None] - window)
+             & (pos[None, :] < plens[:, None]))  # (k, T*ps)
+    full = jnp.where(valid[None, :, None, :, None], full, 0.0)
+    return full.reshape(reps, k, h, t, ps, d).transpose(0, 2, 1, 3, 4, 5)
+
+
+def _scatter_pages_window(pool, one, page_rows_w, window: int, plens):
+    """Window-group page scatter: un-ring the prefill leaf, then write
+    exactly like the global scatter (NULL rows land in trash)."""
+    blocks = _unring_window(one, page_rows_w, pool.shape[3], window, plens)
+    return pool.at[:, :, page_rows_w].set(blocks.astype(pool.dtype))
+
+
+def _scatter_pages_window_quant(pool, scale_pool, one, page_rows_w,
+                                window: int, plens):
+    """Quantizing window scatter: absmax per (head, page) block over the
+    un-rung blocks (behind-window rows are zero padding, so they never
+    inflate a page's absmax)."""
+    from repro.quant import spec_for_storage
+    spec = spec_for_storage(pool.dtype)
+    blocks = _unring_window(one, page_rows_w, pool.shape[3], window, plens)
+    q, scales = spec.quantize_pages(blocks)
+    return (pool.at[:, :, page_rows_w].set(q),
+            scale_pool.at[:, :, page_rows_w].set(
+                scales.astype(scale_pool.dtype)))
+
+
+def scatter_prefill(caches, cache1, slot_idx, page_rows=None,
+                    page_rows_w=None, plens=None, window=None):
     """Admit a prefilled group into the cache tree (paged or dense).
 
-    caches: engine cache tree (paged dicts carry kp/vp, plus ks/vs
-    scale pools when quantized); cache1: the dense tree from
+    caches: engine cache tree (paged dicts carry kp/vp or kw/vw, plus
+    ks/vs scale pools when quantized); cache1: the dense tree from
     ``model.prefill`` at batch k; slot_idx: (k,) target slots;
-    page_rows: (k, T) destination pages (paged mode only).  One jitted
-    call per admitted group — the batched replacement for the
+    page_rows: (k, T) destination pages for the global group;
+    page_rows_w: (k, T) full-width destination pages for the window
+    group — NULL everywhere except the live window pages, so only the
+    window tail lands in real pages; plens: (k,) prompt lengths (the
+    window mask needs them); window: the model's sliding window.  One
+    jitted call per admitted group — the batched replacement for the
     per-request ``dynamic_update_slice`` loop.
     """
     out = []
@@ -419,8 +619,24 @@ def scatter_prefill(caches, cache1, slot_idx, page_rows=None):
                             leaf, c["vs"], one["v"], page_rows)
                     else:
                         nc[name] = _scatter_pages(leaf, one["v"], page_rows)
+                elif name == "kw":
+                    if quantized:
+                        nc["kw"], nc["ks"] = _scatter_pages_window_quant(
+                            leaf, c["ks"], one["k"], page_rows_w, window,
+                            plens)
+                    else:
+                        nc[name] = _scatter_pages_window(
+                            leaf, one["k"], page_rows_w, window, plens)
+                elif name == "vw":
+                    if quantized:
+                        nc["vw"], nc["vs"] = _scatter_pages_window_quant(
+                            leaf, c["vs"], one["v"], page_rows_w, window,
+                            plens)
+                    else:
+                        nc[name] = _scatter_pages_window(
+                            leaf, one["v"], page_rows_w, window, plens)
                 elif name in ("ks", "vs"):
-                    pass                     # written alongside kp/vp
+                    pass                # written alongside kp/vp or kw/vw
                 else:
                     nc[name] = _scatter_slots(leaf, one[name], slot_idx)
             new_seg.append(nc)

@@ -42,7 +42,8 @@ from repro.core.compat import shard_map
 from repro.core.runtime import runtime
 from repro.kernels.decode_attention.ops import (
     decode_attention, paged_decode_attention, quant_paged_decode_attention,
-    quant_spec_paged_decode_attention, spec_paged_decode_attention)
+    quant_spec_paged_decode_attention, quant_window_paged_decode_attention,
+    spec_paged_decode_attention, window_paged_decode_attention)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.mamba_scan.ops import mamba_scan
 from repro.kernels.mlstm_scan.ops import mlstm_scan
@@ -53,6 +54,8 @@ __all__ = [
     "sharded_flash_attention", "sharded_decode_attention",
     "sharded_paged_decode_update_attend",
     "sharded_quant_paged_decode_update_attend",
+    "sharded_window_paged_decode_update_attend",
+    "sharded_quant_window_paged_decode_update_attend",
     "sharded_spec_paged_decode_update_attend",
     "sharded_quant_spec_paged_decode_update_attend",
     "sharded_mamba_scan", "sharded_mlstm_scan", "sharded_rmsnorm",
@@ -377,6 +380,129 @@ def sharded_quant_paged_decode_update_attend(q, k_new, v_new,
 
     # no batch sharding (same as the bf16 paged wrapper): every shard
     # must see every slot's write — the pool has no batch dim.
+    dp = None
+    tp = _tp(mesh)
+    if hq % tp == 0 and hkv % tp == 0:
+        qs, ns_ = P(dp, "model", None), P(dp, "model", None)
+        ps_ = P("model", None, None, None)
+        ss_ = P("model", None)
+    else:
+        qs, ns_ = P(dp, None, None), P(dp, None, None)
+        ps_ = P(None, None, None, None)
+        ss_ = P(None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(qs, ns_, ns_, ps_, ps_, ss_, ss_, P(dp, None),
+                  P(dp), P(dp), P(dp)),
+        out_specs=(qs, ps_, ps_, ss_, ss_), check_vma=False)(
+        q, k_new, v_new, k_pages, v_pages, k_scales, v_scales,
+        block_tables, write_page, write_off, eff_len)
+
+
+def sharded_window_paged_decode_update_attend(q, k_new, v_new, k_pages,
+                                              v_pages, block_tables,
+                                              write_page, write_off, eff_len,
+                                              *, window: int,
+                                              softcap: Optional[float] = None,
+                                              scale: Optional[float] = None,
+                                              page_size: Optional[int] = None,
+                                              block_kv: Optional[int] = None):
+    """Fused page write + windowed ring-table decode attention.
+
+    Identical contract to ``sharded_paged_decode_update_attend`` except
+    ``block_tables`` is the (B, T_w) *ring* (global page ``g`` at column
+    ``g % T_w``) and ``window`` is required.  The engine resolves the
+    write page from the ring before the call (column ``(L // ps) %
+    T_w``), so the scatter itself is position-blind — same §Perf-B.1
+    rule, pool writes INSIDE the shard_map region; same layout policy
+    (head-sharded when divisible, else replicated; no batch sharding).
+    """
+    mesh = maybe_mesh()
+    b, hq, _ = q.shape
+    hkv = k_pages.shape[0]
+    kw = dict(window=window, softcap=softcap, scale=scale,
+              page_size=page_size, block_kv=block_kv)
+
+    def update(kp, vp, kn, vn, page, off):
+        kn = jnp.swapaxes(kn, 0, 1).astype(kp.dtype)      # (Hkv, B, D)
+        vn = jnp.swapaxes(vn, 0, 1).astype(vp.dtype)
+        kp = kp.at[:, page, off].set(kn)
+        vp = vp.at[:, page, off].set(vn)
+        return kp, vp
+
+    def body(q_, kn, vn, kp, vp, bt, page, off, ln):
+        kp, vp = update(kp, vp, kn, vn, page, off)
+        return (window_paged_decode_attention(q_, kp, vp, bt, ln, **kw),
+                kp, vp)
+
+    if not _use_wrappers(mesh):
+        return body(q, k_new, v_new, k_pages, v_pages, block_tables,
+                    write_page, write_off, eff_len)
+
+    dp = None                      # no batch sharding: pool has no batch dim
+    tp = _tp(mesh)
+    if hq % tp == 0 and hkv % tp == 0:
+        qs, ns_ = P(dp, "model", None), P(dp, "model", None)
+        ps_ = P("model", None, None, None)
+    else:
+        qs, ns_ = P(dp, None, None), P(dp, None, None)
+        ps_ = P(None, None, None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(qs, ns_, ns_, ps_, ps_, P(dp, None), P(dp), P(dp), P(dp)),
+        out_specs=(qs, ps_, ps_), check_vma=False)(
+        q, k_new, v_new, k_pages, v_pages, block_tables,
+        write_page, write_off, eff_len)
+
+
+def sharded_quant_window_paged_decode_update_attend(
+        q, k_new, v_new, k_pages, v_pages, k_scales, v_scales,
+        block_tables, write_page, write_off, eff_len, *, window: int,
+        softcap: Optional[float] = None, scale: Optional[float] = None,
+        page_size: Optional[int] = None, block_kv: Optional[int] = None):
+    """Fused re-quantizing page write + quantized windowed decode.
+
+    The write path is byte-for-byte the PR 4 single-row re-quantizing
+    update (gather page → dequant → splice → zero stale tail →
+    re-absmax → requant) — ring columns recycle pages constantly, and
+    the zero-past-offset step is what keeps a recycled page's previous
+    tenant out of the refreshed absmax.  Attention goes through the
+    windowed ring-table kernel; layouts follow the quant paged wrapper
+    (scale pools sharded head-major with the KV pools).
+    """
+    from repro.quant import quantize_absmax
+    mesh = maybe_mesh()
+    b, hq, _ = q.shape
+    hkv = k_pages.shape[0]
+    ps = k_pages.shape[2]
+    kw = dict(window=window, softcap=softcap, scale=scale,
+              page_size=page_size, block_kv=block_kv)
+
+    def update(pool, scales, new_row, page, off):
+        new_row = jnp.swapaxes(new_row, 0, 1).astype(jnp.float32)  # (H,B,D)
+        pg = pool[:, page]                                  # (H,B,ps,D)
+        sc = scales[:, page]                                # (H,B)
+        pgf = pg.astype(jnp.float32) * sc[:, :, None, None]
+        rows = jnp.arange(ps)[None, None, :, None]
+        offb = off[None, :, None, None]
+        pgf = jnp.where(rows == offb, new_row[:, :, None, :],
+                        jnp.where(rows < offb, pgf, 0.0))
+        q_pg, sc_new = quantize_absmax(pgf, dtype=pool.dtype,
+                                       axis=(-2, -1))
+        return (pool.at[:, page].set(q_pg),
+                scales.at[:, page].set(sc_new.astype(scales.dtype)))
+
+    def body(q_, kn, vn, kp, vp, ks, vs, bt, page, off, ln):
+        kp, ks = update(kp, ks, kn, page, off)
+        vp, vs = update(vp, vs, vn, page, off)
+        out = quant_window_paged_decode_attention(q_, kp, vp, ks, vs, bt,
+                                                  ln, **kw)
+        return out, kp, vp, ks, vs
+
+    if not _use_wrappers(mesh):
+        return body(q, k_new, v_new, k_pages, v_pages, k_scales, v_scales,
+                    block_tables, write_page, write_off, eff_len)
+
     dp = None
     tp = _tp(mesh)
     if hq % tp == 0 and hkv % tp == 0:

@@ -37,6 +37,13 @@ def _valid_doc():
                                     "completion_rate": 1.0,
                                     "recoveries": 4, "quarantined": 1,
                                     "tok_per_s": 900.0}]},
+        "hybrid": {"results": [{"kv_dtype": "bf16", "window": 16,
+                                "context_len": 64,
+                                "pages_per_global_slot": 16.0,
+                                "pages_per_window_slot": 5.0,
+                                "live_page_ratio": 3.2,
+                                "window_prefix_frees": 22,
+                                "tok_per_s": 800.0}]},
     }
 
 

@@ -20,8 +20,9 @@ from repro.kernels import registry as R
 EXPECTED_OPS = ("decode_attention", "flash_attention", "gmm", "mamba_scan",
                 "mlstm_scan", "paged_decode_attention",
                 "quant_paged_decode_attention",
-                "quant_spec_paged_decode_attention", "rmsnorm",
-                "spec_paged_decode_attention")
+                "quant_spec_paged_decode_attention",
+                "quant_window_paged_decode_attention", "rmsnorm",
+                "spec_paged_decode_attention", "window_paged_decode_attention")
 
 OPS = list(R.all_ops())
 

@@ -319,15 +319,17 @@ def test_fused_page_write_then_attend():
 
 # ------------------------------------------------------- paged cache tree ----
 
-def test_init_paged_caches_pages_only_global_kv():
-    """Global-attention KV becomes pools; ring/recurrent/cross caches
-    keep their dense slot-major layout."""
+def test_init_paged_caches_pages_every_attention_kind():
+    """Global-attention KV pages through the global pool, sliding-window
+    ("local") KV through its own O(window)-sized window pool; only
+    recurrent/cross caches keep a dense slot-major layout."""
     from repro.configs.smoke import smoke_config
     from repro.models.registry import build_model
     cfg = smoke_config("gemma2-2b", num_layers=2)   # local+global pattern
     model = build_model(cfg)
     slots, cache_len, ps = 2, 32, 16
     total = 1 + slots * paging.pages_per_slot(cache_len, ps)
+    total_w = 1 + slots * paging.window_table_width(cfg.window, ps)
     caches = paging.init_paged_caches(model, slots, cache_len, ps, total)
     names = set()
     for seg in caches:
@@ -336,11 +338,27 @@ def test_init_paged_caches_pages_only_global_kv():
             for nm, leaf in c.items():
                 if nm in ("kp", "vp"):
                     assert leaf.shape[2:4] == (total, ps)
+                elif nm in ("kw", "vw"):
+                    # default window-pool sizing: slots can always hold
+                    # a full ring table each, plus the trash page
+                    assert leaf.shape[2:4] == (total_w, ps)
                 else:
                     assert leaf.shape[1] == slots    # slot-major
     assert "kp" in names and "vp" in names
-    # gemma's local ring layers (window=16 < cache_len) stay dense
-    assert "k" in names and "v" in names
+    # gemma's local ring layers (window=16 < cache_len) page windowed
+    assert "kw" in names and "vw" in names
+    assert "k" not in names and "v" not in names
+
+
+def test_init_paged_caches_window_pool_size_override():
+    from repro.configs.smoke import smoke_config
+    from repro.models.registry import build_model
+    cfg = smoke_config("gemma2-2b", num_layers=2)
+    model = build_model(cfg)
+    caches = paging.init_paged_caches(model, 2, 32, 16, 9,
+                                      total_pages_window=7)
+    kw = [c["kw"] for seg in caches for c in seg if "kw" in c]
+    assert kw and all(leaf.shape[2] == 7 for leaf in kw)
 
 
 # --------------------------------------------------- quarantine + audit ----

@@ -282,3 +282,87 @@ def test_allocator_interleaving_preserves_disjointness(total, ops):
             elif a.available:                   # quarantine a free page
                 a.quarantine([list(a._free)[arg % a.available]])
         check()
+
+
+# ------------------------------------- sliding-lease allocator law ----
+
+@given(
+    window=st.sampled_from([8, 16]),
+    ps=st.sampled_from([4, 8]),
+    ops=st.lists(st.tuples(st.sampled_from(
+        ["advance", "grow", "shrink", "reset", "quarantine"]),
+        st.integers(0, 2 ** 16)), max_size=40),
+)
+@settings(max_examples=60, deadline=None)
+def test_sliding_lease_interleaving_preserves_partition(window, ps, ops):
+    """A windowed ring row (free_prefix as the window slides, then
+    alloc into the vacated columns), a prefix row (alloc_many +
+    truncate_suffix — the spec-rollback shape), and quarantine
+    interleaved on one allocator: the partition law holds throughout
+    and the ring's lease covers exactly the live window pages — pool
+    pressure O(window) no matter how far the sequence advances."""
+    from repro.serve import paging
+    tw = paging.window_table_width(window, ps)
+    total = 1 + 2 * tw + 8
+    a = paging.PageAllocator(total)
+    row = np.full((tw,), paging.NULL_PAGE, np.int32)
+    held = []            # prefix-row leases
+    ring = {}            # live global page -> leased pool page
+    L = 0                # ring sequence length
+    first = 0            # first live page mark (free_prefix low water)
+
+    def check():
+        free = list(a._free)
+        fs, al, qr = set(free), set(a._allocated), set(a._quarantined)
+        assert len(free) == len(fs)
+        assert not (fs & al) and not (fs & qr) and not (al & qr)
+        assert paging.NULL_PAGE not in fs | al | qr
+        assert fs | al | qr == set(range(1, total))
+        assert sorted(al) == sorted(held + list(ring.values()))
+        live = set(paging.live_window_pages(L, window, ps)) if L else set()
+        assert set(ring) == live                # lease == live window
+        assert len(ring) <= tw                  # O(window) pressure
+        for c in range(tw):                     # columns mirror the lease
+            pages = [p for g, p in ring.items() if g % tw == c]
+            assert row[c] == (pages[0] if pages
+                              else paging.NULL_PAGE)
+
+    for op, arg in ops:
+        if op == "advance":
+            new_len = L + arg % (ps + 2) + 1
+            new_first = paging.first_live_page(new_len, window, ps)
+            new_live = set(paging.live_window_pages(new_len, window, ps))
+            stale = [g for g in ring if g < new_first]
+            if a.available + len(stale) >= len(new_live - set(ring)):
+                freed = paging.free_prefix(a, row, first, new_first)
+                assert freed == len(stale)
+                for g in stale:
+                    del ring[g]
+                first = new_first
+                for g in sorted(new_live - set(ring)):
+                    ring[g] = a.alloc()
+                    row[g % tw] = ring[g]
+                L = new_len
+        elif op == "grow":
+            if len(held) < 8 and a.available:
+                held.extend(a.alloc_many(1))
+        elif op == "shrink" and len(held) >= 2:
+            keep = arg % (len(held) - 1) + 1
+            prow = np.array(held + [paging.NULL_PAGE], np.int32)
+            assert paging.truncate_suffix(a, prow, keep, len(held)) \
+                == len(held) - keep
+            del held[keep:]
+        elif op == "reset":                     # release / preempt
+            assert a.reclaim(row) == len(ring)
+            row[:] = paging.NULL_PAGE
+            ring.clear()
+            L = 0
+            first = 0
+        elif op == "quarantine":
+            # free pages only, keeping the ring able to reach full
+            # width (the engine's window pool is never quarantined —
+            # faults target the global group — but the allocator must
+            # still compose)
+            if a.available > tw:
+                a.quarantine([list(a._free)[arg % a.available]])
+        check()

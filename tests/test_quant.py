@@ -272,15 +272,16 @@ def test_init_paged_caches_quantized_pools_and_scales():
         for c in seg:
             names.update(c.keys())
             for nm, leaf in c.items():
-                if nm in ("kp", "vp"):
+                if nm in ("kp", "vp", "kw", "vw"):
                     assert leaf.dtype == jnp.int8
-                    assert leaf.shape[2:4] == (total, ps)
+                    assert leaf.shape[3] == ps
                 elif nm in ("ks", "vs"):
                     assert leaf.dtype == jnp.float32
-                    assert leaf.shape[2] == total       # per page per head
     assert {"kp", "vp", "ks", "vs"} <= names
-    # ring layers stay dense and unquantized
-    assert "k" in names and "v" in names
+    # sliding-window ring layers page (and quantize) through the
+    # window pool now — no dense k/v leaves remain
+    assert {"kw", "vw"} <= names
+    assert "k" not in names and "v" not in names
 
 
 def test_scatter_prefill_quantizes_pages():
