@@ -37,6 +37,7 @@ def main() -> None:
     from benchmarks.autotune import bench_json_path, format_rows
     from benchmarks.serve_bench import (format_hybrid_rows,
                                         format_kv_quant_rows,
+                                        format_latency_rows,
                                         format_oversub_rows,
                                         format_resilience_rows,
                                         format_serving_rows,
@@ -63,7 +64,10 @@ def main() -> None:
              "--section resilience"),
             ("Hybrid window serving", format_hybrid_rows,
              "python -m benchmarks.serve_bench --update-bench "
-             "--section hybrid")):
+             "--section hybrid"),
+            ("Latency", format_latency_rows,
+             "python -m benchmarks.serve_bench --update-bench "
+             "--section latency")):
         print()
         print("=" * 72)
         print(f"## {title} (from BENCH_autotune.json)")

@@ -17,7 +17,8 @@ regime CI can check):
   python -m benchmarks.serve_bench                 # print table
   python -m benchmarks.serve_bench --update-bench  # + merge the rows
       into BENCH_autotune.json under "serving", "kv_quant", "oversub",
-      "spec" and "resilience" (the ROADMAP perf trajectory;
+      "spec", "resilience", "hybrid" and "latency" (the ROADMAP perf
+      trajectory;
       benchmarks/autotune.py preserves every foreign section);
       --section <name> (repeatable) refreshes only the named
       section(s), preserving the rest; an unknown name exits non-zero
@@ -38,6 +39,11 @@ regime CI can check):
       (sliding-window local + global) paged-vs-dense greedy parity
       gate: windowed ring block tables with eager prefix free, window
       pool pressure O(window), both pools drain clean (DESIGN.md §15)
+  python -m benchmarks.serve_bench --obs-smoke     # observability
+      gate: telemetry adds zero device syncs per step (plain + spec),
+      in-run-timed telemetry code stays < 5% of drain wall, and the
+      lifecycle trace validates and exports well-formed Chrome trace
+      JSON (DESIGN.md §16)
 
 The ``kv_quant`` section measures the dtype axis of the paged pool
 (repro.quant): per KV dtype, end-to-end decode tokens/sec and the max
@@ -73,6 +79,14 @@ plane: per KV dtype, decode tok/s and — at a context 4x the window —
 the peak live pages per slot of a local layer (O(window), bounded by
 the ring-table width via eager prefix free) vs a global layer
 (O(context)), both measured from the same run.
+
+The ``latency`` section measures what the aggregate tok/s hides: p50
+and p99 time-to-first-token and inter-token latency per request,
+derived from the serve-plane telemetry (repro.serve.telemetry,
+DESIGN.md §16) across a bf16/int8 x plain/spec x with/without-
+preemption-pressure config matrix.  Every timed run in this file goes
+through one shared clock (``_timed_drain``), which also feeds the
+engine's MetricsRegistry.
 
 Smoke modes are CI gates and must never write outside a temp dir —
 only ``--update-bench`` writes at all, and every ``--*-smoke`` run is
@@ -202,6 +216,9 @@ class LegacySlotEngine:
                 self._maybe_finish(slot)
         return True
 
+    def submit(self, req):
+        self.queue.append(req)
+
     def run_to_completion(self, requests, max_steps=10_000):
         self.queue.extend(requests)
         for _ in range(max_steps):
@@ -235,19 +252,53 @@ def _repeat_requests(cfg, n, plen, seed=0, motif=4):
     return out
 
 
+def _timed_drain(eng, reqs, *, audit=False, watchdog_s=None,
+                 max_steps=10_000) -> Dict[str, Any]:
+    """THE shared clock: submit ``reqs``, step the engine to drain, and
+    time it.  Every section's tok/s and the ``latency`` section's
+    percentiles come from this one code path, and the result also feeds
+    the engine's :class:`MetricsRegistry` (``bench.drain_wall_s`` /
+    ``bench.drain_tokens``) so a bench run's raw timings are
+    inspectable next to the serve counters.
+
+    ``audit=True`` asserts ``paging.audit()`` after every step (the
+    smoke gates' invariant ladder); ``watchdog_s`` is assigned after
+    the first — compiling — step so jit time cannot trip it.  Raises
+    ``AssertionError`` if the engine does not drain in ``max_steps``.
+    """
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    for i in range(max_steps):
+        busy = eng.step()
+        if i == 0 and hasattr(eng, "watchdog_s"):
+            eng.watchdog_s = watchdog_s
+        if audit:
+            errs = eng.audit()
+            assert not errs, f"paging.audit() violations: {errs}"
+        if not busy and not eng.queue and not getattr(eng, "requeue", ()):
+            break
+    else:
+        raise AssertionError(
+            f"engine did not drain within {max_steps} steps "
+            f"(hang past the watchdog): "
+            f"{eng.stats() if hasattr(eng, 'stats') else reqs}")
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in reqs)
+    metrics = getattr(eng, "metrics", None)
+    if metrics is not None:  # LegacySlotEngine has no registry
+        metrics.histogram("bench.drain_wall_s", lo=1e-4, hi=1e4).observe(dt)
+        metrics.counter("bench.drain_tokens").inc(toks)
+    return {"new_tokens": toks, "wall_s": round(dt, 3),
+            "tok_per_s": round(toks / dt, 2)}
+
+
 def _run_audited(eng, reqs, max_steps=10_000):
     """run_to_completion with ``paging.audit()`` checked after every
     step: the un-faulted smoke paths must hold the same allocator /
     block-table invariants the chaos gate judges the faulted ones by
     (catches drift in the happy paths too)."""
-    for r in reqs:
-        eng.submit(r)
-    for _ in range(max_steps):
-        busy = eng.step()
-        errs = eng.audit()
-        assert not errs, f"paging.audit() violations: {errs}"
-        if not busy and not eng.queue and not eng.requeue:
-            break
+    _timed_drain(eng, reqs, audit=True, max_steps=max_steps)
     return reqs
 
 
@@ -257,14 +308,10 @@ def _throughput(engine, cfg, n, plen, make=_requests) -> Dict[str, Any]:
     # stable request-shape distribution, not compile time.
     engine.run_to_completion(make(cfg, n, plen, seed=99))
     reqs = make(cfg, n, plen)
-    t0 = time.perf_counter()
-    engine.run_to_completion(reqs)
-    dt = time.perf_counter() - t0
-    toks = sum(len(r.out) for r in reqs)
-    assert all(r.done for r in reqs)
-    return {"new_tokens": toks, "wall_s": round(dt, 3),
-            "tok_per_s": round(toks / dt, 2),
-            "sample": reqs[0].out[:4]}
+    r = _timed_drain(engine, reqs)
+    assert all(req.done for req in reqs)
+    r["sample"] = reqs[0].out[:4]
+    return r
 
 
 def build(paged: bool, *, arch="granite-8b", layers=2, slots=4,
@@ -422,13 +469,13 @@ def oversub_payload(*, layers=1, slots=2, cache_len=32, max_new=24,
     full_budget = need_pages * page_bytes["bf16"]
 
     def attempt(eng, reqs):
-        t0 = time.perf_counter()
+        """Drain through the shared clock; the ``fail`` policy's
+        allocator error comes back as (None, first-line) instead of
+        raising, so its row documents the pre-PR-5 behavior."""
         try:
-            eng.run_to_completion(reqs)
-            err = None
+            return _timed_drain(eng, reqs), None
         except RuntimeError as e:
-            err = str(e).splitlines()[0]
-        return time.perf_counter() - t0, err
+            return None, str(e).splitlines()[0]
 
     rows = []
     for dtype in ("bf16", "int8"):
@@ -438,12 +485,12 @@ def oversub_payload(*, layers=1, slots=2, cache_len=32, max_new=24,
             for policy in OVERSUB_POLICIES:
                 eng = mk(kv_dtype=dtype, total_pages=total, policy=policy)
                 reqs = _requests(cfg, prompts, prompt_len, seed=99)
-                dt, err = attempt(eng, reqs)          # warm (compile)
+                res, err = attempt(eng, reqs)         # warm (compile)
                 preempts = eng.preemptions
                 if err is None:                       # steady-state rerun
                     p0 = eng.preemptions
                     reqs = _requests(cfg, prompts, prompt_len)
-                    dt, err = attempt(eng, reqs)
+                    res, err = attempt(eng, reqs)
                     preempts = eng.preemptions - p0
                 done = sum(r.done for r in reqs)
                 toks = sum(len(r.out) for r in reqs)
@@ -459,8 +506,8 @@ def oversub_payload(*, layers=1, slots=2, cache_len=32, max_new=24,
                        "peak_pages_in_use":
                            eng.allocator.pressure()["peak_in_use"],
                        "new_tokens": toks,
-                       "wall_s": None if err else round(dt, 3),
-                       "tok_per_s": None if err else round(toks / dt, 2)}
+                       "wall_s": None if err else res["wall_s"],
+                       "tok_per_s": None if err else res["tok_per_s"]}
                 if err is not None:
                     row["error"] = err
                 rows.append(row)
@@ -688,23 +735,14 @@ def _resilience_harness(*, layers=1, slots=2, cache_len=32, max_new=16,
 
 
 def _drive_faulted(eng, reqs, *, watchdog_s=None, max_steps=2_000):
-    """Drive a (possibly faulted) engine to drain, auditing after every
-    step.  The watchdog is attached *after* the first step so jit
-    compile time cannot trip it spuriously (the engine reads the
-    mutable ``watchdog_s`` attribute each step for exactly this)."""
-    for r in reqs:
-        eng.submit(r)
-    for i in range(max_steps):
-        busy = eng.step()
-        if i == 0:
-            eng.watchdog_s = watchdog_s
-        errs = eng.audit()
-        assert not errs, f"paging.audit() violations: {errs}"
-        if not busy and not eng.queue and not eng.requeue:
-            return reqs
-    raise AssertionError(
-        f"faulted engine did not drain within {max_steps} steps "
-        f"(hang past the watchdog): {eng.stats()}")
+    """Drive a (possibly faulted) engine to drain through the shared
+    clock, auditing after every step.  The watchdog is attached *after*
+    the first step so jit compile time cannot trip it spuriously (the
+    engine reads the mutable ``watchdog_s`` attribute each step for
+    exactly this)."""
+    _timed_drain(eng, reqs, audit=True, watchdog_s=watchdog_s,
+                 max_steps=max_steps)
+    return reqs
 
 
 def resilience_payload(*, layers=1, slots=2, cache_len=32, max_new=16,
@@ -728,12 +766,10 @@ def resilience_payload(*, layers=1, slots=2, cache_len=32, max_new=16,
                        watchdog_s=0.25 if plan else None)
         st0 = eng.stats()
         reqs = _requests(cfg, prompts, prompt_len)
-        t0 = time.perf_counter()
-        _drive_faulted(eng, reqs, watchdog_s=0.25 if plan else None)
-        dt = time.perf_counter() - t0
+        meas = _timed_drain(eng, reqs, audit=True,
+                            watchdog_s=0.25 if plan else None)
         st = eng.stats()
         done = sum(r.done for r in reqs)
-        toks = sum(len(r.out) for r in reqs)
         row = {"fault_rate": rate,
                "completed": done, "submitted": len(reqs),
                "completion_rate": round(done / len(reqs), 3),
@@ -742,8 +778,8 @@ def resilience_payload(*, layers=1, slots=2, cache_len=32, max_new=16,
                "failed": (st["failed_requests"] - st0["failed_requests"]),
                "quarantined": st["quarantined"],
                "watchdog_trips": st["watchdog_trips"],
-               "new_tokens": toks, "wall_s": round(dt, 3),
-               "tok_per_s": round(toks / dt, 2)}
+               "new_tokens": meas["new_tokens"], "wall_s": meas["wall_s"],
+               "tok_per_s": meas["tok_per_s"]}
         rows.append(row)
         print(f"rate {rate:>5.2%}  {row['completion_rate']:>5.0%} done  "
               f"{row['recoveries']:>3} recoveries  "
@@ -984,9 +1020,242 @@ def hybrid_smoke() -> None:
           f"drain clean")
 
 
+# ---------------------------------------------------------------------------
+# latency: p50/p99 TTFT + inter-token latency from the telemetry plane
+# ---------------------------------------------------------------------------
+
+#: The latency section's config matrix: kv dtype x decode mode x
+#: preemption pressure.  ``oversub`` forces the page pool to that
+#: fraction of the working set so the run's percentiles include real
+#: preempt/re-admit stalls.
+LATENCY_CONFIGS = (
+    {"name": "bf16-plain", "mode": "plain", "kv_dtype": None,
+     "workload": "uniform"},
+    {"name": "int8-plain", "mode": "plain", "kv_dtype": "int8",
+     "workload": "uniform"},
+    {"name": "bf16-spec-k4", "mode": "spec", "kv_dtype": None,
+     "workload": "repeat", "spec_mode": "ngram", "spec_k": 4},
+    {"name": "bf16-preempt", "mode": "preempt", "kv_dtype": None,
+     "workload": "uniform", "page_size": 8, "oversub": 0.6},
+)
+
+
+def latency_payload(*, layers=1, slots=4, cache_len=64, max_new=16,
+                    prompts=12, prompt_len=16) -> Dict[str, Any]:
+    """Per-config rows: p50/p99 time-to-first-token and inter-token
+    latency from the serve-plane telemetry (DESIGN.md §16), plus queue
+    wait and the shared-clock tok/s.  The warm run compiles with no
+    telemetry attached; a fresh :class:`ServeTelemetry` is attached for
+    the measured drain only, so the percentiles never include jit
+    compile and each row's trace covers exactly one request stream."""
+    from repro.serve import ServeTelemetry, paging
+    rows = []
+    for c in LATENCY_CONFIGS:
+        page_size = c.get("page_size")
+        total_pages = None
+        if c.get("oversub"):
+            # size the pool against the *working set* (pages a request
+            # actually touches at prompt_len + max_new), not the full
+            # cache_len capacity — otherwise short smoke requests never
+            # exhaust it and the "preempt" row measures nothing
+            need = -(-(prompt_len + max_new) // page_size)
+            total_pages = 1 + int(c["oversub"] * slots * need)
+        eng, cfg = build(True, layers=layers, slots=slots,
+                         cache_len=cache_len, max_new=max_new,
+                         kv_dtype=c["kv_dtype"], page_size=page_size,
+                         total_pages=total_pages,
+                         spec_mode=c.get("spec_mode", "off"),
+                         spec_k=c.get("spec_k", 4))
+        make = _repeat_requests if c["workload"] == "repeat" else _requests
+        eng.run_to_completion(make(cfg, prompts, prompt_len, seed=99))
+        tel = ServeTelemetry()
+        eng.telemetry = tel
+        p0 = eng.preemptions
+        reqs = make(cfg, prompts, prompt_len)
+        meas = _timed_drain(eng, reqs)
+        assert all(r.done for r in reqs), \
+            f"latency config {c['name']} lost requests"
+        problems = tel.trace.validate()
+        assert not problems, f"{c['name']} trace invalid: {problems}"
+        s = tel.summary()
+
+        def pct(metric, q):
+            v = s.get(metric)
+            return None if not v else round(v[f"p{q}"], 6)
+
+        row = {"config": c["name"], "mode": c["mode"],
+               "kv_dtype": c["kv_dtype"] or "bf16",
+               "workload": c["workload"], "requests": len(reqs),
+               "ttft_p50_s": pct("ttft_s", 50),
+               "ttft_p99_s": pct("ttft_s", 99),
+               "itl_p50_s": pct("itl_s", 50),
+               "itl_p99_s": pct("itl_s", 99),
+               "queue_wait_p50_s": pct("queue_wait_s", 50),
+               "preemptions": eng.preemptions - p0,
+               "tok_per_s": meas["tok_per_s"]}
+        if c["mode"] == "preempt":
+            assert row["preemptions"] > 0, \
+                f"{c['name']} measured no preemptions — pool not tight"
+        rows.append(row)
+        print(f"{c['name']:<14} ttft p50/p99 "
+              f"{row['ttft_p50_s']:.4f}/{row['ttft_p99_s']:.4f}s  "
+              f"itl p50/p99 {row['itl_p50_s']:.4f}/{row['itl_p99_s']:.4f}s  "
+              f"{row['preemptions']:>3} preempts  "
+              f"{row['tok_per_s']:>8.2f} tok/s")
+    return {
+        "bench": "latency",
+        "generated_by": "python -m benchmarks.serve_bench --update-bench "
+                        "--section latency",
+        "arch": "interpret",
+        "config": {"slots": slots, "cache_len": cache_len,
+                   "prompts": prompts, "prompt_len": prompt_len,
+                   "max_new": max_new, "layers": layers,
+                   "percentiles": [50, 99], "model": "granite-8b smoke"},
+        "results": rows,
+    }
+
+
+def obs_smoke() -> None:
+    """check.sh gate: the observability plane's three contracts.
+
+    (1) zero-extra-sync — an engine with telemetry attached performs
+    exactly as many ``jax.device_get`` calls per drain as a bare one,
+    for both the plain and the speculative step paths (the per-step
+    counters piggyback on the existing step-result tuple, DESIGN.md
+    §16), with token-identical outputs; (2) bounded overhead — during
+    a full instrumented drain, total time spent inside telemetry code
+    (every hook + the per-step pool sample, timed in-run) stays under
+    5% of drain wall, so the telemetry-attributable tok/s loss is
+    bounded by the same 5%; (3) trace
+    integrity — the lifecycle trace validates (one submitted, ordered
+    transitions, one terminal per request), every request derives
+    TTFT/queue-wait, and the Chrome trace-event export round-trips
+    through JSON with the required keys, written only to a temp dir.
+    """
+    import tempfile
+    from repro.serve import ServeTelemetry
+    from repro.serve import engine as engine_mod
+
+    def drained(tel, **kw):
+        eng, cfg = build(True, layers=1, slots=2, cache_len=32,
+                         max_new=8, **kw)
+        eng.telemetry = tel
+        reqs = _run_audited(eng, _requests(cfg, 4, 6))
+        assert all(r.done for r in reqs)
+        return [r.out for r in reqs]
+
+    # (1) device_get count parity, plain and spec paths
+    real_get = engine_mod._device_get
+    counts: Dict[Any, Any] = {}
+    for mode in ("off", "ngram"):
+        for with_tel in (False, True):
+            n = 0
+
+            def counting(x):
+                nonlocal n
+                n += 1
+                return real_get(x)
+
+            engine_mod._device_get = counting
+            try:
+                outs = drained(ServeTelemetry() if with_tel else None,
+                               spec_mode=mode, spec_k=3)
+            finally:
+                engine_mod._device_get = real_get
+            counts[(mode, with_tel)] = (n, outs)
+    for mode in ("off", "ngram"):
+        n_off, o_off = counts[(mode, False)]
+        n_on, o_on = counts[(mode, True)]
+        assert n_on == n_off, \
+            f"telemetry added device syncs ({mode}): {n_on} != {n_off}"
+        assert o_on == o_off, \
+            f"telemetry changed outputs ({mode}): {o_on} != {o_off}"
+
+    # (2) overhead bound.  Two-engine wall-clock comparisons are
+    # unusable here: on CI-class machines single drains are ~tens of
+    # ms and scheduler noise alone swings tok/s by +-10% (measured,
+    # even best-of-15 interleaved pairs flips sign).  So measure the
+    # overhead *in-run*: wrap every telemetry hook (and the engine's
+    # per-step pool sample) in timers during a full drain and bound
+    # the summed telemetry time as a fraction of drain wall.  The
+    # wrapper's own cost lands in the numerator, so the measurement
+    # is conservative; min-of-3 picks the least-contended drain.
+    eng, cfg = build(True, layers=2, slots=2, cache_len=32, max_new=8)
+    eng.run_to_completion(_requests(cfg, 16, 6, seed=99))
+
+    def hook_fraction():
+        tel = ServeTelemetry()
+        spent = [0.0]
+
+        def wrap(orig):
+            def timed(*a, **k):
+                t0 = time.perf_counter()
+                r = orig(*a, **k)
+                spent[0] += time.perf_counter() - t0
+                return r
+            return timed
+
+        for name in dir(tel):
+            if name.startswith("on_"):
+                setattr(tel, name, wrap(getattr(tel, name)))
+        eng.telemetry = tel
+        orig_pools = eng._pool_pressure_brief
+        eng._pool_pressure_brief = wrap(orig_pools)
+        try:
+            reqs = _requests(cfg, 16, 6)
+            t0 = time.perf_counter()
+            for r in reqs:
+                eng.submit(r)
+            while True:
+                if not eng.step() and not eng.queue and not eng.requeue:
+                    break
+            wall = time.perf_counter() - t0
+        finally:
+            eng.telemetry = None
+            eng._pool_pressure_brief = orig_pools
+        assert all(r.done for r in reqs)
+        return spent[0] / wall
+
+    frac = min(hook_fraction() for _ in range(3))
+    assert frac < 0.05, \
+        f"telemetry overhead above 5% of drain wall: {frac:.2%}"
+
+    # (3) trace integrity + export well-formedness (temp dir only; the
+    # whole gate runs under _guard_no_repo_root_writes)
+    tel = ServeTelemetry()
+    drained(tel)
+    problems = tel.trace.validate()
+    assert not problems, f"trace validation problems: {problems}"
+    rows = tel.request_metrics()
+    assert rows and all(r["status"] == "finished" for r in rows), \
+        f"incomplete lifecycles: {rows}"
+    for r in rows:
+        assert r["ttft_s"] is not None and r["queue_wait_s"] is not None \
+            and r["itl_p50_s"] is not None, f"missing latency fields: {r}"
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "trace.json")
+        tel.trace.export(p)
+        with open(p) as f:
+            doc = json.load(f)
+    evs = doc["traceEvents"]
+    assert evs, "empty trace export"
+    for ev in evs:
+        assert {"ph", "pid", "tid"} <= set(ev), f"malformed event: {ev}"
+        if ev["ph"] != "M":
+            assert "ts" in ev, f"non-metadata event without ts: {ev}"
+    kinds = {e["name"] for e in evs if e["ph"] == "i"}
+    assert {"submitted", "admitted", "first_token", "finished"} <= kinds, \
+        f"lifecycle kinds missing from export: {sorted(kinds)}"
+    print(f"obs-smoke OK: device_get count unchanged with telemetry "
+          f"(plain {counts[('off', False)][0]}, spec "
+          f"{counts[('ngram', False)][0]} calls); telemetry time "
+          f"{frac:.1%} of drain wall (< 5%); "
+          f"trace valid, {len(evs)} events exported well-formed")
+
+
 #: BENCH_autotune.json sections this benchmark owns, in compute order.
 SECTIONS = ("serving", "kv_quant", "oversub", "spec", "resilience",
-            "hybrid")
+            "hybrid", "latency")
 
 
 def main(argv=None) -> Dict[str, Any]:
@@ -1012,6 +1281,11 @@ def main(argv=None) -> Dict[str, Any]:
                          "paged-vs-dense greedy parity gate with eager "
                          "window-page reclaim and O(window) pool "
                          "pressure asserted (no timing)")
+    ap.add_argument("--obs-smoke", action="store_true",
+                    help="observability gate: telemetry adds zero device "
+                         "syncs (plain + spec), telemetry code < 5% of "
+                         "drain wall, lifecycle trace validates and "
+                         "exports well-formed Chrome trace JSON")
     ap.add_argument("--prompts", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
@@ -1039,7 +1313,8 @@ def main(argv=None) -> Dict[str, Any]:
                  f"valid sections: {', '.join(SECTIONS)}")
 
     if args.smoke or args.quant_smoke or args.oversub_smoke \
-            or args.spec_smoke or args.chaos_smoke or args.hybrid_smoke:
+            or args.spec_smoke or args.chaos_smoke or args.hybrid_smoke \
+            or args.obs_smoke:
         # CI gates: never write anything (the guard raises on a stray
         # repo-root/tuning-cache artifact instead of letting it land)
         with _guard_no_repo_root_writes():
@@ -1055,6 +1330,8 @@ def main(argv=None) -> Dict[str, Any]:
                 chaos_smoke()
             if args.hybrid_smoke:
                 hybrid_smoke()
+            if args.obs_smoke:
+                obs_smoke()
         return {}
 
     producers = {
@@ -1067,6 +1344,7 @@ def main(argv=None) -> Dict[str, Any]:
         "spec": spec_payload,
         "resilience": resilience_payload,
         "hybrid": hybrid_payload,
+        "latency": latency_payload,
     }
     names = [s for s in SECTIONS if s in (args.section or SECTIONS)]
     computed: Dict[str, Any] = {}
@@ -1209,6 +1487,25 @@ def format_hybrid_rows(doc: Dict[str, Any]) -> List[str]:
             f"{r['pages_per_window_slot']:>10.1f} "
             f"{r['live_page_ratio']:>6.2f}x "
             f"{r['window_prefix_frees']:>6} {r['tok_per_s']:>9.2f}")
+    return lines
+
+
+def format_latency_rows(doc: Dict[str, Any]) -> List[str]:
+    """Render BENCH_autotune.json['latency'] (shared with run.py)."""
+    la = doc.get("latency")
+    if not la:
+        return ["(no latency rows; run python -m benchmarks.serve_bench "
+                "--update-bench --section latency)"]
+    header = (f"{'config':<14} {'mode':<8} {'ttft p50':>9} {'ttft p99':>9} "
+              f"{'itl p50':>9} {'itl p99':>9} {'preempts':>9} {'tok/s':>9}")
+    lines = [f"config: {json.dumps(la.get('config', {}), sort_keys=True)}",
+             header, "-" * len(header)]
+    for r in la.get("results", ()):
+        lines.append(
+            f"{r['config']:<14} {r['mode']:<8} "
+            f"{r['ttft_p50_s']:>8.4f}s {r['ttft_p99_s']:>8.4f}s "
+            f"{r['itl_p50_s']:>8.4f}s {r['itl_p99_s']:>8.4f}s "
+            f"{r['preemptions']:>9} {r['tok_per_s']:>9.2f}")
     return lines
 
 

@@ -20,6 +20,7 @@ Required sections and per-row keys:
   spec      "spec".results      (benchmarks/serve_bench.py)
   resilience "resilience".results (benchmarks/serve_bench.py)
   hybrid    "hybrid".results    (benchmarks/serve_bench.py)
+  latency   "latency".results   (benchmarks/serve_bench.py)
 
 Wired as the check.sh `bench-check` stage.
 """
@@ -84,6 +85,14 @@ SCHEMA: Dict[str, Any] = {
                      "tok_per_s"),
         "regen": "python -m benchmarks.serve_bench --update-bench "
                  "--section hybrid",
+    },
+    "latency": {
+        "rows": ("latency", "results"),
+        "row_keys": ("config", "kv_dtype", "mode", "ttft_p50_s",
+                     "ttft_p99_s", "itl_p50_s", "itl_p99_s",
+                     "tok_per_s"),
+        "regen": "python -m benchmarks.serve_bench --update-bench "
+                 "--section latency",
     },
 }
 

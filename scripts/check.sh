@@ -21,7 +21,7 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-STAGES=(pytest parity tune-smoke serve-smoke quant-smoke oversub-smoke spec-smoke chaos-smoke hybrid-smoke bench-check)
+STAGES=(pytest parity tune-smoke serve-smoke quant-smoke oversub-smoke spec-smoke chaos-smoke hybrid-smoke obs-smoke bench-check)
 
 # -- stage bodies (each runs in its own `set -e` subshell) -------------------
 
@@ -101,6 +101,14 @@ stage_hybrid_smoke() {
     # parity, with eager behind-window page reclaim and O(window) pool
     # pressure asserted, audit held every step
     python -m benchmarks.serve_bench --hybrid-smoke
+}
+
+stage_obs_smoke() {
+    # observability gate: telemetry attaches with zero extra device
+    # syncs per step (plain + spec paths), in-run-timed telemetry code
+    # under 5% of drain wall, and a lifecycle trace that validates and
+    # exports well-formed Chrome trace JSON (temp dir only)
+    python -m benchmarks.serve_bench --obs-smoke
 }
 
 stage_bench_check() {

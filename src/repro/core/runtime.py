@@ -25,6 +25,7 @@ from repro.core import atomics as _atomics
 from repro.core import context as _context
 from repro.core import intrinsics as _intrinsics
 from repro.core import memory as _memory
+from repro.obs import profile as _profile
 import repro.core.targets  # noqa: F401  (register all variants)
 
 __all__ = ["DeviceRuntime", "runtime", "kernel_call"]
@@ -140,7 +141,7 @@ def kernel_call(kernel_fn, *, out_shape, grid=None, in_specs=None,
             out_specs=out_specs,
             scratch_shapes=list(scratch_shapes),
         )
-        return pl.pallas_call(
+        call = pl.pallas_call(
             kernel_fn,
             out_shape=out_shape,
             grid_spec=grid_spec,
@@ -148,14 +149,21 @@ def kernel_call(kernel_fn, *, out_shape, grid=None, in_specs=None,
             name=name,
             **pk,
         )
-    return pl.pallas_call(
-        kernel_fn,
-        out_shape=out_shape,
-        grid=grid,
-        in_specs=in_specs if in_specs is not None else [],
-        out_specs=out_specs,
-        scratch_shapes=list(scratch_shapes),
-        interpret=interpret,
-        name=name,
-        **pk,
-    )
+    else:
+        call = pl.pallas_call(
+            kernel_fn,
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=in_specs if in_specs is not None else [],
+            out_specs=out_specs,
+            scratch_shapes=list(scratch_shapes),
+            interpret=interpret,
+            name=name,
+            **pk,
+        )
+    if _profile.enabled():
+        # opt-in (REPRO_PROFILE=1) dispatch timer, aggregated into the
+        # shared profile registry; the off path pays one bool check
+        label = name or getattr(kernel_fn, "__name__", "kernel")
+        return _profile.wrap(f"kernel_call.{label}", call)
+    return call

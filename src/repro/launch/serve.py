@@ -9,6 +9,11 @@ Fault-injection demo (the resilience plane, DESIGN.md §14):
 
   python -m repro.launch.serve --arch granite-8b --smoke --paged \
       --fault-rate 0.05 --watchdog-s 0.5
+
+Telemetry (DESIGN.md §16): the summary JSON always includes per-request
+TTFT / inter-token-latency / queue-wait and run-level p50/p99; add
+``--trace-out trace.json`` for a Perfetto-viewable lifecycle trace and
+``--metrics-out metrics.json`` for the raw registry snapshots.
 """
 from __future__ import annotations
 
@@ -81,6 +86,13 @@ def main():
                     help="per-step wall-clock deadline; a step past it "
                          "is discarded and its slots requeued (armed "
                          "after the first, compiling, step)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the per-request lifecycle trace as "
+                         "Chrome trace-event JSON (open in Perfetto: "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the engine + telemetry MetricsRegistry "
+                         "snapshots (counters/gauges/histograms) as JSON")
     args = ap.parse_args()
     if args.kv_dtype and not args.paged:
         ap.error("--kv-dtype requires --paged")
@@ -95,7 +107,8 @@ def main():
     from repro.configs.smoke import smoke_config
     from repro.core import tuning
     from repro.models.registry import build_model
-    from repro.serve import Engine, FaultPlan, Request, ServeConfig
+    from repro.serve import Engine, FaultPlan, Request, ServeConfig, \
+        ServeTelemetry
 
     # Pick up persisted per-arch tuning caches before any kernel traces:
     # block_*=None then resolves to autotuned winners, no re-tuning.
@@ -116,7 +129,12 @@ def main():
                      max_retries=args.max_retries)
     plan = (FaultPlan(rate=args.fault_rate, seed=args.fault_seed)
             if args.fault_rate > 0 else None)
-    engine = Engine(model, params, sc, fault_plan=plan)
+    # telemetry is always on in the launcher: the per-request latency
+    # fields below come from it, and the obs-smoke gate bounds its
+    # overhead at < 5% tok/s
+    telemetry = ServeTelemetry()
+    engine = Engine(model, params, sc, fault_plan=plan,
+                    telemetry=telemetry)
 
     import numpy as np
     rng = np.random.default_rng(0)
@@ -139,6 +157,34 @@ def main():
     dt = time.perf_counter() - t0
     new_tokens = sum(len(r.out) for r in reqs)
     st = engine.stats()
+
+    def _r(v, nd=5):
+        return None if v is None else round(v, nd)
+
+    # per-request latencies derived from the lifecycle trace (the
+    # aggregate tok/s alone hid queueing and preemption stalls)
+    per_request = [
+        {"rid": row["rid"], "status": row["status"],
+         "tokens": row["tokens"], "ttft_s": _r(row["ttft_s"]),
+         "itl_p50_s": _r(row["itl_p50_s"]),
+         "queue_wait_s": _r(row["queue_wait_s"]),
+         "preempt_stall_s": _r(row["preempt_stall_s"]),
+         "recovery_s": _r(row["recovery_s"])}
+        for row in telemetry.request_metrics()]
+    lat = telemetry.summary()
+    latency = {m: ({"p50": _r(v["p50"]), "p99": _r(v["p99"]),
+                    "count": v["count"]} if v else None)
+               for m, v in lat.items() if m != "requests"}
+
+    if args.trace_out:
+        telemetry.trace.export(args.trace_out)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump({"engine": engine.metrics.snapshot(),
+                       "telemetry": telemetry.registry.snapshot()},
+                      f, indent=1, sort_keys=True)
+            f.write("\n")
+
     print(json.dumps({
         "arch": args.arch, "paged": args.paged,
         "kv_dtype": (engine.kv_spec.dtype if getattr(engine, "kv_spec", None)
@@ -156,6 +202,10 @@ def main():
         "recoveries": st["recoveries"],
         "failed_requests": st["failed_requests"],
         "watchdog_trips": st["watchdog_trips"],
+        "last_watchdog_trip": st["last_watchdog_trip"],
+        "last_recovery": st["last_recovery"],
+        "latency": latency,
+        "per_request": per_request,
         **({"quarantined_pages": st["quarantined"],
             "pool_groups": st["pool_groups"]} if args.paged else {}),
         **({"window_prefix_frees": st["window_prefix_frees"]}

@@ -1,0 +1,10 @@
+"""Observability primitives shared by the serve plane and the kernel
+layer: metrics (counters/gauges/log-bucket histograms), the bounded
+lifecycle trace ring, and opt-in ``REPRO_PROFILE=1`` dispatch timing.
+See DESIGN.md §16."""
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import EVENT_KINDS, Trace, TraceEvent
+from repro.obs import profile
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "EVENT_KINDS", "Trace", "TraceEvent", "profile"]

@@ -1,0 +1,87 @@
+"""Opt-in kernel-level profiling hooks (``REPRO_PROFILE=1``).
+
+When enabled, ``core/op.py`` wraps every device_op dispatch and
+``core/runtime.py`` wraps every ``kernel_call`` callable in a
+wall-clock timer that aggregates into a module-level
+:class:`~repro.obs.metrics.MetricsRegistry` — the same measurement
+machinery the serve-plane latency numbers come from, so autotune wins
+and serve-loop hot paths are read off one clock.
+
+Off by default: the hot path pays exactly one module-attribute bool
+check per dispatch.  Timings are host wall-clock around dispatch — for
+jitted callers that is trace/compile time on first call and
+async-dispatch time after, so treat the histograms as *relative*
+profiles (which op dominates), not absolute kernel latencies; eager/
+interpret runs give true wall costs.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from contextlib import contextmanager
+from typing import Any, Callable, Dict
+
+from repro.obs.metrics import MetricsRegistry
+
+__all__ = ["enabled", "enable", "registry", "reset", "timed", "wrap",
+           "summary"]
+
+_ENABLED = os.environ.get("REPRO_PROFILE", "") == "1"
+_REGISTRY = MetricsRegistry()
+
+# duration histograms: 100ns .. 100s at ~25% relative resolution
+_LO, _HI = 1e-7, 1e2
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def enable(on: bool = True) -> None:
+    """Flip profiling at runtime (tests; long-lived serve processes)."""
+    global _ENABLED
+    _ENABLED = bool(on)
+
+
+def registry() -> MetricsRegistry:
+    return _REGISTRY
+
+
+def reset() -> None:
+    """Drop all aggregated timings (fresh registry)."""
+    global _REGISTRY
+    _REGISTRY = MetricsRegistry()
+
+
+def record(label: str, seconds: float) -> None:
+    _REGISTRY.counter(f"{label}.calls").inc()
+    _REGISTRY.histogram(f"{label}.s", lo=_LO, hi=_HI).observe(seconds)
+
+
+@contextmanager
+def timed(label: str):
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        record(label, time.perf_counter() - t0)
+
+
+def wrap(label: str, fn: Callable[..., Any]) -> Callable[..., Any]:
+    """Return ``fn`` wrapped in a per-call timer under ``label``."""
+
+    @functools.wraps(fn)
+    def timed_fn(*args: Any, **kwargs: Any) -> Any:
+        t0 = time.perf_counter()
+        try:
+            return fn(*args, **kwargs)
+        finally:
+            record(label, time.perf_counter() - t0)
+
+    return timed_fn
+
+
+def summary() -> Dict[str, Any]:
+    """Snapshot of everything profiled so far (JSON-serializable)."""
+    return _REGISTRY.snapshot()

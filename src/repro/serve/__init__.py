@@ -2,4 +2,5 @@ from repro.serve.engine import (Engine, ServeConfig, Request,
                                 PREEMPT_POLICIES, SPEC_MODES,
                                 run_recording_finish_order)  # noqa: F401
 from repro.serve.faults import FAULT_KINDS, FaultPlan  # noqa: F401
-from repro.serve import faults, paging  # noqa: F401
+from repro.serve.telemetry import ServeTelemetry  # noqa: F401
+from repro.serve import faults, paging, telemetry  # noqa: F401

@@ -4,11 +4,21 @@ fully device-resident decode loop, over a paged or slot-dense KV cache.
 Scheduler state (active mask, lengths, current tokens, emitted-token
 counts) lives **on device**: ``step()`` runs one jitted decode —
 model step, sampling, length/active/finish updates — and performs a
-single ``jax.device_get`` of the small (next_token, done) pair.  The
-host keeps numpy mirrors (updated from that one transfer) purely for
-admission control and page allocation; no per-slot syncs, no per-step
-host-built arrays (the bugs the slot engine had: see the regression
-tests in tests/test_serve.py).
+single ``jax.device_get`` of the small (next_token, done, bad,
+emitted) tuple.  The host keeps numpy mirrors (updated from that one
+transfer) purely for admission control and page allocation; no
+per-slot syncs, no per-step host-built arrays (the bugs the slot
+engine had: see the regression tests in tests/test_serve.py).
+
+Observability (DESIGN.md §16): scheduler/resilience counters are
+backed by a per-engine ``MetricsRegistry`` (``stats()`` is the
+compatible façade; the old attribute names remain as read-only
+properties).  Per-step telemetry counters — emitted tokens, accepted
+spec length, the bad-slot lane — are *piggybacked onto the existing
+step-result tuple*, so attaching a ``ServeTelemetry``
+(serve/telemetry.py) records the full per-request lifecycle trace and
+latency histograms without adding a single device sync; a regression
+test counts ``_device_get`` calls with telemetry on vs off.
 
 Admission is batched: queued requests are grouped by prompt length and
 each group is prefilled in ONE compiled call (grouping by exact length
@@ -77,6 +87,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import Model
+from repro.obs.metrics import MetricsRegistry
 from repro.serve import paging
 from repro.serve.faults import FAULT_KINDS, FaultPlan, corrupt_page, \
     nonfinite_pages
@@ -172,12 +183,30 @@ class Request:
 
 class Engine:
     def __init__(self, model: Model, params, sc: ServeConfig,
-                 fault_plan: Optional[FaultPlan] = None):
+                 fault_plan: Optional[FaultPlan] = None,
+                 telemetry=None):
         self.model = model
         self.params = params
         self.sc = sc
         self.cfg = model.cfg
         slots = sc.slots
+        # Observability (DESIGN.md §16): every engine carries a
+        # MetricsRegistry — the backing store for the scheduler/
+        # resilience counters stats() reads (the legacy attribute names
+        # remain as read-only properties below).  ``telemetry`` is an
+        # optional, attachable serve.telemetry.ServeTelemetry recording
+        # the per-request lifecycle trace + latency histograms; every
+        # hook site below costs one ``is None`` check when detached,
+        # runs on the host commit path after the step's single
+        # device_get, and never adds a device sync.
+        self.metrics = MetricsRegistry()
+        self.telemetry = telemetry
+        # (step, wall-time) records for the most recent watchdog trip /
+        # fault recovery — stats() exposes them so an operator can
+        # correlate with external logs (previously counted, never
+        # timestamped)
+        self.last_watchdog_trip: Optional[Dict[str, Any]] = None
+        self.last_recovery: Optional[Dict[str, Any]] = None
         if sc.on_overflow not in ("reject", "truncate"):
             raise ValueError(f"on_overflow must be 'reject' or 'truncate', "
                              f"got {sc.on_overflow!r}")
@@ -259,7 +288,6 @@ class Engine:
                 # first live global page per slot (the sliding lease's
                 # low-water mark free_prefix advances from)
                 self.win_first = np.zeros((slots,), np.int64)
-                self.window_prefix_frees = 0
             self.caches = paging.init_paged_caches(
                 model, slots, sc.cache_len, self.page_size, total,
                 kv_spec=self.kv_spec, total_pages_window=total_w)
@@ -293,16 +321,24 @@ class Engine:
         # entries (the starvation guard); _admit_seq[slot] is a
         # monotonic admission stamp the "lru" victim policy reads.
         self.requeue: collections.deque[Request] = collections.deque()
-        self.preemptions = 0
-        self.preemptions_by_policy = {p: 0 for p in PREEMPT_POLICIES}
-        self.requeue_peak_depth = 0
+        # pre-create the registry-backed scheduler/resilience counters
+        # so snapshot()/stats() show explicit zeros from step one
+        m = self.metrics
+        m.counter("serve.preemptions")
+        for p in PREEMPT_POLICIES:
+            m.counter(f"serve.preemptions.{p}")
+        for k in FAULT_KINDS:
+            m.counter(f"serve.recoveries.{k}")
+        m.counter("serve.failed_requests")
+        m.counter("serve.watchdog_trips")
+        m.counter("serve.spec_steps")
+        m.counter("serve.spec_emitted")
+        m.counter("serve.spec_rejections")
+        m.counter("serve.window_prefix_frees")
+        m.gauge("serve.requeue_peak_depth")
         self._admit_seq = np.zeros((slots,), np.int64)
         self._seq = 0
         self._key = jax.random.PRNGKey(sc.seed)
-        # speculative-decode observability (host counters)
-        self.spec_steps = 0
-        self.spec_emitted = 0
-        self.spec_rejections = 0
         # resilience state: the injectable fault plan (None in
         # production paths); the step counter backoff stamps are quoted
         # in (it ticks even on idle steps, so a backing-off requeue
@@ -312,9 +348,6 @@ class Engine:
         self.watchdog_s = sc.watchdog_s
         self.step_count = 0
         self._alloc_deny = False
-        self.recoveries = {k: 0 for k in FAULT_KINDS}
-        self.failed_requests = 0
-        self.watchdog_trips = 0
         # per-slot drafting enable for the spec step (a request whose
         # spec_faults crossed spec_disable_after decodes 1 token/step)
         self._spec_ok_h = np.ones((slots,), bool)
@@ -327,6 +360,62 @@ class Engine:
         self._admit_fn = jax.jit(self._build_admit())
         self._spec_fn = jax.jit(self._build_spec_step()) if self.spec \
             else None
+
+    # -- registry-backed counters (legacy attribute names) -----------------
+    # The scheduler/resilience counters live in self.metrics; these
+    # read-only properties keep every existing caller of the old plain
+    # attributes working (benchmarks, launchers, tests) while making a
+    # stray `eng.preemptions += 1` an AttributeError instead of a
+    # silently-forked count.
+    @property
+    def preemptions(self) -> int:
+        return self.metrics.counter("serve.preemptions").value
+
+    @property
+    def preemptions_by_policy(self) -> Dict[str, int]:
+        return {p: self.metrics.counter(f"serve.preemptions.{p}").value
+                for p in PREEMPT_POLICIES}
+
+    @property
+    def requeue_peak_depth(self) -> int:
+        return int(self.metrics.gauge("serve.requeue_peak_depth").value)
+
+    @property
+    def recoveries(self) -> Dict[str, int]:
+        return {k: self.metrics.counter(f"serve.recoveries.{k}").value
+                for k in FAULT_KINDS}
+
+    @property
+    def failed_requests(self) -> int:
+        return self.metrics.counter("serve.failed_requests").value
+
+    @property
+    def watchdog_trips(self) -> int:
+        return self.metrics.counter("serve.watchdog_trips").value
+
+    @property
+    def spec_steps(self) -> int:
+        return self.metrics.counter("serve.spec_steps").value
+
+    @property
+    def spec_emitted(self) -> int:
+        return self.metrics.counter("serve.spec_emitted").value
+
+    @property
+    def spec_rejections(self) -> int:
+        return self.metrics.counter("serve.spec_rejections").value
+
+    @property
+    def window_prefix_frees(self) -> int:
+        return self.metrics.counter("serve.window_prefix_frees").value
+
+    def _pool_pressure_brief(self) -> Dict[str, Dict[str, int]]:
+        """Host-side live/quarantined page counts per pool group (no
+        device reads) — the per-step allocator sample on_step records."""
+        groups = {"global": self.allocator.brief()}
+        if self.windowed:
+            groups["window"] = self.allocator_w.brief()
+        return groups
 
     # -- jitted bodies ----------------------------------------------------
     def _resolve_page_size(self) -> int:
@@ -374,8 +463,12 @@ class Engine:
                                     | (next_tok == eos_id)
                                     | (new_lengths + 1 > cache_len))
             new_active = active & ~done
+            # per-step device counter, piggybacked onto the step-result
+            # tuple so telemetry rides the existing single device_get
+            # (zero extra syncs — the obs regression test counts calls)
+            emitted = jnp.sum((active & ~bad).astype(jnp.int32))
             return (next_tok, new_lengths, new_active, new_n_out, done,
-                    bad, new_caches)
+                    bad, emitted, new_caches)
 
         return step_fn
 
@@ -541,6 +634,8 @@ class Engine:
         if not req.tokens:
             raise ValueError(f"request {req.rid}: empty prompt")
         self.queue.append(req)
+        if self.telemetry is not None:
+            self.telemetry.on_submit(req, self.step_count)
 
     def _free_slots(self) -> List[int]:
         return [s for s in range(self.sc.slots) if self.active[s] is None]
@@ -689,6 +784,7 @@ class Engine:
             jnp.asarray(n_out_vals), page_rows, jnp.asarray(hist_rows),
             page_rows_w)
 
+        tel = self.telemetry
         for i, (req, slot) in enumerate(zip(reqs, slots)):
             self._seq += 1
             self._admit_seq[slot] = self._seq
@@ -697,12 +793,23 @@ class Engine:
                 # speculative steps decodes 1 token/step from now on
                 self._spec_ok_h[slot] = not req.spec_disabled
                 self._spec_ok_dirty = True
+            if tel is not None:
+                tel.on_admit(req, slot, self.step_count)
+                # admission always commits one sampled token (the
+                # prefill logits); it is the request's FIRST generated
+                # token only on fresh admission — re-prefills resume an
+                # out that already has history
+                if len(req.out) == 1:
+                    tel.on_first_token(req, slot, self.step_count)
+                tel.on_tokens(req, slot, self.step_count, 1)
             if admit_active[i]:
                 self.active[slot] = req
                 self._active_h[slot] = True
                 self._len_h[slot] = plen
             else:
                 req.done = True            # finished at prefill
+                if tel is not None:
+                    tel.on_finish(req, slot, self.step_count)
                 self._release(slot)
         return k
 
@@ -765,11 +872,14 @@ class Engine:
                 f"more KV pages than the pool's usable capacity ({usable} "
                 f"x {self.page_size}); raise ServeConfig.total_pages")
         req.preempts += 1
-        self.preemptions += 1
-        self.preemptions_by_policy[self.sc.preempt_policy] += 1
+        self.metrics.counter("serve.preemptions").inc()
+        self.metrics.counter(
+            f"serve.preemptions.{self.sc.preempt_policy}").inc()
         self.requeue.append(req)
-        self.requeue_peak_depth = max(self.requeue_peak_depth,
-                                      len(self.requeue))
+        self.metrics.gauge("serve.requeue_peak_depth").set_max(
+            len(self.requeue))
+        if self.telemetry is not None:
+            self.telemetry.on_preempt(req, slot, self.step_count)
         # park the device rows: the jitted step must stop advancing this
         # slot *before* the next decode, not at its end like finish does
         self.active_mask = self.active_mask.at[slot].set(False)
@@ -802,7 +912,8 @@ class Engine:
                     self.allocator_w, self.block_tables_w[slot],
                     int(self.win_first[slot]), new_first)
                 if freed:
-                    self.window_prefix_frees += freed
+                    self.metrics.counter(
+                        "serve.window_prefix_frees").inc(freed)
                     self._btw_dirty = True
                 self.win_first[slot] = new_first
             needed = paging.pages_per_slot(target, self.page_size)
@@ -878,6 +989,10 @@ class Engine:
         active = [int(s) for s in np.nonzero(self._active_h)[0]]
         for kind, slot in self.fault_plan.faults_for(self.step_count,
                                                      active):
+            if self.telemetry is not None:
+                self.telemetry.on_fault_injected(
+                    self.step_count, kind,
+                    int(slot) if slot is not None else None)
             if kind == "alloc_fail":
                 self._alloc_deny = True
             elif kind == "stall":
@@ -915,7 +1030,11 @@ class Engine:
             return False
         if time.perf_counter() - t0 <= self.watchdog_s:
             return False
-        self.watchdog_trips += 1
+        self.metrics.counter("serve.watchdog_trips").inc()
+        self.last_watchdog_trip = {"step": self.step_count,
+                                   "wall_time_s": time.time()}
+        if self.telemetry is not None:
+            self.telemetry.on_watchdog_trip(self.step_count)
         for slot in np.nonzero(self._active_h)[0]:
             self._fault_requeue(int(slot), "stall")
         return True
@@ -958,8 +1077,12 @@ class Engine:
         req.retries += 1
         if self.spec:
             req.spec_faults += 1
-            if req.spec_faults >= self.sc.spec_disable_after:
+            if (req.spec_faults >= self.sc.spec_disable_after
+                    and not req.spec_disabled):
                 req.spec_disabled = True
+                if self.telemetry is not None:
+                    self.telemetry.on_spec_degraded(req, slot,
+                                                    self.step_count)
         eff = len(req.tokens) + len(req.out)
         need = (paging.pages_per_slot(min(eff + 1, self.sc.cache_len),
                                       self.page_size)
@@ -967,15 +1090,22 @@ class Engine:
         if req.retries > self.sc.max_retries \
                 or (self.paged and need > self.allocator.usable):
             req.failed = True
-            self.failed_requests += 1
+            self.metrics.counter("serve.failed_requests").inc()
+            if self.telemetry is not None:
+                self.telemetry.on_fail(req, slot, self.step_count, kind)
             self._release(slot)
             return
-        self.recoveries[kind] += 1
+        self.metrics.counter(f"serve.recoveries.{kind}").inc()
+        self.last_recovery = {"step": self.step_count, "kind": kind,
+                              "wall_time_s": time.time()}
+        if self.telemetry is not None:
+            self.telemetry.on_fault_requeue(req, slot, self.step_count,
+                                            kind)
         req.not_before = (self.step_count + self.sc.retry_backoff
                           * (2 ** (req.retries - 1)))
         self.requeue.append(req)
-        self.requeue_peak_depth = max(self.requeue_peak_depth,
-                                      len(self.requeue))
+        self.metrics.gauge("serve.requeue_peak_depth").set_max(
+            len(self.requeue))
         self._release(slot)
 
     def audit(self) -> List[str]:
@@ -1028,14 +1158,15 @@ class Engine:
         eos = jnp.int32(self.sc.eos_id if self.sc.eos_id is not None else -1)
         max_new = jnp.int32(self.sc.max_new_tokens)
         t0 = time.perf_counter()
-        (next_tok, new_lengths, new_active, new_n_out, done, bad,
+        (next_tok, new_lengths, new_active, new_n_out, done, bad, emitted,
          new_caches) = self._step_fn(
             self.params, self.caches, self.cur_tok, self.lengths,
             self.active_mask, self.n_out, sub, eos, max_new, bt,
             self._nan_mask(nan_slots))
         if stall:
             time.sleep(stall)                       # injected device stall
-        nt, dn, bh = _device_get((next_tok, done, bad))  # THE one sync/step
+        # THE one sync/step — the emitted-token counter piggybacks here
+        nt, dn, bh, em = _device_get((next_tok, done, bad, emitted))
         if self._watchdog_tripped(t0):
             return True             # step discarded; active slots requeued
         self.lengths, self.active_mask, self.n_out = \
@@ -1043,17 +1174,28 @@ class Engine:
         self.caches = new_caches
         self.cur_tok = next_tok
         nt, dn, bh = np.asarray(nt), np.asarray(dn), np.asarray(bh)
+        tel = self.telemetry
+        n_bad = 0
         for slot in np.nonzero(self._active_h)[0]:
             slot = int(slot)
             if bh[slot]:
+                n_bad += 1
                 self._handle_bad_slot(slot)
                 continue
             req = self.active[slot]
             req.out.append(int(nt[slot]))
             self._len_h[slot] += 1
+            if tel is not None:
+                tel.on_tokens(req, slot, self.step_count, 1)
             if dn[slot]:
                 req.done = True
+                if tel is not None:
+                    tel.on_finish(req, slot, self.step_count)
                 self._release(slot)
+        if tel is not None:
+            tel.on_step(self.step_count, emitted=int(em), bad_slots=n_bad,
+                        pools=(self._pool_pressure_brief()
+                               if self.paged else None))
         return True
 
     def _spec_step(self, nan_slots: List[int], stall: float) -> bool:
@@ -1095,23 +1237,32 @@ class Engine:
             new_caches, new_hist, new_cur
         yh, ne, dn, bh = (np.asarray(yh), np.asarray(ne), np.asarray(dn),
                           np.asarray(bh))
-        self.spec_steps += 1
+        self.metrics.counter("serve.spec_steps").inc()
+        tel = self.telemetry
+        n_bad = 0
+        accepted = 0
         for slot in np.nonzero(self._active_h)[0]:
             slot = int(slot)
             if bh[slot]:
+                n_bad += 1
                 self._handle_bad_slot(slot)   # release reclaims the row
                 continue
             req = self.active[slot]
             m = int(ne[slot])
             req.out.extend(int(t) for t in yh[slot, :m])
             self._len_h[slot] += m
-            self.spec_emitted += m
+            self.metrics.counter("serve.spec_emitted").inc(m)
+            accepted += m
+            if tel is not None and m > 0:
+                tel.on_tokens(req, slot, self.step_count, m)
             if dn[slot]:
                 req.done = True
+                if tel is not None:
+                    tel.on_finish(req, slot, self.step_count)
                 self._release(slot)     # reclaims the whole row, tail incl.
             else:
                 if m < k1:
-                    self.spec_rejections += 1
+                    self.metrics.counter("serve.spec_rejections").inc()
                 # rollback: drop the rejected tail's pages; rejected rows
                 # inside kept pages sit past the new length and are
                 # masked by every later read
@@ -1121,6 +1272,12 @@ class Engine:
                                           self.block_tables[slot], keep,
                                           int(self._ensured[slot])):
                     self._bt_dirty = True
+        if tel is not None:
+            # ne rode the step's existing single device_get: the
+            # accepted spec length per slot IS the emitted count
+            tel.on_step(self.step_count, emitted=accepted,
+                        bad_slots=n_bad, accepted=accepted,
+                        pools=self._pool_pressure_brief())
         return True
 
     def run_to_completion(self, requests: List[Request],
@@ -1134,18 +1291,27 @@ class Engine:
 
     def stats(self) -> Dict[str, Any]:
         """Scheduler + allocator pressure + resilience counters (all
-        host-side; no device sync)."""
+        host-side; no device sync).
+
+        A compatible façade over ``self.metrics`` — the counters
+        themselves live in the MetricsRegistry (see the properties
+        above); callers wanting histograms or raw counter objects read
+        ``eng.metrics.snapshot()`` instead."""
         d = {"preemptions": self.preemptions,
-             "preemptions_by_policy": dict(self.preemptions_by_policy),
+             "preemptions_by_policy": self.preemptions_by_policy,
              "requeued_waiting": len(self.requeue),
              "requeue_depth": len(self.requeue),
              "requeue_peak_depth": self.requeue_peak_depth,
              "queued_waiting": len(self.queue),
              "steps": self.step_count,
-             "recoveries": dict(self.recoveries),
+             "recoveries": self.recoveries,
              "recoveries_total": sum(self.recoveries.values()),
              "failed_requests": self.failed_requests,
-             "watchdog_trips": self.watchdog_trips}
+             "watchdog_trips": self.watchdog_trips,
+             # (step, wall-time) records for operator log correlation;
+             # None until the first trip/recovery
+             "last_watchdog_trip": self.last_watchdog_trip,
+             "last_recovery": self.last_recovery}
         if self.fault_plan is not None:
             d["faults_injected"] = dict(self.fault_plan.injected)
         if self.paged:

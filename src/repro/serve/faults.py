@@ -48,6 +48,7 @@ tests/test_faults.py::test_v_pool_nan_propagates_k_pool_does_not.)
 """
 from __future__ import annotations
 
+import collections
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -96,6 +97,12 @@ class FaultPlan:
         #: per-kind count of faults handed to the engine (injection
         #: side; the engine's ``recoveries`` counts what it survived)
         self.injected = {k: 0 for k in FAULT_KINDS}
+        #: bounded (step, kind, slot) history of resolved injections,
+        #: newest last — the injection-side twin of the engine trace's
+        #: "fault" events, so a chaos run's schedule is inspectable
+        #: after the fact without a telemetry object attached
+        self.injection_log: "collections.deque[Tuple[int, str, Optional[int]]]" \
+            = collections.deque(maxlen=4096)
 
     def at(self, step: int, kind: str, slot: Optional[int] = None
            ) -> "FaultPlan":
@@ -139,6 +146,7 @@ class FaultPlan:
                         continue
                     slot = int(active_slots[0])
             self.injected[kind] += 1
+            self.injection_log.append((step, kind, slot))
             resolved.append((kind, slot))
         self._memo[step] = resolved
         return resolved

@@ -113,6 +113,13 @@ class PageAllocator:
                 "allocs": self.alloc_count,
                 "frees": self.free_count}
 
+    def brief(self) -> dict:
+        """The cheap per-step sample the telemetry plane records (the
+        ``pages.{group}`` trace counter series and ``serve.pages.*``
+        gauges): two ``len()`` reads, safe on the per-step commit
+        path.  ``pressure()`` is the full snapshot for ``stats()``."""
+        return {"in_use": self.in_use, "quarantined": self.quarantined}
+
     def alloc(self) -> int:
         if not self._free:
             raise RuntimeError(

@@ -44,6 +44,10 @@ def _valid_doc():
                                 "live_page_ratio": 3.2,
                                 "window_prefix_frees": 22,
                                 "tok_per_s": 800.0}]},
+        "latency": {"results": [{"config": "bf16-plain", "kv_dtype": "bf16",
+                                 "mode": "plain", "ttft_p50_s": 0.12,
+                                 "ttft_p99_s": 0.31, "itl_p50_s": 0.02,
+                                 "itl_p99_s": 0.05, "tok_per_s": 900.0}]},
     }
 
 

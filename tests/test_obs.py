@@ -1,0 +1,322 @@
+"""Observability plane (repro.obs + serve/telemetry.py, DESIGN.md §16):
+metrics primitives against the numpy reference, trace schema/lifecycle
+validation, the zero-extra-sync regression (telemetry must not change
+the engine's one-device_get-per-step contract, plain or speculative),
+the (step, wall-time) watchdog/recovery records in stats(), and the
+opt-in REPRO_PROFILE kernel hooks."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.smoke import smoke_config
+from repro.models.registry import build_model
+from repro.obs import profile
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.trace import EVENT_KINDS, Trace
+from repro.serve import (Engine, FaultPlan, Request, ServeConfig,
+                         ServeTelemetry)
+from repro.serve import engine as engine_mod
+
+_STATE = {}
+
+
+def _model():
+    if "model" not in _STATE:
+        cfg = smoke_config("granite-8b", num_layers=1)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _STATE["model"] = (model, params, cfg)
+    return _STATE["model"]
+
+
+def _engine(telemetry=None, plan=None, **kw):
+    model, params, cfg = _model()
+    base = dict(slots=2, cache_len=32, max_new_tokens=4, paged=True,
+                page_size=4)
+    base.update(kw)
+    return Engine(model, params, ServeConfig(**base), fault_plan=plan,
+                  telemetry=telemetry)
+
+
+def _reqs(n=4):
+    return [Request(rid=i, tokens=[3 + i, 5, 7, 11][:3 + (i % 2)])
+            for i in range(n)]
+
+
+def _drive(eng, reqs, watchdog_s=None, max_steps=500):
+    for r in reqs:
+        eng.submit(r)
+    for i in range(max_steps):
+        busy = eng.step()
+        if i == 0:
+            eng.watchdog_s = watchdog_s
+        if not busy and not eng.queue and not eng.requeue:
+            return reqs
+    raise AssertionError(f"engine did not drain: {eng.stats()}")
+
+
+# ------------------------------------------------------- histograms ----
+
+def test_histogram_percentiles_within_bucket_factor():
+    """Bucketed percentile estimates land within one geometric bucket
+    factor of the exact numpy sample percentile (metrics.py's
+    documented accuracy contract)."""
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=-4.0, sigma=1.5, size=2000)
+    h = Histogram("t", lo=1e-5, hi=1e3, factor=1.25)
+    for v in samples:
+        h.observe(float(v))
+    for q in (50, 90, 99):
+        exact = float(np.percentile(samples, q))
+        est = h.percentile(q)
+        assert exact / h.factor <= est <= exact * h.factor, \
+            (q, est, exact)
+
+
+def test_histogram_exact_moments_ride_alongside():
+    h = Histogram("t", lo=1e-3, hi=1e2)
+    vals = [0.5, 0.002, 7.0, 0.1]
+    for v in vals:
+        h.observe(v)
+    assert h.count == len(vals)
+    assert h.sum == pytest.approx(sum(vals))
+    assert h.min == min(vals) and h.max == max(vals)
+    assert h.mean == pytest.approx(sum(vals) / len(vals))
+
+
+def test_histogram_underflow_overflow_return_tracked_extremes():
+    h = Histogram("t", lo=1e-2, hi=1.0)
+    h.observe(1e-6)   # underflow bucket
+    h.observe(50.0)   # overflow bucket
+    assert h.percentile(1) == 1e-6
+    assert h.percentile(100) == 50.0
+    assert sum(h.counts) == h.count == 2
+    assert h.percentile(50) is not None
+    assert Histogram("empty").percentile(50) is None
+
+
+def test_registry_get_or_create_and_type_conflicts():
+    reg = MetricsRegistry()
+    c = reg.counter("serve.steps")
+    assert reg.counter("serve.steps") is c
+    c.inc(3)
+    with pytest.raises(ValueError, match="monotonic"):
+        c.inc(-1)
+    g = reg.gauge("pool.pages")
+    g.set_max(4.0)
+    g.set_max(2.0)
+    assert g.value == 4.0
+    with pytest.raises(TypeError, match="already registered"):
+        reg.histogram("serve.steps")
+    # snapshot is JSON-serializable as-is (launch --metrics-out path)
+    json.dumps(reg.snapshot())
+
+
+# ------------------------------------------------------------ trace ----
+
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.001
+        return t[0]
+
+    return clock
+
+
+def _record_lifecycle(tr, rid, slot=0):
+    tr.record("submitted", rid=rid)
+    tr.record("admitted", rid=rid, slot=slot, step=1)
+    tr.record("first_token", rid=rid, slot=slot, step=1)
+    tr.record("tokens", rid=rid, slot=slot, step=2, n=1)
+    tr.record("finished", rid=rid, slot=slot, step=3)
+
+
+def test_trace_valid_lifecycle_passes_validation():
+    tr = Trace(capacity=64, clock=_fake_clock())
+    _record_lifecycle(tr, rid=0)
+    tr.record("step", step=3, emitted=1)
+    assert tr.validate() == []
+    assert [e.kind for e in tr.lifecycle(0)] == \
+        ["submitted", "admitted", "first_token", "tokens", "finished"]
+
+
+def test_trace_rejects_unknown_kind():
+    tr = Trace(capacity=4)
+    with pytest.raises(ValueError, match="unknown trace event kind"):
+        tr.record("teleported", rid=0)
+
+
+def test_trace_validation_catches_lifecycle_violations():
+    tr = Trace(capacity=64, clock=_fake_clock())
+    tr.record("submitted", rid=0)
+    tr.record("admitted", rid=0, slot=0, step=1)
+    tr.record("finished", rid=0, slot=0, step=2)  # no first_token
+    problems = tr.validate()
+    assert any("without 'first_token'" in p for p in problems), problems
+
+    tr2 = Trace(capacity=64, clock=_fake_clock())
+    _record_lifecycle(tr2, rid=1)
+    tr2.record("tokens", rid=1, slot=0, step=4, n=1)  # after terminal
+    assert any("after terminal" in p for p in tr2.validate())
+
+
+def test_trace_ring_is_bounded_and_counts_drops():
+    tr = Trace(capacity=4, clock=_fake_clock())
+    _record_lifecycle(tr, rid=0)  # 5 events into a 4-ring
+    assert len(tr) == 4
+    assert tr.dropped == 1
+    # head fell off the ring: validate() must not flag the truncated
+    # lifecycle as malformed
+    assert tr.validate() == []
+
+
+def test_trace_export_schema(tmp_path):
+    tr = Trace(capacity=64, clock=_fake_clock())
+    _record_lifecycle(tr, rid=0)
+    tr.record("step", step=3, emitted=1,
+              pools={"global": {"in_use": 2, "quarantined": 0}})
+    p = tmp_path / "trace.json"
+    doc = tr.export(str(p))
+    with open(p) as f:
+        assert json.load(f) == doc
+    evs = doc["traceEvents"]
+    phases = {e["ph"] for e in evs}
+    assert {"M", "i", "X", "C"} <= phases  # metadata, instants,
+    # residency spans, counter series
+    for e in evs:
+        assert {"ph", "pid", "tid"} <= set(e)
+        if e["ph"] != "M":
+            assert "ts" in e
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert spans and all(e["dur"] > 0 for e in spans)
+    assert doc["otherData"]["recorded_events"] == len(tr)
+
+
+# ---------------------------------------- zero-extra-sync regression ----
+
+@pytest.mark.parametrize("spec_mode", ["off", "ngram"])
+def test_telemetry_adds_no_device_syncs(monkeypatch, spec_mode):
+    """The one-device_get-per-step contract with telemetry attached:
+    same call count AND token-identical outputs as a bare engine, on
+    both the plain and the batched-speculative step paths."""
+    results = {}
+    for with_tel in (False, True):
+        calls = [0]
+        real = engine_mod._device_get
+
+        def counting(x, _real=real, _calls=calls):
+            _calls[0] += 1
+            return _real(x)
+
+        monkeypatch.setattr(engine_mod, "_device_get", counting)
+        tel = ServeTelemetry() if with_tel else None
+        eng = _engine(telemetry=tel, spec_mode=spec_mode, spec_k=3)
+        reqs = _drive(eng, _reqs())
+        monkeypatch.setattr(engine_mod, "_device_get", real)
+        assert all(r.done for r in reqs)
+        results[with_tel] = (calls[0], [r.out for r in reqs])
+    assert results[True][0] == results[False][0], \
+        f"telemetry changed device_get count: {results}"
+    assert results[True][1] == results[False][1]
+
+
+# ------------------------------------------- derived latency metrics ----
+
+def test_telemetry_derives_request_latencies_and_summary():
+    tel = ServeTelemetry()
+    reqs = _drive(_engine(telemetry=tel), _reqs(5))  # 5 reqs, 2 slots:
+    assert all(r.done for r in reqs)                 # some must queue
+    rows = tel.request_metrics()
+    assert len(rows) == 5
+    for r in rows:
+        assert r["status"] == "finished"
+        assert r["ttft_s"] > 0 and r["queue_wait_s"] >= 0
+        assert r["e2e_s"] >= r["ttft_s"]
+        assert r["itl_p50_s"] is not None and r["tokens"] == 4
+    # summary percentiles are numpy-exact over the per-request samples
+    s = tel.summary(qs=(50, 99))
+    assert s["requests"] == 5
+    ttft = tel.samples("ttft_s")
+    assert s["ttft_s"]["p50"] == pytest.approx(
+        float(np.percentile(ttft, 50)))
+    assert s["ttft_s"]["p99"] == pytest.approx(
+        float(np.percentile(ttft, 99)))
+    assert s["ttft_s"]["count"] == 5
+    with pytest.raises(ValueError, match="unknown latency metric"):
+        tel.samples("nope")
+    # the registry's bucketed twin saw the same observations
+    assert tel.registry.histogram("serve.ttft_s").count == 5
+    assert tel.trace.validate() == []
+
+
+# ----------------------------- watchdog / recovery (step, wall-time) ----
+
+def test_stats_exposes_last_watchdog_trip_and_recovery_records():
+    """Satellite regression: trips and recoveries carry (step,
+    wall-time) records in stats(), not just counts."""
+    eng = _engine()
+    st = eng.stats()
+    assert st["last_watchdog_trip"] is None
+    assert st["last_recovery"] is None
+
+    tel = ServeTelemetry()
+    eng = _engine(telemetry=tel, max_new_tokens=8, max_retries=6,
+                  retry_backoff=1,
+                  plan=FaultPlan(stall_s=0.5).at(4, "stall"))
+    reqs = _drive(eng, _reqs(), watchdog_s=0.25)
+    assert all(r.done for r in reqs)
+    st = eng.stats()
+    assert st["watchdog_trips"] == 1
+    trip = st["last_watchdog_trip"]
+    assert set(trip) == {"step", "wall_time_s"}
+    assert trip["step"] >= 1 and trip["wall_time_s"] > 0
+    rec = st["last_recovery"]
+    assert set(rec) == {"step", "kind", "wall_time_s"}
+    assert rec["kind"] == "stall"
+    assert rec["wall_time_s"] >= trip["wall_time_s"]
+    # and the lifecycle trace saw the same events
+    kinds = {e.kind for e in tel.trace.events}
+    assert {"watchdog_trip", "requeued"} <= kinds
+    assert tel.registry.counter("serve.watchdog_trips").value == 1
+
+
+def test_fault_plan_keeps_injection_log():
+    plan = FaultPlan().at(2, "kv_corrupt")
+    eng = _engine(plan=plan, max_new_tokens=8, max_retries=6,
+                  retry_backoff=1)
+    reqs = _drive(eng, _reqs())
+    assert all(r.done for r in reqs)
+    assert any(kind == "kv_corrupt" and step == 2
+               for step, kind, _slot in plan.injection_log)
+
+
+# --------------------------------------------- REPRO_PROFILE hooks ----
+
+def test_profile_hooks_aggregate_device_op_timings():
+    """REPRO_PROFILE wraps device_op dispatch (core/op.py) and
+    kernel_call (core/runtime.py) with timers into one registry; off
+    by default so the hot path pays a single bool check."""
+    from repro.kernels import registry as R
+
+    op = next(o for o in R.all_ops() if o.name == "rmsnorm")
+    operands, params = op.example_inputs(jax.random.PRNGKey(0))
+    profile.reset()
+    was = profile.enabled()
+    try:
+        profile.enable(False)
+        op(*operands, **params)
+        assert profile.summary() == {"counters": {}, "gauges": {},
+                                     "histograms": {}}
+        profile.enable(True)
+        op(*operands, **params)
+    finally:
+        profile.enable(was)
+    snap = profile.summary()
+    assert snap["counters"]["device_op.rmsnorm.calls"] == 1
+    hist = snap["histograms"]["device_op.rmsnorm.s"]
+    assert hist["count"] == 1 and hist["p50"] > 0
+    profile.reset()
+    assert profile.summary()["counters"] == {}
