@@ -41,6 +41,7 @@ def main() -> None:
                                         format_oversub_rows,
                                         format_resilience_rows,
                                         format_serving_rows,
+                                        format_slo_rows,
                                         format_spec_rows)
     path = bench_json_path()
     doc = None
@@ -67,7 +68,10 @@ def main() -> None:
              "--section hybrid"),
             ("Latency", format_latency_rows,
              "python -m benchmarks.serve_bench --update-bench "
-             "--section latency")):
+             "--section latency"),
+            ("SLO", format_slo_rows,
+             "python -m benchmarks.serve_bench --update-bench "
+             "--section slo")):
         print()
         print("=" * 72)
         print(f"## {title} (from BENCH_autotune.json)")

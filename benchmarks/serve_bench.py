@@ -44,6 +44,12 @@ regime CI can check):
       in-run-timed telemetry code stays < 5% of drain wall, and the
       lifecycle trace validates and exports well-formed Chrome trace
       JSON (DESIGN.md §16)
+  python -m benchmarks.serve_bench --workload-smoke # deterministic
+      trace-replay gate: the committed bursty trace replayed twice
+      through the priority-policy engine is token-identical, with
+      identical admission + preemption order and equal per-class
+      metrics, and the trace regenerates byte-identically from its
+      embedded spec (DESIGN.md §17)
 
 The ``kv_quant`` section measures the dtype axis of the paged pool
 (repro.quant): per KV dtype, end-to-end decode tokens/sec and the max
@@ -87,6 +93,15 @@ DESIGN.md §16) across a bf16/int8 x plain/spec x with/without-
 preemption-pressure config matrix.  Every timed run in this file goes
 through one shared clock (``_timed_drain``), which also feeds the
 engine's MetricsRegistry.
+
+The ``slo`` section replays the committed bursty trace
+(benchmarks/traces/bursty_smoke.jsonl, stepped arrivals via
+repro.serve.workload) through the ``priority`` preempt policy twice —
+unloaded and over the oversubscribed SLO pool — and reports per-
+traffic-class p50/p99 TTFT, ITL, queue wait and completion rate.  The
+committed acceptance number: the highest class's loaded p99 TTFT stays
+within 2x of its own unloaded p50 while low-priority classes absorb
+the preemption pressure (DESIGN.md §17).
 
 Smoke modes are CI gates and must never write outside a temp dir —
 only ``--update-bench`` writes at all, and every ``--*-smoke`` run is
@@ -1253,9 +1268,197 @@ def obs_smoke() -> None:
           f"trace valid, {len(evs)} events exported well-formed")
 
 
+# ---------------------------------------------------------------------------
+# slo: per-priority-class percentiles under a replayed bursty trace
+# ---------------------------------------------------------------------------
+
+#: The committed replayable trace the slo section and workload-smoke
+#: gate run (frozen by ``python -m repro.serve.workload``; regenerating
+#: it with the same spec + seed reproduces it byte-identically).
+TRACE_PATH = os.path.join(_REPO_ROOT, "benchmarks", "traces",
+                          "bursty_smoke.jsonl")
+
+#: Oversubscribed pool for the loaded SLO runs: page_size 8 with 4
+#: slots at cache_len 64 gives a 4 * 8 = 32-page working set; 15 usable
+#: pages (~0.47x) forces sustained preemption while still exceeding the
+#: largest trace prompt's page need (48 tokens + 1 -> 7 pages).
+SLO_POOL = {"slots": 4, "cache_len": 64, "max_new": 16,
+            "page_size": 8, "total_pages": 1 + 15}
+
+
+def _slo_engine(*, oversub: bool, telemetry=None):
+    from repro.serve import ServeTelemetry
+    eng, cfg = build(True, layers=1, slots=SLO_POOL["slots"],
+                     cache_len=SLO_POOL["cache_len"],
+                     max_new=SLO_POOL["max_new"],
+                     page_size=SLO_POOL["page_size"],
+                     total_pages=SLO_POOL["total_pages"] if oversub
+                     else None,
+                     preempt_policy="priority")
+    eng.telemetry = telemetry if telemetry is not None \
+        else ServeTelemetry()
+    return eng, cfg
+
+
+def _replay_trace(eng, trace, *, audit=False) -> Dict[str, Any]:
+    """Replay ``trace`` through ``eng`` on the shared bench clock:
+    stepped arrivals via workload.replay, wall/toks via the same
+    accounting _timed_drain feeds the MetricsRegistry with."""
+    from repro.serve import workload
+    t0 = time.perf_counter()
+    reqs = workload.replay(eng, trace, audit=audit)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in reqs)
+    eng.metrics.histogram("bench.drain_wall_s", lo=1e-4, hi=1e4).observe(dt)
+    eng.metrics.counter("bench.drain_tokens").inc(toks)
+    return {"requests": reqs, "new_tokens": toks,
+            "wall_s": round(dt, 3), "tok_per_s": round(toks / dt, 2)}
+
+
+def slo_payload() -> Dict[str, Any]:
+    """Per-traffic-class SLO rows under the committed bursty trace.
+
+    Two runs of the SAME trace through the priority-policy engine:
+    *unloaded* (default-sized pool — the reference each class's p50
+    TTFT is quoted from) and *loaded* (the oversubscribed SLO_POOL, so
+    the page pool is under sustained preemption pressure).  The row the
+    acceptance gate reads: the highest class's loaded p99 TTFT must
+    stay within 2x of its own unloaded p50 — priority victim selection
+    + class-aware admission push the degradation onto the low classes.
+    A warm run with identically-shaped traffic compiles everything
+    first, so percentiles never include jit time."""
+    from repro.serve import ServeTelemetry, workload
+    trace = workload.load_trace(TRACE_PATH)
+    rows = []
+    per_run: Dict[str, Any] = {}
+    for run_name, oversub in (("unloaded", False), ("loaded", True)):
+        eng, cfg = _slo_engine(oversub=oversub)
+        # warm jit on the same trace shape, then measure a fresh engine
+        # (paged prefill retraces per prompt-length group; the trace
+        # reuses one spec so shapes repeat across runs)
+        _replay_trace(eng, trace)
+        tel = ServeTelemetry()
+        eng, cfg = _slo_engine(oversub=oversub, telemetry=tel)
+        meas = _replay_trace(eng, trace)
+        assert all(r.done for r in meas["requests"]), \
+            f"slo {run_name} run lost requests"
+        per_run[run_name] = {"tel": tel, "meas": meas,
+                             "preemptions": eng.preemptions}
+    by_cls_unloaded = per_run["unloaded"]["tel"].summary_by_class()
+    by_cls_loaded = per_run["loaded"]["tel"].summary_by_class()
+    loaded_preempts = per_run["loaded"]["preemptions"]
+    for cls in per_run["loaded"]["tel"].class_labels():
+        lo, un = by_cls_loaded[cls], by_cls_unloaded[cls]
+
+        def pct(blk, metric, q):
+            v = blk.get(metric)
+            return None if not v else round(v[f"p{q}"], 6)
+
+        row = {"class": cls,
+               "priority": lo["priority_class"],
+               "requests": lo["requests"],
+               "completion_rate": round(lo["completion_rate"], 4),
+               "p50_ttft_s": pct(lo, "ttft_s", 50),
+               "p99_ttft_s": pct(lo, "ttft_s", 99),
+               "p50_itl_s": pct(lo, "itl_s", 50),
+               "queue_wait_s": pct(lo, "queue_wait_s", 50),
+               "preempts": lo["preempts"],
+               "unloaded_p50_ttft_s": pct(un, "ttft_s", 50)}
+        row["ttft_p99_over_unloaded_p50"] = round(
+            row["p99_ttft_s"] / row["unloaded_p50_ttft_s"], 3)
+        rows.append(row)
+        print(f"{cls:<9} prio {row['priority']}  "
+              f"ttft p50/p99 {row['p50_ttft_s']:.4f}/"
+              f"{row['p99_ttft_s']:.4f}s  "
+              f"(p99 = {row['ttft_p99_over_unloaded_p50']:.2f}x "
+              f"unloaded p50)  {row['completion_rate']:.0%} done  "
+              f"{row['preempts']} preempts")
+    # acceptance (ISSUE 10): generation-time asserts — the pool really
+    # oversubscribed (preemptions happened) and the top class held its
+    # SLO while lower classes absorbed the pressure
+    assert loaded_preempts > 0, \
+        "slo loaded run saw no preemptions — pool not oversubscribed"
+    top = max(rows, key=lambda r: r["priority"])
+    assert top["ttft_p99_over_unloaded_p50"] <= 2.0, \
+        (f"high-priority p99 TTFT {top['p99_ttft_s']}s exceeds 2x its "
+         f"unloaded p50 {top['unloaded_p50_ttft_s']}s "
+         f"({top['ttft_p99_over_unloaded_p50']}x)")
+    return {
+        "bench": "slo",
+        "generated_by": "python -m benchmarks.serve_bench --update-bench "
+                        "--section slo",
+        "arch": "interpret",
+        "config": {**SLO_POOL, "trace": os.path.relpath(
+                       TRACE_PATH, _REPO_ROOT),
+                   "trace_requests": len(trace.entries),
+                   "preempt_policy": "priority", "layers": 1,
+                   "percentiles": [50, 99], "model": "granite-8b smoke",
+                   "loaded_preemptions": loaded_preempts},
+        "results": rows,
+    }
+
+
+def workload_smoke() -> None:
+    """check.sh gate: deterministic trace replay is the CI contract.
+
+    Replays the committed bursty trace TWICE through fresh priority-
+    policy engines over the oversubscribed SLO pool (audit after every
+    step) and asserts the runs are indistinguishable: token-identical
+    outputs per rid, identical admission order, identical preemption
+    order, and equal per-class telemetry counts.  Also asserts the run
+    is non-vacuous — multiple traffic classes present and at least one
+    preemption — and that a generate->save->load round-trip of the
+    trace's own spec reproduces the committed file byte-identically
+    (the freeze is regenerable)."""
+    import tempfile
+    from repro.serve import ServeTelemetry, workload
+    trace = workload.load_trace(TRACE_PATH)
+    assert len(trace.classes_present()) >= 2, \
+        f"trace is single-class: {trace.classes_present()}"
+
+    def one_run():
+        tel = ServeTelemetry()
+        eng, _ = _slo_engine(oversub=True, telemetry=tel)
+        meas = _replay_trace(eng, trace, audit=True)
+        reqs = meas["requests"]
+        assert all(r.done for r in reqs), \
+            f"replay lost requests: {[r.rid for r in reqs if not r.done]}"
+        outs = {r.rid: list(r.out) for r in reqs}
+        admits = [e.rid for e in tel.trace.events if e.kind == "admitted"]
+        preempts = [e.rid for e in tel.trace.events
+                    if e.kind == "preempted"]
+        by_cls = {c: {"requests": blk["requests"],
+                      "completed": blk["completed"],
+                      "preempts": blk["preempts"]}
+                  for c, blk in tel.summary_by_class().items()}
+        return outs, admits, preempts, by_cls
+
+    o1, a1, p1, c1 = one_run()
+    o2, a2, p2, c2 = one_run()
+    assert o1 == o2, "same-seed replay outputs diverged"
+    assert a1 == a2, f"admission order diverged: {a1} != {a2}"
+    assert p1 == p2, f"preemption order diverged: {p1} != {p2}"
+    assert c1 == c2, f"per-class metrics diverged: {c1} != {c2}"
+    assert p1, "oversubscribed replay saw no preemptions (vacuous gate)"
+
+    # freeze regenerability: the committed file is exactly what its own
+    # embedded spec generates (temp dir only; guard watches the root)
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "regen.jsonl")
+        workload.generate_trace(trace.spec, len(trace.entries)).save(p)
+        with open(p) as f, open(TRACE_PATH) as g:
+            assert f.read() == g.read(), \
+                "committed trace is not reproducible from its spec"
+    print(f"workload-smoke OK: {len(o1)} requests x 2 replays "
+          f"token-identical; admission order ({len(a1)} admits) and "
+          f"preemption order ({len(p1)} preempts) identical; per-class "
+          f"metrics equal across {sorted(c1)}; committed trace "
+          f"regenerates byte-identically")
+
+
 #: BENCH_autotune.json sections this benchmark owns, in compute order.
 SECTIONS = ("serving", "kv_quant", "oversub", "spec", "resilience",
-            "hybrid", "latency")
+            "hybrid", "latency", "slo")
 
 
 def main(argv=None) -> Dict[str, Any]:
@@ -1286,6 +1489,12 @@ def main(argv=None) -> Dict[str, Any]:
                          "syncs (plain + spec), telemetry code < 5% of "
                          "drain wall, lifecycle trace validates and "
                          "exports well-formed Chrome trace JSON")
+    ap.add_argument("--workload-smoke", action="store_true",
+                    help="deterministic-replay gate: the committed "
+                         "bursty trace replayed twice is token-identical "
+                         "with identical admission/preemption order and "
+                         "equal per-class metrics, and regenerates "
+                         "byte-identically from its embedded spec")
     ap.add_argument("--prompts", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
@@ -1314,7 +1523,7 @@ def main(argv=None) -> Dict[str, Any]:
 
     if args.smoke or args.quant_smoke or args.oversub_smoke \
             or args.spec_smoke or args.chaos_smoke or args.hybrid_smoke \
-            or args.obs_smoke:
+            or args.obs_smoke or args.workload_smoke:
         # CI gates: never write anything (the guard raises on a stray
         # repo-root/tuning-cache artifact instead of letting it land)
         with _guard_no_repo_root_writes():
@@ -1332,6 +1541,8 @@ def main(argv=None) -> Dict[str, Any]:
                 hybrid_smoke()
             if args.obs_smoke:
                 obs_smoke()
+            if args.workload_smoke:
+                workload_smoke()
         return {}
 
     producers = {
@@ -1345,6 +1556,7 @@ def main(argv=None) -> Dict[str, Any]:
         "resilience": resilience_payload,
         "hybrid": hybrid_payload,
         "latency": latency_payload,
+        "slo": slo_payload,
     }
     names = [s for s in SECTIONS if s in (args.section or SECTIONS)]
     computed: Dict[str, Any] = {}
@@ -1487,6 +1699,28 @@ def format_hybrid_rows(doc: Dict[str, Any]) -> List[str]:
             f"{r['pages_per_window_slot']:>10.1f} "
             f"{r['live_page_ratio']:>6.2f}x "
             f"{r['window_prefix_frees']:>6} {r['tok_per_s']:>9.2f}")
+    return lines
+
+
+def format_slo_rows(doc: Dict[str, Any]) -> List[str]:
+    """Render BENCH_autotune.json['slo'] (shared with run.py)."""
+    sl = doc.get("slo")
+    if not sl:
+        return ["(no slo rows; run python -m benchmarks.serve_bench "
+                "--update-bench --section slo)"]
+    header = (f"{'class':<9} {'prio':>4} {'reqs':>5} {'done':>6} "
+              f"{'ttft p50':>9} {'ttft p99':>9} {'itl p50':>9} "
+              f"{'qwait p50':>10} {'vs unload':>10} {'preempts':>9}")
+    lines = [f"config: {json.dumps(sl.get('config', {}), sort_keys=True)}",
+             header, "-" * len(header)]
+    for r in sl.get("results", ()):
+        lines.append(
+            f"{r['class']:<9} {r['priority']:>4} {r['requests']:>5} "
+            f"{r['completion_rate']:>5.0%} "
+            f"{r['p50_ttft_s']:>8.4f}s {r['p99_ttft_s']:>8.4f}s "
+            f"{r['p50_itl_s']:>8.4f}s {r['queue_wait_s']:>9.4f}s "
+            f"{r['ttft_p99_over_unloaded_p50']:>9.2f}x "
+            f"{r['preempts']:>9}")
     return lines
 
 

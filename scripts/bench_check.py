@@ -21,6 +21,15 @@ Required sections and per-row keys:
   resilience "resilience".results (benchmarks/serve_bench.py)
   hybrid    "hybrid".results    (benchmarks/serve_bench.py)
   latency   "latency".results   (benchmarks/serve_bench.py)
+  slo       "slo".results       (benchmarks/serve_bench.py)
+
+Beyond per-section row keys, a cross-section consistency check pins the
+regen contract from both sides: every ``--section <name>`` named in a
+SCHEMA regen command or a section's committed ``generated_by`` string
+must be a valid section name (serve_bench exits non-zero listing the
+valid ones for unknown names; this catches the committed file or this
+schema drifting out of step with that list — tests/test_bench_check.py
+asserts VALID_SECTIONS == serve_bench.SECTIONS).
 
 Wired as the check.sh `bench-check` stage.
 """
@@ -94,7 +103,28 @@ SCHEMA: Dict[str, Any] = {
         "regen": "python -m benchmarks.serve_bench --update-bench "
                  "--section latency",
     },
+    "slo": {
+        "rows": ("slo", "results"),
+        "row_keys": ("class", "priority", "p50_ttft_s", "p99_ttft_s",
+                     "p50_itl_s", "queue_wait_s", "completion_rate",
+                     "ttft_p99_over_unloaded_p50"),
+        "regen": "python -m benchmarks.serve_bench --update-bench "
+                 "--section slo",
+    },
 }
+
+#: serve_bench's --section vocabulary, duplicated here so this gate
+#: stays importable without jax (tests/test_bench_check.py asserts the
+#: two tuples are identical, pinning the contract from both sides).
+VALID_SECTIONS = ("serving", "kv_quant", "oversub", "spec", "resilience",
+                  "hybrid", "latency", "slo")
+
+
+def _section_args(cmd: str) -> List[str]:
+    """Every value passed to --section in a regen/generated_by string."""
+    toks = cmd.split()
+    return [toks[i + 1] for i, t in enumerate(toks[:-1])
+            if t == "--section"]
 
 
 def _dig(doc: Dict[str, Any], path) -> Any:
@@ -133,6 +163,36 @@ def check_doc(doc: Dict[str, Any]) -> List[str]:
                     f"section {section!r} row {i} "
                     f"({row.get('op') or row.get('engine') or row.get('kv_dtype')}): "
                     f"missing keys {missing}")
+    problems += check_section_consistency(doc)
+    return problems
+
+
+def check_section_consistency(doc: Dict[str, Any]) -> List[str]:
+    """Cross-section check: every ``--section`` name quoted in a SCHEMA
+    regen command or a committed section's ``generated_by`` string must
+    be a section serve_bench actually accepts — a drifted name would
+    print a regen command that exits non-zero (the PR 7 unknown-section
+    contract, pinned from the consumer side)."""
+    problems: List[str] = []
+    for section, spec in SCHEMA.items():
+        for name in _section_args(spec["regen"]):
+            if name not in VALID_SECTIONS:
+                problems.append(
+                    f"SCHEMA[{section!r}].regen names --section {name!r}, "
+                    f"not a valid section; valid: "
+                    f"{', '.join(VALID_SECTIONS)}")
+    for key, val in doc.items():
+        if not isinstance(val, dict):
+            continue
+        gen = val.get("generated_by")
+        if not isinstance(gen, str):
+            continue
+        for name in _section_args(gen):
+            if name not in VALID_SECTIONS:
+                problems.append(
+                    f"section {key!r}: generated_by names --section "
+                    f"{name!r}, not a valid section; valid: "
+                    f"{', '.join(VALID_SECTIONS)}")
     return problems
 
 

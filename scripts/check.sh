@@ -21,7 +21,7 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-STAGES=(pytest parity tune-smoke serve-smoke quant-smoke oversub-smoke spec-smoke chaos-smoke hybrid-smoke obs-smoke bench-check)
+STAGES=(pytest parity tune-smoke serve-smoke quant-smoke oversub-smoke spec-smoke chaos-smoke hybrid-smoke obs-smoke workload-smoke bench-check)
 
 # -- stage bodies (each runs in its own `set -e` subshell) -------------------
 
@@ -111,6 +111,15 @@ stage_obs_smoke() {
     python -m benchmarks.serve_bench --obs-smoke
 }
 
+stage_workload_smoke() {
+    # deterministic trace replay: the committed bursty trace replayed
+    # twice through the priority-policy engine over the oversubscribed
+    # SLO pool is token-identical, with identical admission/preemption
+    # order, equal per-class metrics, and a trace that regenerates
+    # byte-identically from its embedded spec (DESIGN.md §17)
+    python -m benchmarks.serve_bench --workload-smoke
+}
+
 stage_bench_check() {
     # the committed perf trajectory must carry every required section
     python scripts/bench_check.py
@@ -162,12 +171,21 @@ done
 
 echo
 echo "== summary =="
-printf '%-15s %-6s %8s\n' stage status wall_s
-for r in "${RESULTS[@]}"; do
-    IFS='|' read -r name rc dt <<< "$r"
-    if [[ $rc -eq 0 ]]; then st=ok; else st="FAIL"; fi
-    printf '%-15s %-6s %8s\n' "$name" "$st" "$dt"
-done
+SUMMARY="$(
+    printf '%-15s %-6s %8s\n' stage status wall_s
+    for r in "${RESULTS[@]}"; do
+        IFS='|' read -r name rc dt <<< "$r"
+        if [[ $rc -eq 0 ]]; then st=ok; else st="FAIL"; fi
+        printf '%-15s %-6s %8s\n' "$name" "$st" "$dt"
+    done
+)"
+echo "$SUMMARY"
+if [[ -n "${CHECK_ARTIFACTS_DIR:-}" ]]; then
+    # per-stage wall-time table as a build artifact, so stage-time
+    # regressions are visible across CI runs
+    mkdir -p "$CHECK_ARTIFACTS_DIR"
+    echo "$SUMMARY" > "$CHECK_ARTIFACTS_DIR/stage-times.txt"
+fi
 if [[ $FAILED -ne 0 ]]; then
     echo "tier-1 FAILED"
     exit 1

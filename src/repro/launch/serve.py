@@ -14,6 +14,17 @@ Telemetry (DESIGN.md §16): the summary JSON always includes per-request
 TTFT / inter-token-latency / queue-wait and run-level p50/p99; add
 ``--trace-out trace.json`` for a Perfetto-viewable lifecycle trace and
 ``--metrics-out metrics.json`` for the raw registry snapshots.
+
+Workload traces (DESIGN.md §17): replay a frozen JSONL trace on its
+stepped arrival clock instead of pre-filling synthetic prompts:
+
+  python -m repro.launch.serve --arch granite-8b --smoke --paged \
+      --preempt-policy priority \
+      --trace-file benchmarks/traces/bursty_smoke.jsonl
+
+When requests carry priority/traffic classes (a trace, or synthetic
+prompts tagged via ``--priority-class``), the summary JSON adds
+``latency_by_class``: per-class p50/p99 for every latency metric.
 """
 from __future__ import annotations
 
@@ -86,6 +97,20 @@ def main():
                     help="per-step wall-clock deadline; a step past it "
                          "is discarded and its slots requeued (armed "
                          "after the first, compiling, step)")
+    ap.add_argument("--trace-file", default=None, metavar="PATH",
+                    help="replay a frozen workload trace (JSONL from "
+                         "repro.serve.workload) instead of synthetic "
+                         "prompts: each request is submitted when the "
+                         "engine's step counter reaches its "
+                         "arrival_step, and carries its own priority "
+                         "class and per-request max_new decode budget "
+                         "(capped by --max-new)")
+    ap.add_argument("--priority-class", type=int, default=0,
+                    help="priority class stamped on every synthetic "
+                         "request (higher = more latency-sensitive; "
+                         "pairs with --preempt-policy priority; "
+                         "incompatible with --trace-file, which "
+                         "carries per-request classes)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the per-request lifecycle trace as "
                          "Chrome trace-event JSON (open in Perfetto: "
@@ -102,6 +127,9 @@ def main():
         ap.error("--spec-mode requires --paged")
     if args.fault_rate and not args.paged:
         ap.error("--fault-rate requires --paged")
+    if args.trace_file and args.priority_class:
+        ap.error("--priority-class only applies to synthetic prompts; "
+                 "a trace carries per-request classes")
 
     from repro.configs import get_config
     from repro.configs.smoke import smoke_config
@@ -136,23 +164,41 @@ def main():
     engine = Engine(model, params, sc, fault_plan=plan,
                     telemetry=telemetry)
 
-    import numpy as np
-    rng = np.random.default_rng(0)
-    reqs = [Request(rid=i, tokens=rng.integers(
-        0, cfg.vocab_size, size=args.prompt_len).tolist())
-        for i in range(args.prompts)]
+    if args.trace_file:
+        from repro.serve.workload import load_trace
+        trace = load_trace(args.trace_file)
+        reqs = trace.requests()
+    else:
+        trace = None
+        import numpy as np
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i, tokens=rng.integers(
+            0, cfg.vocab_size, size=args.prompt_len).tolist(),
+            priority_class=args.priority_class)
+            for i in range(args.prompts)]
     t0 = time.perf_counter()
-    for r in reqs:
-        engine.submit(r)
+    submitted = 0
+    if trace is None:
+        for r in reqs:
+            engine.submit(r)
+        submitted = len(reqs)
     first = True
     while True:
+        # trace replay submits on the engine's own step clock (the
+        # workload.replay contract), so queue-wait/TTFT reflect real
+        # arrival bursts instead of a pre-filled queue
+        while trace is not None and submitted < len(reqs) and \
+                trace.entries[submitted].arrival_step <= engine.step_count:
+            engine.submit(reqs[submitted])
+            submitted += 1
         busy = engine.step()
         if first:
             # arm the watchdog only after the first (compiling) step so
             # jit compile time cannot trip it spuriously
             engine.watchdog_s = args.watchdog_s
             first = False
-        if not busy and not engine.queue and not engine.requeue:
+        if submitted >= len(reqs) and not busy and not engine.queue \
+                and not engine.requeue:
             break
     dt = time.perf_counter() - t0
     new_tokens = sum(len(r.out) for r in reqs)
@@ -165,6 +211,8 @@ def main():
     # aggregate tok/s alone hid queueing and preemption stalls)
     per_request = [
         {"rid": row["rid"], "status": row["status"],
+         "priority_class": row["priority_class"],
+         "traffic_class": row["traffic_class"],
          "tokens": row["tokens"], "ttft_s": _r(row["ttft_s"]),
          "itl_p50_s": _r(row["itl_p50_s"]),
          "queue_wait_s": _r(row["queue_wait_s"]),
@@ -175,6 +223,26 @@ def main():
     latency = {m: ({"p50": _r(v["p50"]), "p99": _r(v["p99"]),
                     "count": v["count"]} if v else None)
                for m, v in lat.items() if m != "requests"}
+    # run-level percentiles hide per-class SLO behavior: a batch-heavy
+    # tail swamps the chat p99.  When requests carry classes (a trace,
+    # or --priority-class != 0), group the percentiles by class too.
+    by_class = telemetry.summary_by_class()
+    latency_by_class = {
+        label: {
+            "priority_class": blk["priority_class"],
+            "requests": blk["requests"],
+            "completed": blk["completed"],
+            "completion_rate": _r(blk["completion_rate"]),
+            "preempts": blk["preempts"],
+            **{m: ({"p50": _r(v["p50"]), "p99": _r(v["p99"]),
+                    "count": v["count"]} if v else None)
+               for m, v in blk.items()
+               if m not in ("priority_class", "requests", "completed",
+                            "completion_rate", "preempts")},
+        }
+        for label, blk in by_class.items()}
+    classes_present = (len(latency_by_class) > 1
+                       or any(label != "0" for label in latency_by_class))
 
     if args.trace_out:
         telemetry.trace.export(args.trace_out)
@@ -205,6 +273,8 @@ def main():
         "last_watchdog_trip": st["last_watchdog_trip"],
         "last_recovery": st["last_recovery"],
         "latency": latency,
+        **({"latency_by_class": latency_by_class}
+           if classes_present else {}),
         "per_request": per_request,
         **({"quarantined_pages": st["quarantined"],
             "pool_groups": st["pool_groups"]} if args.paged else {}),

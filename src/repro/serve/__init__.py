@@ -3,4 +3,7 @@ from repro.serve.engine import (Engine, ServeConfig, Request,
                                 run_recording_finish_order)  # noqa: F401
 from repro.serve.faults import FAULT_KINDS, FaultPlan  # noqa: F401
 from repro.serve.telemetry import ServeTelemetry  # noqa: F401
-from repro.serve import faults, paging, telemetry  # noqa: F401
+from repro.serve.workload import (ArrivalProcess, TrafficClass,  # noqa: F401
+                                  WorkloadSpec, WorkloadTrace,
+                                  generate_trace, load_trace, replay)
+from repro.serve import faults, paging, telemetry, workload  # noqa: F401

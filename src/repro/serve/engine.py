@@ -44,8 +44,13 @@ the pool smaller than the working set, a slot crossing a page boundary
 mid-decode can find the pool dry.  ``ServeConfig.preempt_policy``
 decides what happens: ``"lru"`` (default) preempts the
 least-recently-admitted slot, ``"shortest"`` the one with the fewest
-generated tokens, and ``"fail"`` keeps the pre-preemption behavior of
-raising the allocator's actionable error.  A preempted slot is
+generated tokens, ``"priority"`` the lowest ``Request.priority_class``
+(ties by admission stamp — the SLO-aware policy, which additionally
+lets a strictly-higher-class waiting request evict at admission time),
+and ``"fail"`` keeps the pre-preemption behavior of raising the
+allocator's actionable error.  Admission itself is latency-class-aware:
+within the requeue deque and the fresh queue, higher ``priority_class``
+admits first, FIFO within a class (DESIGN.md §17).  A preempted slot is
 checkpointed as prompt + tokens generated so far onto a requeue deque,
 its pages are bulk-reclaimed through the strict allocator, and it is
 re-admitted later through the ordinary batched-prefill path with the
@@ -121,6 +126,10 @@ class ServeConfig:
     # pool runs dry while a decoding slot needs its next page.
     #   "lru"      preempt the least-recently-admitted slot (default)
     #   "shortest" preempt the slot with the fewest generated tokens
+    #   "priority" preempt the lowest Request.priority_class first
+    #              (ties by admission stamp) — the SLO-aware policy;
+    #              it also lets a waiting higher-class request evict a
+    #              strictly-lower-class slot at admission time
     #   "fail"     raise the allocator's actionable error (pre-PR-5)
     preempt_policy: str = "lru"
     # Self-speculative decoding (paged + greedy only): "ngram" drafts
@@ -146,7 +155,7 @@ class ServeConfig:
 
 
 #: Valid ServeConfig.preempt_policy values (launch/serve.py choices).
-PREEMPT_POLICIES = ("lru", "shortest", "fail")
+PREEMPT_POLICIES = ("lru", "shortest", "priority", "fail")
 
 #: Valid ServeConfig.spec_mode values (launch/serve.py choices).
 SPEC_MODES = ("off", "ngram")
@@ -160,6 +169,17 @@ class Request:
     done: bool = False
     truncated: bool = False
     preempts: int = 0       # times this request was preempted/requeued
+    # SLO class (DESIGN.md §17): higher = more latency-sensitive.  Read
+    # by priority-aware admission ordering, the "priority" victim
+    # policy, and per-class telemetry percentiles.  traffic_class is
+    # the human-readable workload label ("chat"/"longdoc"/"batch") the
+    # trace generator stamps; reporting groups by it when present.
+    priority_class: int = 0
+    traffic_class: Optional[str] = None
+    # per-request decode budget: caps this request's generated tokens
+    # at min(max_new, ServeConfig.max_new_tokens).  None = the engine
+    # default.  Trace entries carry their sampled output lengths here.
+    max_new: Optional[int] = None
     # resilience state (engine-managed): fault-retry count, earliest
     # engine step for re-admission (exponential backoff stamp), and the
     # explicit terminal failure flag for an exhausted retry budget
@@ -305,6 +325,12 @@ class Engine:
         self.cur_tok = jnp.zeros((slots,), jnp.int32)
         self.n_out = jnp.zeros((slots,), jnp.int32)
         self.active_mask = jnp.zeros((slots,), jnp.bool_)
+        # per-slot decode budget (device): admission writes each
+        # request's effective max_new here, so the jitted finish check
+        # is elementwise — a trace request with a 3-token budget ends
+        # at 3 even when the engine default is 16
+        self.max_new_dev = jnp.full((slots,), sc.max_new_tokens,
+                                    jnp.int32)
         # per-slot committed token history (device): position p holds
         # the token whose KV sits in cache row p.  Column cache_len is a
         # dump row absorbing clipped writes at the cache edge.  Fed by
@@ -539,7 +565,7 @@ class Engine:
             # bit-identical to the plain decode step's token.
             t_idx = jnp.arange(k1, dtype=jnp.int32)[None, :]
             done_t = (active[:, None]
-                      & ((n_out[:, None] + t_idx + 1 >= max_new)
+                      & ((n_out[:, None] + t_idx + 1 >= max_new[:, None])
                          | (y == eos_id)
                          | (lengths[:, None] + t_idx + 2 > cache_len)))
             cont = ((window[:, 1:] == y[:, :-1]) & ~done_t[:, :-1]
@@ -565,8 +591,9 @@ class Engine:
         window = self.window if self.windowed else None
 
         def admit_fn(caches, lengths, cur_tok, active, n_out, tok_hist,
-                     cache1, first_tok, slot_idx, plens, admit_active,
-                     n_out_vals, page_rows, hist_rows, page_rows_w):
+                     max_new, cache1, first_tok, slot_idx, plens,
+                     admit_active, n_out_vals, max_new_vals, page_rows,
+                     hist_rows, page_rows_w):
             caches = paging.scatter_prefill(caches, cache1, slot_idx,
                                             page_rows,
                                             page_rows_w=page_rows_w,
@@ -578,8 +605,12 @@ class Engine:
             # re-admitted preempted requests resume their real count so
             # the jitted max_new check stays in lockstep with req.out
             n_out = n_out.at[slot_idx].set(n_out_vals)
+            # per-slot decode budget: the elementwise finish check reads
+            # this instead of the scalar engine default
+            max_new = max_new.at[slot_idx].set(max_new_vals)
             tok_hist = tok_hist.at[slot_idx].set(hist_rows)
-            return caches, lengths, cur_tok, active, n_out, tok_hist
+            return (caches, lengths, cur_tok, active, n_out, tok_hist,
+                    max_new)
 
         return admit_fn
 
@@ -633,34 +664,68 @@ class Engine:
                     f"to clip instead)")
         if not req.tokens:
             raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new is not None and req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1, "
+                             f"got {req.max_new}")
         self.queue.append(req)
         if self.telemetry is not None:
             self.telemetry.on_submit(req, self.step_count)
 
+    def _req_max_new(self, req: Request) -> int:
+        """Effective decode budget: the request's own cap, bounded by
+        the engine-wide ceiling (slot state is sized for the latter)."""
+        if req.max_new is None:
+            return self.sc.max_new_tokens
+        return min(req.max_new, self.sc.max_new_tokens)
+
     def _free_slots(self) -> List[int]:
         return [s for s in range(self.sc.slots) if self.active[s] is None]
 
+    def _take_waiting(self, n: int) -> List[Request]:
+        """Remove up to ``n`` backoff-eligible requests across the
+        requeue deque and the fresh queue, in latency-class-aware
+        order: highest priority_class first; *within* a class,
+        preempted checkpoints ahead of fresh traffic (the PR 5
+        starvation guard, now scoped per class so a high-class arrival
+        is never stuck behind a lower class's checkpoint), FIFO within
+        each pool.  Ineligible (backing-off) / unchosen entries keep
+        their relative order.  With uniform priorities this reduces to
+        exactly the old requeue-then-queue FIFO, so non-SLO workloads
+        see the PR 5 admission order unchanged."""
+        if n <= 0:
+            return []
+        cand = [(-r.priority_class, 0, i) for i, r in
+                enumerate(self.requeue)
+                if r.not_before <= self.step_count]
+        cand += [(-r.priority_class, 1, i) for i, r in
+                 enumerate(self.queue)
+                 if r.not_before <= self.step_count]
+        cand.sort()
+        take = cand[:n]
+        picked = [(self.requeue if pool == 0 else self.queue)[i]
+                  for _, pool, i in take]
+        for _, pool, i in sorted(take, key=lambda t: t[2], reverse=True):
+            del (self.requeue if pool == 0 else self.queue)[i]
+        return picked
+
     def _admit(self):
         """Admit waiting requests into free slots, one batched prefill +
-        one batched cache scatter per prompt-length group.  Preempted
-        requests on the requeue deque are taken ahead of never-admitted
-        queue entries (the starvation guard: a checkpoint is never stuck
-        behind fresh traffic)."""
+        one batched cache scatter per prompt-length group.  Admission
+        is latency-class-aware (see _take_waiting): higher
+        priority_class first; within a class, preempted checkpoints on
+        the requeue deque ahead of never-admitted queue entries (the
+        starvation guard: a checkpoint is never stuck behind fresh
+        traffic of its own class), FIFO within each pool; requests
+        backing off after a fault requeue are skipped with order
+        preserved, so a flapping request cannot hot-loop re-prefill.
+        Under the "priority" policy a waiting request whose class
+        strictly exceeds an active slot's also evicts at admission
+        time (see _priority_admission_preempt)."""
+        if self.paged and self.sc.preempt_policy == "priority":
+            self._priority_admission_preempt()
         while self._free_slots() and (self.requeue or self.queue):
             free = len(self._free_slots())
-            batch: List[Request] = []
-            held: List[Request] = []
-            while self.requeue and len(batch) < free:
-                r = self.requeue.popleft()
-                # exponential-backoff stamp from a fault requeue: not
-                # eligible yet — hold it aside (order preserved) so a
-                # flapping request cannot hot-loop through re-prefill
-                (held if r.not_before > self.step_count
-                 else batch).append(r)
-            for r in reversed(held):
-                self.requeue.appendleft(r)
-            while self.queue and len(batch) < free:
-                batch.append(self.queue.pop(0))
+            batch: List[Request] = self._take_waiting(free)
             if not batch:
                 # everything waiting is backing off; idle steps keep
                 # ticking step_count, so the stamps always expire
@@ -770,19 +835,21 @@ class Engine:
             # plen + 1 > cache_len: a requeued checkpoint whose cache is
             # full after re-prefill — its re-prefill sample IS the final
             # token the un-preempted run would have emitted
-            if (hit_eos or len(req.out) >= self.sc.max_new_tokens
+            if (hit_eos or len(req.out) >= self._req_max_new(req)
                     or plen + 1 > self.sc.cache_len):
                 admit_active[i] = False
         n_out_vals = np.asarray([len(r.out) for r in reqs], np.int32)
+        max_new_vals = np.asarray([self._req_max_new(r) for r in reqs],
+                                  np.int32)
 
         (self.caches, self.lengths, self.cur_tok, self.active_mask,
-         self.n_out, self.tok_hist) = self._admit_fn(
+         self.n_out, self.tok_hist, self.max_new_dev) = self._admit_fn(
             self.caches, self.lengths, self.cur_tok, self.active_mask,
-            self.n_out, self.tok_hist, cache1, jnp.asarray(first_h),
-            jnp.asarray(slots, jnp.int32),
+            self.n_out, self.tok_hist, self.max_new_dev, cache1,
+            jnp.asarray(first_h), jnp.asarray(slots, jnp.int32),
             jnp.full((k,), plen, jnp.int32), jnp.asarray(admit_active),
-            jnp.asarray(n_out_vals), page_rows, jnp.asarray(hist_rows),
-            page_rows_w)
+            jnp.asarray(n_out_vals), jnp.asarray(max_new_vals),
+            page_rows, jnp.asarray(hist_rows), page_rows_w)
 
         tel = self.telemetry
         for i, (req, slot) in enumerate(zip(reqs, slots)):
@@ -848,10 +915,43 @@ class Engine:
             # least-recent admit; a just-re-admitted checkpoint carries
             # the newest stamp, so lru never thrashes it
             return min(cands, key=lambda s: self._admit_seq[s])
+        if self.sc.preempt_policy == "priority":
+            # SLO-aware: lowest priority_class absorbs the preemption;
+            # within a class the oldest admission stamp goes first (the
+            # lru rule), so equal-priority traffic degrades exactly like
+            # "lru" and a re-admitted checkpoint is never thrashed
+            return min(cands,
+                       key=lambda s: (self.active[s].priority_class,
+                                      self._admit_seq[s]))
         # "shortest": fewest generated tokens = least work thrown away;
         # admission stamp breaks ties deterministically (oldest first)
         return min(cands, key=lambda s: (len(self.active[s].out),
                                          self._admit_seq[s]))
+
+    def _priority_admission_preempt(self) -> None:
+        """Admission-time eviction for the "priority" policy: while no
+        slot is free and the best backoff-eligible waiting request's
+        class *strictly* exceeds the lowest active slot's, checkpoint
+        that slot so the high-class request admits this step instead of
+        queueing behind a full batch of low-class decodes.  Strict
+        inequality means equal-priority traffic never churns, and the
+        evicted checkpoint re-enters via the requeue deque ahead of
+        fresh traffic (the PR 5 starvation guard), so every class keeps
+        draining — the liveness argument in DESIGN.md §17."""
+        while not self._free_slots():
+            waiting = [r.priority_class
+                       for pool in (self.requeue, self.queue)
+                       for r in pool if r.not_before <= self.step_count]
+            if not waiting:
+                return
+            slots = [int(s) for s in np.nonzero(self._active_h)[0]]
+            if not slots:
+                return
+            victim = min(slots, key=lambda s: (
+                self.active[s].priority_class, self._admit_seq[s]))
+            if max(waiting) <= self.active[victim].priority_class:
+                return
+            self._preempt(victim)
 
     def _preempt(self, slot: int) -> None:
         """Checkpoint ``slot`` onto the requeue deque and reclaim its
@@ -1156,12 +1256,11 @@ class Engine:
             bt = None
         self._key, sub = jax.random.split(self._key)
         eos = jnp.int32(self.sc.eos_id if self.sc.eos_id is not None else -1)
-        max_new = jnp.int32(self.sc.max_new_tokens)
         t0 = time.perf_counter()
         (next_tok, new_lengths, new_active, new_n_out, done, bad, emitted,
          new_caches) = self._step_fn(
             self.params, self.caches, self.cur_tok, self.lengths,
-            self.active_mask, self.n_out, sub, eos, max_new, bt,
+            self.active_mask, self.n_out, sub, eos, self.max_new_dev, bt,
             self._nan_mask(nan_slots))
         if stall:
             time.sleep(stall)                       # injected device stall
@@ -1219,13 +1318,13 @@ class Engine:
             self._spec_ok_dev = jnp.asarray(self._spec_ok_h)
             self._spec_ok_dirty = False
         eos = jnp.int32(self.sc.eos_id if self.sc.eos_id is not None else -1)
-        max_new = jnp.int32(self.sc.max_new_tokens)
         t0 = time.perf_counter()
         (y, n_emit, new_lengths, new_active, new_n_out, done, bad,
          new_caches, new_hist, new_cur) = self._spec_fn(
             self.params, self.caches, self.tok_hist, self.cur_tok,
-            self.lengths, self.active_mask, self.n_out, eos, max_new,
-            self._bt_dev, self._nan_mask(nan_slots), self._spec_ok_dev)
+            self.lengths, self.active_mask, self.n_out, eos,
+            self.max_new_dev, self._bt_dev, self._nan_mask(nan_slots),
+            self._spec_ok_dev)
         if stall:
             time.sleep(stall)                       # injected device stall
         yh, ne, dn, bh = _device_get((y, n_emit, done, bad))  # THE one sync

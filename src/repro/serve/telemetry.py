@@ -26,6 +26,13 @@ Per-request derived latencies (the numbers an operator pages on):
 Each is recorded exactly (host floats, per request) *and* observed into
 the registry's fixed-bucket histograms; exact samples feed the summary
 percentiles (numpy reference), histograms feed merge/compare paths.
+
+SLO classes (DESIGN.md §17): every record carries the request's
+``priority_class`` and ``traffic_class``; :meth:`samples` filters by
+class label and :meth:`summary_by_class` reports the same percentile
+block *per class* — the numbers the SLO bench and the priority-policy
+acceptance gate read (high-class TTFT holds under load, low-class
+absorbs the degradation).
 """
 from __future__ import annotations
 
@@ -83,6 +90,7 @@ class ServeTelemetry:
         rec = self.requests.get(rid)
         if rec is None:
             rec = {"rid": rid, "status": "queued",
+                   "priority_class": 0, "traffic_class": None,
                    "submitted_ts": None, "admitted_ts": None,
                    "first_token_ts": None, "last_token_ts": None,
                    "finished_ts": None, "tokens": 0,
@@ -93,6 +101,13 @@ class ServeTelemetry:
             self.requests[rid] = rec
         return rec
 
+    @staticmethod
+    def _class_label(rec: Dict[str, Any]) -> str:
+        """Reporting label: the workload name when the trace stamped
+        one, else the numeric priority class."""
+        tc = rec.get("traffic_class")
+        return tc if tc else str(rec.get("priority_class", 0))
+
     def _hist(self, name: str):
         # latency histograms: 10µs .. 1000s at ~25% relative resolution
         return self.registry.histogram(f"serve.{name}", lo=1e-5, hi=1e3)
@@ -102,7 +117,10 @@ class ServeTelemetry:
     def on_submit(self, req, step: int) -> None:
         rec = self._rec(req.rid)
         rec["submitted_ts"] = self.clock()
-        self.trace.record("submitted", rid=req.rid, step=step)
+        rec["priority_class"] = getattr(req, "priority_class", 0)
+        rec["traffic_class"] = getattr(req, "traffic_class", None)
+        self.trace.record("submitted", rid=req.rid, step=step,
+                          priority=rec["priority_class"])
         self.registry.counter("serve.submitted").inc()
 
     def on_admit(self, req, slot: int, step: int) -> None:
@@ -240,6 +258,8 @@ class ServeTelemetry:
             itl = rec["itl_s"]
             rows.append({
                 "rid": rid, "status": rec["status"],
+                "priority_class": rec["priority_class"],
+                "traffic_class": rec["traffic_class"],
                 "tokens": rec["tokens"],
                 "ttft_s": rec["ttft_s"],
                 "queue_wait_s": rec["queue_wait_s"],
@@ -253,13 +273,17 @@ class ServeTelemetry:
             })
         return rows
 
-    def samples(self, metric: str) -> List[float]:
-        """All per-request samples for one of LATENCY_METRICS."""
+    def samples(self, metric: str,
+                cls: Optional[str] = None) -> List[float]:
+        """All per-request samples for one of LATENCY_METRICS;
+        ``cls`` restricts to one class label (see _class_label)."""
         if metric not in LATENCY_METRICS:
             raise ValueError(f"unknown latency metric {metric!r}; "
                              f"valid: {LATENCY_METRICS}")
         out: List[float] = []
         for rec in self.requests.values():
+            if cls is not None and self._class_label(rec) != cls:
+                continue
             v = rec[metric]
             if metric == "itl_s":
                 out.extend(v)
@@ -278,4 +302,39 @@ class ServeTelemetry:
         out: Dict[str, Any] = {"requests": len(self.requests)}
         for m in LATENCY_METRICS:
             out[m] = _percentiles(self.samples(m), qs)
+        return out
+
+    def class_labels(self) -> List[str]:
+        """Distinct class labels seen, highest priority first (the
+        order the SLO report prints)."""
+        by_label: Dict[str, int] = {}
+        for rec in self.requests.values():
+            lbl = self._class_label(rec)
+            pc = int(rec.get("priority_class", 0))
+            by_label[lbl] = max(by_label.get(lbl, pc), pc)
+        return sorted(by_label, key=lambda l: (-by_label[l], l))
+
+    def summary_by_class(self, qs=(50, 99)) -> Dict[str, Any]:
+        """The :meth:`summary` percentile block computed per class
+        label — the per-priority-class SLO report (ISSUE 10): TTFT /
+        ITL / queue-wait percentiles for each traffic class, plus its
+        request count, completion rate, priority, and preemption
+        total."""
+        out: Dict[str, Any] = {}
+        for lbl in self.class_labels():
+            recs = [r for r in self.requests.values()
+                    if self._class_label(r) == lbl]
+            blk: Dict[str, Any] = {
+                "requests": len(recs),
+                "priority_class": max(
+                    int(r.get("priority_class", 0)) for r in recs),
+                "completed": sum(1 for r in recs
+                                 if r["status"] == "finished"),
+                "preempts": sum(r["preempts"] for r in recs),
+            }
+            blk["completion_rate"] = (blk["completed"] / blk["requests"]
+                                      if blk["requests"] else None)
+            for m in LATENCY_METRICS:
+                blk[m] = _percentiles(self.samples(m, cls=lbl), qs)
+            out[lbl] = blk
         return out

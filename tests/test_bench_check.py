@@ -7,7 +7,9 @@ import os
 
 import pytest
 
-from scripts.bench_check import SCHEMA, check_doc, main as bench_check_main
+from scripts.bench_check import (SCHEMA, VALID_SECTIONS, check_doc,
+                                 check_section_consistency,
+                                 main as bench_check_main)
 
 
 def _valid_doc():
@@ -48,6 +50,13 @@ def _valid_doc():
                                  "mode": "plain", "ttft_p50_s": 0.12,
                                  "ttft_p99_s": 0.31, "itl_p50_s": 0.02,
                                  "itl_p99_s": 0.05, "tok_per_s": 900.0}]},
+        "slo": {"generated_by": "python -m benchmarks.serve_bench "
+                                "--update-bench --section slo",
+                "results": [{"class": "chat", "priority": 2,
+                             "p50_ttft_s": 0.1, "p99_ttft_s": 0.18,
+                             "p50_itl_s": 0.02, "queue_wait_s": 0.01,
+                             "completion_rate": 1.0,
+                             "ttft_p99_over_unloaded_p50": 1.6}]},
     }
 
 
@@ -134,6 +143,40 @@ def test_serve_bench_unknown_section_exits_listing_valid():
     assert "oversubb" in msg
     for s in SECTIONS:
         assert s in msg, f"error does not list valid section {s!r}: {msg}"
+
+
+# -------------------------------------------- cross-section consistency ----
+
+def test_valid_sections_pinned_to_serve_bench():
+    """bench_check stays importable without jax, so it duplicates the
+    --section vocabulary; this pins the copy to the real one from both
+    sides of the regen contract."""
+    from benchmarks.serve_bench import SECTIONS
+    assert VALID_SECTIONS == SECTIONS
+
+
+def test_schema_regen_sections_are_valid():
+    """Every --section named in a SCHEMA regen command must be one
+    serve_bench accepts (a drifted name would print a regen command
+    that exits non-zero)."""
+    assert check_section_consistency(_valid_doc()) == []
+
+
+def test_drifted_generated_by_section_rejected():
+    doc = _valid_doc()
+    doc["slo"]["generated_by"] = ("python -m benchmarks.serve_bench "
+                                  "--update-bench --section slow")
+    problems = check_doc(doc)
+    assert any("'slow'" in p and "generated_by" in p for p in problems)
+
+
+def test_non_section_generated_by_tolerated():
+    """generated_by strings without --section (the whole-file regens)
+    and non-dict top-level values must not trip the check."""
+    doc = _valid_doc()
+    doc["serving"]["generated_by"] = \
+        "python -m benchmarks.serve_bench --update-bench"
+    assert check_section_consistency(doc) == []
 
 
 # ------------------------------------------------- smoke no-write guard ----

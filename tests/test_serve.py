@@ -298,6 +298,78 @@ def test_victim_selection_per_policy():
     assert engine._select_victim(0) is None
 
 
+def test_priority_victim_selection():
+    """The "priority" policy evicts the lowest priority_class first,
+    oldest admit stamp breaking ties within a class; the needy slot is
+    never a victim (ISSUE 10's SLO-aware victim ordering)."""
+    engine, *_ = _engine(slots=3, cache_len=32, max_new=4, paged=True,
+                         page_size=8, preempt_policy="priority")
+    for s, (seq, pc) in enumerate([(5, 2), (2, 0), (9, 0)]):
+        engine.active[s] = Request(rid=s, tokens=[1], priority_class=pc)
+        engine._active_h[s] = True
+        engine._admit_seq[s] = seq
+    assert engine._select_victim(0) == 1   # lowest class, oldest stamp
+    assert engine._select_victim(1) == 2   # never the needy slot
+    engine.active[2].priority_class = 1
+    assert engine._select_victim(0) == 1   # class outranks admit stamp
+    engine._active_h[1] = False
+    assert engine._select_victim(0) == 2
+
+
+def test_priority_admission_ordering():
+    """_take_waiting admits by class first (requeued checkpoints still
+    beat fresh arrivals *within* a class — the per-class starvation
+    guard), and reduces to exact legacy FIFO when priorities are
+    uniform."""
+    engine, *_ = _engine(slots=2, cache_len=32, max_new=4, paged=True,
+                         page_size=8, preempt_policy="priority")
+    engine.queue.extend([
+        Request(rid=0, tokens=[1], priority_class=0),
+        Request(rid=1, tokens=[1], priority_class=2),
+        Request(rid=2, tokens=[1], priority_class=1),
+    ])
+    engine.requeue.append(Request(rid=3, tokens=[1], priority_class=1))
+    got = [r.rid for r in engine._take_waiting(4)]
+    # class 2 first, then class 1 with the requeued checkpoint (rid 3)
+    # ahead of the fresh arrival (rid 2), then class 0
+    assert got == [1, 3, 2, 0]
+    assert not engine.queue and not engine.requeue
+
+    # uniform priorities: requeue pool strictly first, then queue FIFO
+    engine.requeue.extend([Request(rid=10, tokens=[1]),
+                           Request(rid=11, tokens=[1])])
+    engine.queue.extend([Request(rid=12, tokens=[1]),
+                         Request(rid=13, tokens=[1])])
+    assert [r.rid for r in engine._take_waiting(3)] == [10, 11, 12]
+    assert [r.rid for r in engine._take_waiting(3)] == [13]
+
+    # a retry backoff (not_before in the future) is skipped either way
+    held = Request(rid=20, tokens=[1], priority_class=5)
+    held.not_before = engine.step_count + 10
+    engine.queue.append(held)
+    engine.queue.append(Request(rid=21, tokens=[1]))
+    assert [r.rid for r in engine._take_waiting(2)] == [21]
+    assert [r.rid for r in engine.queue] == [20]
+
+
+def test_per_request_max_new_budget():
+    """Request.max_new caps that request's decode independently of the
+    batch (the jitted finish check reads the per-slot vector), and is
+    itself capped by ServeConfig.max_new_tokens."""
+    engine, *_ = _engine(slots=2, cache_len=32, max_new=6, paged=True,
+                         page_size=8)
+    reqs = [Request(rid=0, tokens=[3, 1, 4], max_new=2),
+            Request(rid=1, tokens=[3, 1, 4]),            # engine default
+            Request(rid=2, tokens=[3, 1, 4], max_new=50)]  # capped
+    engine.run_to_completion(reqs)
+    assert all(r.done for r in reqs)
+    assert [len(r.out) for r in reqs] == [2, 6, 6]
+    # budgets are per-request, not per-slot residue: the short request's
+    # slot is reused at full budget
+    with pytest.raises(ValueError, match="max_new"):
+        engine.submit(Request(rid=9, tokens=[1], max_new=0))
+
+
 def test_preempted_requests_resume_token_identical():
     """The acceptance gate at test scale: a 0.5x page pool must yield
     greedy outputs token-identical to the unconstrained run under both

@@ -1,0 +1,173 @@
+"""Workload engine (repro/serve/workload.py): arrival-process and
+length-distribution shape sanity, trace freeze/thaw round-trip, and
+generation determinism.  The engine-coupled half of the contract (the
+committed trace replaying token-identically with identical scheduling
+decisions) lives in the workload-smoke gate
+(benchmarks/serve_bench.py --workload-smoke)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.serve.workload import (ARRIVAL_KINDS, DEFAULT_CLASSES,
+                                  TRACE_SCHEMA_VERSION, ArrivalProcess,
+                                  TrafficClass, WorkloadSpec,
+                                  generate_trace, load_trace)
+
+
+# ------------------------------------------------- distribution shape ----
+
+@pytest.mark.parametrize("kind", ARRIVAL_KINDS)
+def test_arrival_process_hits_mean_rate(kind):
+    """Seeded draws hit the configured mean rate within tolerance for
+    both kinds (gamma's burstiness reshapes variance, not the mean)."""
+    proc = ArrivalProcess(kind=kind, rate=0.5, burstiness=4.0)
+    rng = np.random.default_rng(7)
+    gaps = proc.interarrivals(rng, 20_000)
+    assert (gaps >= 0).all()
+    # mean inter-arrival = 1/rate = 2.0 steps
+    assert np.mean(gaps) == pytest.approx(2.0, rel=0.1)
+
+
+def test_gamma_is_burstier_than_poisson():
+    """Same mean, heavier clumping: the gamma process's squared
+    coefficient of variation ~ burstiness, the poisson baseline's ~ 1."""
+    rng_p = np.random.default_rng(3)
+    rng_g = np.random.default_rng(3)
+    p = ArrivalProcess("poisson", rate=0.5).interarrivals(rng_p, 20_000)
+    g = ArrivalProcess("gamma", rate=0.5,
+                       burstiness=4.0).interarrivals(rng_g, 20_000)
+    scv = lambda x: np.var(x) / np.mean(x) ** 2  # noqa: E731
+    assert scv(p) == pytest.approx(1.0, rel=0.15)
+    assert scv(g) == pytest.approx(4.0, rel=0.25)
+
+
+def test_arrival_process_validation():
+    with pytest.raises(ValueError, match="kind"):
+        ArrivalProcess(kind="uniform")
+    with pytest.raises(ValueError, match="rate"):
+        ArrivalProcess(rate=0.0)
+    with pytest.raises(ValueError, match="burstiness"):
+        ArrivalProcess(kind="gamma", burstiness=-1.0)
+
+
+def test_lognormal_lengths_mean_and_caps():
+    """Sampled lengths target the configured mean (mu includes the
+    -sigma^2/2 correction) and never escape the [lo, hi] caps that
+    keep a request inside the serving cache."""
+    cls = TrafficClass("t", priority=0, mix=1.0,
+                       prompt_mean=8.0, prompt_sigma=0.6, prompt_lo=2,
+                       prompt_hi=64, out_mean=6.0, out_sigma=0.5,
+                       out_lo=2, out_hi=64)
+    rng = np.random.default_rng(11)
+    plens, olens = cls.sample_lengths(rng, 20_000)
+    assert np.mean(plens) == pytest.approx(8.0, rel=0.1)
+    assert np.mean(olens) == pytest.approx(6.0, rel=0.1)
+    # tight caps clip hard
+    tight = dataclasses.replace(cls, prompt_lo=4, prompt_hi=10,
+                                out_lo=2, out_hi=5)
+    plens, olens = tight.sample_lengths(rng, 5_000)
+    assert plens.min() >= 4 and plens.max() <= 10
+    assert olens.min() >= 2 and olens.max() <= 5
+
+
+# ------------------------------------------------ generation + freeze ----
+
+def _spec(**kw):
+    kw.setdefault("arrival", ArrivalProcess("gamma", rate=0.8,
+                                            burstiness=4.0))
+    return WorkloadSpec(**kw)
+
+
+def test_generate_trace_shape_and_mix():
+    trace = generate_trace(_spec(seed=0), 200)
+    assert len(trace.entries) == 200
+    assert [e.rid for e in trace.entries] == list(range(200))
+    # arrival-ordered integer steps
+    steps = [e.arrival_step for e in trace.entries]
+    assert steps == sorted(steps)
+    # every class present at this sample size, with its configured
+    # priority and lengths within its caps
+    by_name = {c.name: c for c in DEFAULT_CLASSES}
+    assert trace.classes_present() == sorted(by_name)
+    for e in trace.entries:
+        c = by_name[e.cls]
+        assert e.priority == c.priority
+        assert c.prompt_lo <= len(e.tokens) <= c.prompt_hi
+        assert c.out_lo <= e.max_new <= c.out_hi
+        assert all(0 <= t < 256 for t in e.tokens)
+
+
+def test_generate_trace_is_deterministic():
+    a = generate_trace(_spec(seed=5), 50)
+    b = generate_trace(_spec(seed=5), 50)
+    assert a.entries == b.entries
+    c = generate_trace(_spec(seed=6), 50)
+    assert c.entries != a.entries
+
+
+def test_trace_round_trip(tmp_path):
+    """generate -> save -> load reproduces the spec and every entry
+    exactly (the freeze format is the replayable CI contract)."""
+    trace = generate_trace(_spec(seed=9), 40)
+    path = tmp_path / "t.jsonl"
+    trace.save(str(path))
+    loaded = load_trace(str(path))
+    assert loaded.spec == trace.spec
+    assert loaded.entries == trace.entries
+    # and a regeneration from the thawed spec matches the file
+    regen = generate_trace(loaded.spec, len(loaded.entries))
+    assert regen.entries == loaded.entries
+
+
+def test_load_trace_rejects_bad_files(tmp_path):
+    trace = generate_trace(_spec(seed=1), 5)
+    good = tmp_path / "good.jsonl"
+    trace.save(str(good))
+    lines = good.read_text().splitlines()
+
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    with pytest.raises(ValueError, match="empty"):
+        load_trace(str(empty))
+
+    notrace = tmp_path / "notrace.jsonl"
+    notrace.write_text(json.dumps({"kind": "other"}) + "\n")
+    with pytest.raises(ValueError, match="not a workload trace"):
+        load_trace(str(notrace))
+
+    futur = tmp_path / "future.jsonl"
+    hdr = json.loads(lines[0])
+    hdr["schema_version"] = TRACE_SCHEMA_VERSION + 1
+    futur.write_text("\n".join([json.dumps(hdr)] + lines[1:]) + "\n")
+    with pytest.raises(ValueError, match="schema version"):
+        load_trace(str(futur))
+
+    trunc = tmp_path / "trunc.jsonl"
+    trunc.write_text("\n".join(lines[:-1]) + "\n")
+    with pytest.raises(ValueError, match="truncated"):
+        load_trace(str(trunc))
+
+
+def test_generate_trace_validation():
+    with pytest.raises(ValueError, match="n_requests"):
+        generate_trace(_spec(), 0)
+    with pytest.raises(ValueError, match="classes"):
+        generate_trace(WorkloadSpec(classes=()), 4)
+    bad_mix = (dataclasses.replace(DEFAULT_CLASSES[0], mix=0.0),)
+    with pytest.raises(ValueError, match="mix"):
+        generate_trace(WorkloadSpec(classes=bad_mix), 4)
+
+
+def test_committed_trace_matches_its_embedded_spec():
+    """The committed CI trace must regenerate byte-identically from the
+    spec frozen in its own header (pytest twin of the workload-smoke
+    assertion, so a drifted generator fails fast here too)."""
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "benchmarks", "traces",
+                        "bursty_smoke.jsonl")
+    committed = load_trace(path)
+    regen = generate_trace(committed.spec, len(committed.entries))
+    assert regen.entries == committed.entries
